@@ -1,0 +1,11 @@
+"""Benchmark suite: paper-figure replications (Fig. 3/4/5), roofline
+analysis over dry-run artifacts, and host microbenchmarks."""
+
+import os
+import sys
+
+# allow ``python -m benchmarks.run`` from the repo root without install
+_src = os.path.join(os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+                    "src")
+if _src not in sys.path:
+    sys.path.insert(0, _src)

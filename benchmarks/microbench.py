@@ -1,0 +1,95 @@
+"""Microbenchmarks: control-plane + kernel-path costs on this host.
+
+Emitted in the harness CSV contract (name,us_per_call,derived).  Kernel
+numbers are interpret-mode (CPU) — correctness-path costs, NOT TPU perf;
+TPU performance is modeled by the roofline analysis instead.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(fn, n=50, warmup=3) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) * 1e6 / n
+
+
+def run(quiet: bool = False) -> List[Dict]:
+    rows = []
+
+    # bandit decision latency (cloud control plane)
+    from repro.core.bandit import BanditState, arm_costs, select_arm
+    st = BanditState.create(10)
+    costs = arm_costs(10, 10.0, 50.0)
+    rng = np.random.default_rng(0)
+    for i in range(10):
+        st.update(i, 0.5, costs[i])
+    rows.append(dict(name="bandit_select_arm",
+                     us_per_call=_time(lambda: select_arm(st, 1e4, costs,
+                                                          "ol4el", rng)),
+                     derived="decisions/s"))
+
+    # weighted average aggregation (1M params, 4 edges)
+    from repro.federated import weighted_average
+    trees = [{"w": jnp.ones((1024, 256))} for _ in range(4)]
+    agg = jax.jit(lambda ts: weighted_average(ts, [1.0] * 4))
+    agg(trees)[0].block_until_ready() if isinstance(agg(trees), tuple) else None
+    rows.append(dict(name="aggregate_1M_params_4edges",
+                     us_per_call=_time(
+                         lambda: jax.block_until_ready(agg(trees)), n=20),
+                     derived="params_avg"))
+
+    # XLA blocked attention step (the dry-run fallback path), small shape
+    from repro.models import layers as L
+    from repro.config import ModelConfig
+    cfg = ModelConfig(d_model=256, n_heads=4, n_kv_heads=4, dtype="float32")
+    p = L.init_attention(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (1, 512, 256))
+    pos = jnp.arange(512)
+    att = jax.jit(lambda x: L.attention(p, cfg, x, pos, impl="blocked"))
+    jax.block_until_ready(att(x))
+    rows.append(dict(name="xla_blocked_attention_b1_s512_d256",
+                     us_per_call=_time(lambda: jax.block_until_ready(att(x)),
+                                       n=10),
+                     derived="fwd"))
+
+    # K-means E-step: Pallas interpret vs jnp ref (correctness path cost)
+    from repro.kernels.kmeans_assign.ops import assign_with_dist
+    from repro.kernels.kmeans_assign.ref import assign_ref
+    xk = jax.random.normal(jax.random.key(2), (4096, 64))
+    ck = jax.random.normal(jax.random.key(3), (3, 64))
+    ref_j = jax.jit(lambda x, c: assign_ref(x, c))
+    jax.block_until_ready(ref_j(xk, ck))
+    rows.append(dict(name="kmeans_assign_ref_n4096_d64_k3",
+                     us_per_call=_time(
+                         lambda: jax.block_until_ready(ref_j(xk, ck)), n=20),
+                     derived="Estep"))
+
+    # simulator round throughput (SVM, 3 edges)
+    from benchmarks.common import run_el
+    t0 = time.perf_counter()
+    r = run_el("svm", "ol4el", "async", 6.0, budget=1500.0, n_data=2000)
+    dt = (time.perf_counter() - t0) * 1e6
+    rows.append(dict(name="el_sim_svm_async_per_aggregation",
+                     us_per_call=dt / max(r.n_aggregations, 1),
+                     derived=f"acc={r.final_metric:.3f}"))
+
+    if not quiet:
+        for row in rows:
+            print(f"micro {row['name']:40s} {row['us_per_call']:12.1f} us  "
+                  f"{row['derived']}", flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

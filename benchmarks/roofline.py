@@ -1,0 +1,188 @@
+"""Roofline analysis from dry-run artifacts (deliverable g).
+
+Reads the JSONL rows produced by ``repro.launch.dryrun`` and derives, per
+(arch x shape x mesh):
+
+    compute term    = HLO_FLOPs  / (chips * 197e12  bf16 FLOP/s)
+    memory term     = HLO_bytes  / (chips * 819e9   HBM B/s)
+    collective term = coll_bytes / (chips * 50e9    ICI B/s per link)
+
+``cost_analysis`` on the SPMD-partitioned module reports *per-device*
+flops/bytes, so terms divide by per-chip peaks directly (equivalent to the
+global/(chips*peak) formulation).  MODEL_FLOPS uses 6*N_active*tokens for
+training, 2*N_active*tokens for forward-only steps; the ratio
+MODEL_FLOPS / HLO_FLOPs exposes remat/recompute/dispatch waste.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Any, Dict, Iterable, List, Optional
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+
+SUGGESTIONS = {
+    "compute": ("increase arithmetic efficiency: larger per-chip batch, "
+                "reduce remat recompute, or shrink the useful-FLOPs gap"),
+    "memory": ("cut HBM traffic: fuse elementwise chains, keep weights "
+               "resident (bigger blocks), or drop precision of cached "
+               "tensors"),
+    "collective": ("cut collective volume: shard params over more axes "
+                   "(fewer all-gathers), aggregate less often (larger OL4EL "
+                   "interval), or overlap collectives with compute"),
+}
+
+
+def load_records(paths: Iterable[str]) -> List[Dict[str, Any]]:
+    rows = []
+    for path in paths:
+        if not os.path.exists(path):
+            continue
+        with open(path) as f:
+            for line in f:
+                try:
+                    rows.append(json.loads(line))
+                except json.JSONDecodeError:
+                    pass
+    return rows
+
+
+def model_flops(rec: Dict[str, Any]) -> float:
+    n_active = rec.get("active_params", 0)
+    shape = rec["shape"]
+    from repro.config import INPUT_SHAPES
+    s = INPUT_SHAPES[shape]
+    if s.kind == "train":
+        tokens = s.global_batch * s.seq_len
+        mult = 6.0
+        if rec.get("step") == "el_round":
+            tokens *= rec.get("h_max", 1)
+    elif s.kind == "prefill":
+        tokens = s.global_batch * s.seq_len
+        mult = 2.0
+    else:  # decode: one token per sequence
+        tokens = s.global_batch
+        mult = 2.0
+    return mult * n_active * tokens
+
+
+def _extract(rec: Dict[str, Any]):
+    cost = rec.get("cost", {})
+    return (cost.get("flops", 0.0), cost.get("bytes accessed", 0.0),
+            rec.get("collectives", {}).get("bytes_per_device", 0.0))
+
+
+def calibration_index(records: List[Dict[str, Any]]) -> Dict:
+    """(arch, shape, mesh, step) -> scan-corrected (flops, bytes, coll).
+
+    XLA HloCostAnalysis counts lax.scan bodies once, so scanned-layer
+    lowerings under-report; the 2-point unrolled depth calibration gives
+    ``total = c1 + (n_groups - 1) * (c2 - c1)`` exactly.
+    """
+    pairs: Dict = {}
+    for rec in records:
+        tag = rec.get("tag", "")
+        if not rec.get("ok") or "calib" not in tag:
+            continue
+        base, _, cal = tag.rpartition("calib")
+        base = base.rstrip("|")
+        key = (rec["arch"], rec["shape"], rec["mesh"], rec.get("step"),
+               base)
+        pairs.setdefault(key, {})["calib" + cal] = rec
+    out = {}
+    for key, d in pairs.items():
+        if "calib1" not in d or "calib2" not in d:
+            continue
+        c1 = _extract(d["calib1"])
+        c2 = _extract(d["calib2"])
+        n = d["calib1"].get("n_groups_full") or 1
+        out[key] = tuple(a + (n - 1) * (b - a) for a, b in zip(c1, c2))
+    return out
+
+
+def analyze(rec: Dict[str, Any],
+            calib: Optional[Dict] = None) -> Optional[Dict[str, Any]]:
+    if not rec.get("ok") or "calib" in rec.get("tag", ""):
+        return None
+    flops_dev, bytes_dev, coll_dev = _extract(rec)
+    calibrated = False
+    if calib:
+        key = (rec["arch"], rec["shape"], rec["mesh"], rec.get("step"),
+               rec.get("tag", ""))
+        if key in calib:
+            flops_dev, bytes_dev, coll_dev = calib[key]
+            calibrated = True
+    coll = rec.get("collectives", {})
+    chips = rec.get("n_chips", 256)
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec)
+    hlo_flops_global = flops_dev * chips
+    useful = mf / hlo_flops_global if hlo_flops_global else float("nan")
+    bound = max(terms.values())
+    step_time = sum(terms.values())       # upper bound (no overlap)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "step": rec.get("step"), "tag": rec.get("tag", ""),
+        "calibrated": calibrated,
+        "chips": chips,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "bound_s": bound,
+        "model_flops": mf,
+        "hlo_flops_global": hlo_flops_global,
+        "useful_flops_ratio": useful,
+        "suggestion": SUGGESTIONS[dominant],
+        "collectives": coll.get("per_op", {}),
+        "memory_bytes_per_dev": rec.get("memory", {}),
+    }
+
+
+def markdown_table(rows: List[Dict[str, Any]]) -> str:
+    hdr = ("| arch | shape | mesh | step | compute s | memory s | "
+           "collective s | dominant | useful FLOPs |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['step']} | "
+            f"{r['t_compute_s']:.3e} | {r['t_memory_s']:.3e} | "
+            f"{r['t_collective_s']:.3e} | **{r['dominant']}** | "
+            f"{r['useful_flops_ratio']:.2f} |")
+    return hdr + "\n".join(lines) + "\n"
+
+
+def run(paths: Optional[List[str]] = None, quiet: bool = False
+        ) -> List[Dict[str, Any]]:
+    paths = paths or sorted(glob.glob("results/dryrun*.jsonl")
+                            + glob.glob("results/calib*.jsonl"))
+    records = load_records(paths)
+    calib = calibration_index(records)
+    rows = []
+    for rec in records:
+        a = analyze(rec, calib)
+        if a:
+            rows.append(a)
+    if not quiet:
+        for r in rows:
+            print(f"roofline {r['arch']:22s} {r['shape']:12s} {r['mesh']:8s} "
+                  f"{r['step']:12s} dom={r['dominant']:10s} "
+                  f"bound={r['bound_s']:.3e}s useful={r['useful_flops_ratio']:.2f}",
+                  flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    rows = run(sys.argv[1:] or None)
+    print(markdown_table(rows))

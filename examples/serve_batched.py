@@ -1,0 +1,23 @@
+"""Serving example: batched request decoding with KV/SSM caches across
+three architecture families (dense GQA, pure SSM, hybrid MoE).
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch import serve
+
+
+def main():
+    for arch in ["qwen3-1.7b", "mamba2-370m", "jamba-1.5-large-398b"]:
+        print(f"\n=== {arch} (smoke variant) ===")
+        serve.main(["--arch", arch, "--smoke", "--batch", "4",
+                    "--prompt-len", "32", "--tokens", "16"])
+
+
+if __name__ == "__main__":
+    main()

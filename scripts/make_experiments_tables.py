@@ -1,0 +1,93 @@
+"""Generate the EXPERIMENTS.md data tables from results/*.json(l).
+
+Usage: PYTHONPATH=src:. python scripts/make_experiments_tables.py
+Writes markdown fragments to results/tables/*.md which EXPERIMENTS.md
+references (and inlines at finalization).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+from collections import OrderedDict
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks import roofline
+
+
+def dedupe(rows):
+    seen = OrderedDict()
+    for r in rows:
+        key = (r["arch"], r["shape"], r["mesh"], r.get("step"),
+               r.get("tag", ""))
+        seen[key] = r          # last write wins
+    return list(seen.values())
+
+
+def fmt_bytes(b):
+    return f"{b / 2**30:.2f}"
+
+
+def dryrun_table(rows) -> str:
+    hdr = ("| arch | shape | mesh | step | args GiB/dev | temps GiB/dev | "
+           "flops/dev | coll MB/dev | compile s |\n" + "|---|" * 9 + "\n")
+    lines = []
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if not r.get("ok"):
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"{r.get('step')} | FAIL: {r.get('error')} | | | | |")
+            continue
+        mem = r.get("memory", {})
+        cost = r.get("cost", {})
+        coll = r.get("collectives", {}).get("bytes_per_device", 0)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['step']} | "
+            f"{fmt_bytes(mem.get('argument_size_in_bytes', 0))} | "
+            f"{fmt_bytes(mem.get('temp_size_in_bytes', 0))} | "
+            f"{cost.get('flops', 0):.3e} | {coll / 2**20:.1f} | "
+            f"{r.get('compile_s', 0):.0f} |")
+    return hdr + "\n".join(lines) + "\n"
+
+
+def main():
+    os.makedirs("results/tables", exist_ok=True)
+    all_rows = []
+    for f in ("results/dryrun.jsonl", "results/dryrun_mp.jsonl",
+              "results/calib.jsonl", "results/calib_mp.jsonl",
+              "results/dryrun_el.jsonl", "results/dryrun_opt.jsonl"):
+        all_rows += roofline.load_records([f])
+    rows = dedupe(all_rows)
+    calib = roofline.calibration_index(rows)
+    main = [r for r in rows if not r.get("tag", "").startswith("calib")]
+    ok = [r for r in main if r.get("ok")]
+    print(f"{len(main)} unique main combos ({len(calib)} calibrated), "
+          f"{len(main) - len(ok)} failures")
+
+    with open("results/tables/dryrun.md", "w") as f:
+        f.write(dryrun_table(main))
+
+    roof = []
+    for r in ok:
+        a = roofline.analyze(r, calib)
+        if a:
+            roof.append(a)
+    roof.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"], r["step"]))
+    with open("results/tables/roofline.md", "w") as f:
+        f.write(roofline.markdown_table(roof))
+    with open("results/tables/roofline.json", "w") as f:
+        json.dump(roof, f, indent=1, default=str)
+
+    # dominant-term summary
+    from collections import Counter
+    doms = Counter((r["shape"], r["dominant"]) for r in roof
+                   if r["mesh"] == "16x16" and r["step"] != "el_round")
+    print("dominant terms (16x16 baseline):")
+    for (shape, dom), n in sorted(doms.items()):
+        print(f"  {shape:12s} {dom:10s} x{n}")
+
+
+if __name__ == "__main__":
+    main()

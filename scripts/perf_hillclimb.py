@@ -1,0 +1,84 @@
+"""§Perf hillclimb driver: lower optimization variants for the three
+chosen pairs and emit before/after roofline terms.
+
+Each variant is a (flags, tag) combination run through repro.launch.dryrun
+in a SUBPROCESS (each needs its own 512-device jax process).  Results
+append to results/dryrun_opt.jsonl with distinct tags; calibration twins
+(tagged calib1/calib2 within the same file+tag) let roofline.py correct
+scan undercounting per variant.
+
+Usage: python scripts/perf_hillclimb.py [--pair N]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# (arch, shape, extra dryrun args, tag)
+VARIANTS = [
+    # -- pair 1: qwen3-1.7b x train_4k ------------------------------------
+    # paper-faithful EL round (the technique itself), interval ~4
+    ("qwen3-1.7b", "train_4k", ["--step", "el_round", "--h-max", "4"],
+     "el_round_h4"),
+    # larger interval: fewer aggregations per round
+    ("qwen3-1.7b", "train_4k", ["--step", "el_round", "--h-max", "8"],
+     "el_round_h8"),
+    # beyond-paper: sharded cross-entropy (no logits all-gather)
+    ("qwen3-1.7b", "train_4k", ["--fused-xent"], "fused_xent"),
+    # beyond-paper: no activation checkpointing (flops down, memory up)
+    ("qwen3-1.7b", "train_4k", ["--no-remat"], "no_remat"),
+    # combined
+    ("qwen3-1.7b", "train_4k", ["--fused-xent", "--no-remat"],
+     "fused_xent_no_remat"),
+    # -- pair 2: deepseek-moe-16b x prefill_32k ---------------------------
+    # beyond-paper: sort-based MoE dispatch (O(Tk) vs O(TkE) bookkeeping)
+    ("deepseek-moe-16b", "prefill_32k", ["--moe-sort-dispatch"],
+     "moe_sort"),
+    # beyond-paper: serving prefill emits last-position logits only
+    ("deepseek-moe-16b", "prefill_32k", ["--prefill-last-only"],
+     "prefill_last"),
+    ("deepseek-moe-16b", "prefill_32k",
+     ["--moe-sort-dispatch", "--prefill-last-only"], "moe_sort_last"),
+    # -- pair 3: qwen2.5-14b x long_500k ----------------------------------
+    # beyond-paper: windowed KV slice decode (O(window) cache reads)
+    ("qwen2.5-14b", "long_500k", ["--window-slice"], "window_slice"),
+]
+
+
+def run_variant(arch, shape, args, tag, calibrate=True):
+    out = os.path.join(REPO, "results", "dryrun_opt.jsonl")
+    base = [sys.executable, "-m", "repro.launch.dryrun",
+            "--arch", arch, "--shape", shape, "--mesh", "pod",
+            "--out", out, "--skip-existing"]
+    if tag:
+        base += ["--tag", tag]
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    cmds = [base + args]
+    if calibrate and "--step" not in args:
+        cmds.append(base + args + ["--calibrate"])
+    for cmd in cmds:
+        print(">>", " ".join(cmd[3:]), flush=True)
+        r = subprocess.run(cmd, env=env, cwd=REPO)
+        if r.returncode:
+            print(f"!! variant failed: {tag}", flush=True)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", type=int, default=None,
+                    help="run a single variant index")
+    args = ap.parse_args()
+    for i, (arch, shape, extra, tag) in enumerate(VARIANTS):
+        if args.only is not None and i != args.only:
+            continue
+        run_variant(arch, shape, extra, tag)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,6 @@
+"""Per-architecture configuration files (one per assigned arch).
+
+Each module exposes ``get_config()`` (exact assigned dimensions) and
+``get_smoke_config()`` (reduced same-family variant: <=2 layers,
+d_model<=512, <=4 experts) per the assignment contract.
+"""

@@ -1,0 +1,14 @@
+"""The paper's primary contribution: OL4EL — budget-limited-MAB scheduling
+of edge-cloud collaborative learning (bandits, utilities, coordinator,
+strategy zoo)."""
+
+from repro.core.bandit import BanditState, arm_costs, select_arm
+from repro.core.coordinator import CloudCoordinator, edge_speed_factors
+from repro.core.strategies import ACSync, POLICIES
+from repro.core.utility import UtilityEstimator, param_l2_delta
+
+__all__ = [
+    "BanditState", "arm_costs", "select_arm", "CloudCoordinator",
+    "edge_speed_factors", "ACSync", "POLICIES", "UtilityEstimator",
+    "param_l2_delta",
+]

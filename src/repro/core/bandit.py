@@ -1,0 +1,237 @@
+"""Budget-limited multi-armed bandits — the paper's §IV core.
+
+Arms are *global update intervals* I in {1..K}.  Pulling arm I costs
+``I * c_comp + c_comm`` resource units and yields the learning utility
+observed at the next global aggregation.  The bandit must maximize average
+utility before the per-edge budget runs out.
+
+Policies:
+
+  * ``ol4el``     — the paper's 3-step fixed-cost procedure (§IV.B.1),
+                    built on KUBE [Tran-Thanh et al., AAAI'12]:
+                    (1) *utility-cost ordering*: UCB of utility per cost,
+                    (2) *frequency calculation*: f_i = floor(B_res / c_i),
+                    (3) *probabilistic selection*: P(i) ∝ density_i · f_i
+                    over feasible arms.
+                    Interpretation note (recorded in DESIGN.md): the paper's
+                    text says "probability proportional to the frequency";
+                    taken literally utility would never influence selection,
+                    so we couple the step-1 ordering quantity (UCB density)
+                    with the step-2 frequency — the literal variant is
+                    available as ``freq_only`` and compared in benchmarks.
+  * ``ucb_bv``    — variable-cost UCB-BV1 [Ding et al., AAAI'13] (§IV.B.2):
+                    D_i = ū_i/c̄_i + (1+1/λ)·ε_i / (λ − ε_i),
+                    ε_i = sqrt(ln(t−1)/n_i), λ = lower bound on E[cost].
+  * ``greedy``    — argmax UCB density (the pure fractional-KUBE solution).
+  * ``freq_only`` — the literal reading, P(i) ∝ f_i.
+  * ``eps_greedy``— ε-greedy on density (ablation).
+  * ``uniform``   — uniform over feasible arms (ablation).
+  * ``fixed_i``   — the paper's Fixed-I baseline (constant interval).
+
+State is kept in plain numpy (the bandit is the *cloud control plane*; the
+data plane — local iterations + aggregation collectives — is the JAX
+``el_round`` in ``repro.federated``).  All functions are vectorizable over
+a leading edge dimension for the async mode (one bandit per edge).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class BanditState:
+    """Sufficient statistics for one bandit over K arms."""
+
+    counts: np.ndarray        # [K] pulls
+    utility_sum: np.ndarray   # [K]
+    cost_sum: np.ndarray      # [K] observed costs (variable-cost mode)
+    t: int                    # total pulls
+
+    @classmethod
+    def create(cls, n_arms: int) -> "BanditState":
+        return cls(np.zeros(n_arms, np.int64), np.zeros(n_arms),
+                   np.zeros(n_arms), 0)
+
+    def copy(self) -> "BanditState":
+        return BanditState(self.counts.copy(), self.utility_sum.copy(),
+                           self.cost_sum.copy(), self.t)
+
+    @property
+    def n_arms(self) -> int:
+        return len(self.counts)
+
+    def mean_utility(self) -> np.ndarray:
+        return self.utility_sum / np.maximum(self.counts, 1)
+
+    def mean_cost(self, fallback: Optional[np.ndarray] = None) -> np.ndarray:
+        m = self.cost_sum / np.maximum(self.counts, 1)
+        if fallback is not None:
+            m = np.where(self.counts > 0, m, fallback)
+        return m
+
+    def update(self, arm: int, utility: float, cost: float) -> None:
+        self.counts[arm] += 1
+        self.utility_sum[arm] += utility
+        self.cost_sum[arm] += cost
+        self.t += 1
+
+
+def arm_costs(n_arms: int, comp_cost: float, comm_cost: float) -> np.ndarray:
+    """Expected cost of interval-arm I (1-based): I*comp + comm."""
+    intervals = np.arange(1, n_arms + 1, dtype=np.float64)
+    return intervals * comp_cost + comm_cost
+
+
+def _ucb(state: BanditState, ucb_c: float) -> np.ndarray:
+    """Upper confidence bound of mean utility (unplayed arms -> +inf)."""
+    n = np.maximum(state.counts, 1)
+    bonus = np.sqrt(ucb_c * np.log(max(state.t, 2)) / n)
+    ucb = state.mean_utility() + bonus
+    return np.where(state.counts > 0, ucb, np.inf)
+
+
+def select_arm(state: BanditState, residual_budget: float,
+               costs: np.ndarray, policy: str = "ol4el",
+               rng: Optional[np.random.Generator] = None,
+               ucb_c: float = 2.0, eps: float = 0.1,
+               fixed_arm: int = 3) -> int:
+    """Choose an arm. Returns -1 when no arm is affordable (terminate)."""
+    rng = rng or np.random.default_rng(0)
+    feasible = costs <= residual_budget + 1e-12
+    if not feasible.any():
+        return -1
+
+    # Initialization phase: try every feasible arm once (paper §IV.B).
+    untried = feasible & (state.counts == 0)
+    if policy in ("ol4el", "ucb_bv", "greedy", "eps_greedy", "freq_only") \
+            and untried.any():
+        return int(np.argmax(untried))
+
+    if policy == "fixed_i":
+        arm = min(fixed_arm, state.n_arms - 1)
+        return arm if feasible[arm] else int(np.argmax(feasible))
+    if policy == "uniform":
+        return int(rng.choice(np.flatnonzero(feasible)))
+
+    if policy == "ucb_bv":
+        # UCB-BV1 (variable costs): exploration bonus on utility AND cost.
+        n = np.maximum(state.counts, 1)
+        eps_i = np.sqrt(np.log(max(state.t - 1, 2)) / n)
+        mean_c = state.mean_cost(fallback=costs)
+        lam = max(float(np.min(mean_c)), 1e-6)
+        denom = lam - eps_i
+        density = state.mean_utility() / np.maximum(mean_c, 1e-9)
+        d = np.where(denom > 1e-9,
+                     density + (1.0 + 1.0 / lam) * eps_i / np.maximum(denom,
+                                                                      1e-9),
+                     np.inf)
+        d = np.where(feasible, d, -np.inf)
+        return int(np.argmax(d))
+
+    ucb = _ucb(state, ucb_c)
+    density = np.where(feasible, ucb / np.maximum(costs, 1e-9), -np.inf)
+
+    if policy == "greedy":
+        return int(np.argmax(density))
+    if policy == "eps_greedy":
+        if rng.random() < eps:
+            return int(rng.choice(np.flatnonzero(feasible)))
+        return int(np.argmax(density))
+
+    # --- the paper's 3-step procedure -----------------------------------
+    freq = np.where(feasible, np.floor(residual_budget / costs), 0.0)
+    if policy == "freq_only":                    # literal reading
+        w = freq
+    else:                                        # "ol4el": density x freq
+        d = np.where(np.isfinite(density), density, np.nanmax(
+            np.where(np.isfinite(density), density, -np.inf)) + 1.0)
+        d = d - d.min() + 1e-9                   # shift to positive
+        w = d * freq
+    w = np.where(feasible, np.maximum(w, 0.0), 0.0)
+    if w.sum() <= 0:
+        return int(rng.choice(np.flatnonzero(feasible)))
+    p = w / w.sum()
+    return int(rng.choice(len(costs), p=p))
+
+
+# ---------------------------------------------------------------------------
+# In-graph (jittable) bandit — beyond-paper: lets the WHOLE OL4EL round,
+# including arm selection, live inside one pjit program (no host round-trip
+# between rounds).  Same math as select_arm(policy="ol4el"); state is a
+# dict of arrays so it vmaps over edges for the async mode.
+# ---------------------------------------------------------------------------
+
+
+def jax_bandit_init(n_arms: int):
+    import jax.numpy as jnp
+    return {
+        "counts": jnp.zeros((n_arms,), jnp.int32),
+        "utility_sum": jnp.zeros((n_arms,), jnp.float32),
+        "cost_sum": jnp.zeros((n_arms,), jnp.float32),
+        "t": jnp.zeros((), jnp.int32),
+    }
+
+
+def jax_selection_weights(state, residual_budget, costs, ucb_c: float = 2.0):
+    """OL4EL 3-step selection weights (density x frequency), jnp version.
+
+    Unplayed feasible arms get all the mass (initialization phase).
+    Returns [K] nonnegative weights; all-zero means no arm affordable.
+    """
+    import jax.numpy as jnp
+    counts = state["counts"]
+    feasible = costs <= residual_budget + 1e-12
+    untried = feasible & (counts == 0)
+    n = jnp.maximum(counts, 1)
+    t = jnp.maximum(state["t"], 2).astype(jnp.float32)
+    mean_u = state["utility_sum"] / n
+    bonus = jnp.sqrt(ucb_c * jnp.log(t) / n)
+    ucb = mean_u + bonus
+    density = ucb / jnp.maximum(costs, 1e-9)
+    d = density - jnp.min(jnp.where(feasible, density, jnp.inf)) + 1e-9
+    freq = jnp.where(feasible, jnp.floor(residual_budget / costs), 0.0)
+    w = jnp.where(feasible, jnp.maximum(d * freq, 1e-12), 0.0)
+    # initialization phase: uniform over untried feasible arms
+    w = jnp.where(jnp.any(untried), untried.astype(jnp.float32), w)
+    return w
+
+
+def jax_select_arm(rng, state, residual_budget, costs, ucb_c: float = 2.0):
+    """Sample an arm in-graph. Returns -1 when nothing is affordable."""
+    import jax.numpy as jnp
+    from jax import random
+    w = jax_selection_weights(state, residual_budget, costs, ucb_c)
+    total = jnp.sum(w)
+    logits = jnp.where(w > 0, jnp.log(jnp.maximum(w, 1e-30)), -jnp.inf)
+    arm = random.categorical(rng, logits)
+    return jnp.where(total > 0, arm, -1)
+
+
+def jax_bandit_update(state, arm, utility, cost):
+    import jax.numpy as jnp
+    valid = arm >= 0
+    arm_c = jnp.maximum(arm, 0)
+    return {
+        "counts": state["counts"].at[arm_c].add(
+            jnp.where(valid, 1, 0)),
+        "utility_sum": state["utility_sum"].at[arm_c].add(
+            jnp.where(valid, utility, 0.0)),
+        "cost_sum": state["cost_sum"].at[arm_c].add(
+            jnp.where(valid, cost, 0.0)),
+        "t": state["t"] + jnp.where(valid, 1, 0),
+    }
+
+
+def regret_oracle(mean_utility: np.ndarray, costs: np.ndarray,
+                  budget: float) -> float:
+    """Best fixed-arm average-utility benchmark: play the best
+    utility-per-cost arm until the budget runs out (the budget-limited MAB
+    oracle for i.i.d. rewards)."""
+    density = mean_utility / costs
+    best = int(np.argmax(density))
+    pulls = int(budget // costs[best])
+    return pulls * float(mean_utility[best])

@@ -1,0 +1,48 @@
+"""Learning-utility estimators (§III.A).
+
+The paper defines utility either (a) via a model-specific metric on a small
+test set uploaded to the cloud, or (b) via the difference between global
+parameters at consecutive slots — smaller difference = higher utility
+(their K-means example uses the negative center shift).
+
+All estimators map onto a common interface:
+    ``utility(prev_snapshot, new_snapshot) -> float``
+where snapshots carry whatever the estimator needs (params and/or metric).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import numpy as np
+
+
+def param_l2_delta(prev_params: Any, new_params: Any) -> float:
+    """Global L2 distance between parameter pytrees."""
+    import jax
+    total = 0.0
+    for a, b in zip(jax.tree.leaves(prev_params), jax.tree.leaves(new_params)):
+        d = np.asarray(a, np.float32) - np.asarray(b, np.float32)
+        total += float(np.sum(d * d))
+    return float(np.sqrt(total))
+
+
+@dataclasses.dataclass
+class UtilityEstimator:
+    """kind: 'param_delta' | 'eval_gain' | 'loss_delta'."""
+
+    kind: str = "param_delta"
+    scale: float = 1.0
+
+    def __call__(self, prev: Dict[str, Any], new: Dict[str, Any]) -> float:
+        if self.kind == "param_delta":
+            # smaller parameter movement => closer to convergence => higher
+            # utility (paper §III.A): u = 1 / (1 + ||Δθ||)
+            delta = param_l2_delta(prev["params"], new["params"])
+            return self.scale / (1.0 + delta)
+        if self.kind == "eval_gain":
+            return self.scale * (new["metric"] - prev["metric"])
+        if self.kind == "loss_delta":
+            return self.scale * (prev["loss"] - new["loss"])
+        raise ValueError(f"unknown utility kind {self.kind!r}")

@@ -1,0 +1,6 @@
+from repro.data.pipeline import SyntheticLMData, lm_batch
+from repro.data.classic_data import (make_traffic_dataset, make_wafer_dataset,
+                                     partition_edges)
+
+__all__ = ["SyntheticLMData", "lm_batch", "make_wafer_dataset",
+           "make_traffic_dataset", "partition_edges"]

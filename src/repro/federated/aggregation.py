@@ -1,0 +1,43 @@
+"""Model aggregation primitives (cloud-side global updates)."""
+
+from __future__ import annotations
+
+from typing import Any, List, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Any
+
+
+def weighted_average(params_list: Sequence[Params],
+                     weights: Sequence[float]) -> Params:
+    """Synchronous global update: weighted average of edge models."""
+    w = np.asarray(weights, np.float64)
+    w = w / w.sum()
+
+    def avg(*leaves):
+        acc = sum(wi * leaf.astype(jnp.float32)
+                  for wi, leaf in zip(w, leaves))
+        return acc.astype(leaves[0].dtype)
+
+    return jax.tree.map(avg, *params_list)
+
+
+def staleness_mix(global_params: Params, edge_params: Params,
+                  alpha: float) -> Params:
+    """Asynchronous global update: G <- (1-a) G + a theta_e, with a the
+    staleness-discounted mixing rate."""
+    a = float(alpha)
+
+    def mix(g, e):
+        out = (1.0 - a) * g.astype(jnp.float32) + a * e.astype(jnp.float32)
+        return out.astype(g.dtype)
+
+    return jax.tree.map(mix, global_params, edge_params)
+
+
+def staleness_alpha(base: float, staleness: float) -> float:
+    """Polynomial staleness discount  a = base / (1 + s)."""
+    return base / (1.0 + max(staleness, 0.0))

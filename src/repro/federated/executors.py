@@ -1,0 +1,116 @@
+"""Executors: the ML data-plane the simulator drives.
+
+``ClassicExecutor`` — SVM / K-means local training on per-edge (non-IID)
+datasets, jitted per interval length via lax.scan over stacked minibatches.
+
+``LMExecutor`` — small language models through the same interface (params
+only; per-edge optimizer moments are ephemeral within a local block, the
+standard local-SGD simplification).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig, TrainConfig
+from repro.data.classic_data import minibatches
+from repro.data.pipeline import SyntheticLMData
+from repro.train.optimizer import init_opt_state
+from repro.train.state import TrainState, make_train_step
+
+Params = Any
+
+
+class ClassicExecutor:
+    """SVM / K-means on per-edge datasets."""
+
+    def __init__(self, model, edge_data: List[Dict[str, np.ndarray]],
+                 eval_set: Dict[str, np.ndarray], batch: int = 64,
+                 lr: float = 0.05):
+        self.model = model
+        self.edge_data = edge_data
+        self.eval_set = {k: jnp.asarray(v) for k, v in eval_set.items()}
+        self.batch = batch
+        self.lr = lr
+
+        def scan_steps(params: Params, xs: jax.Array, ys: jax.Array
+                       ) -> Params:
+            def body(p, xy):
+                x, y = xy
+                p, _ = self.model.local_step(p, {"x": x, "y": y}, self.lr)
+                return p, None
+            params, _ = jax.lax.scan(body, params, (xs, ys))
+            return params
+
+        self._scan_steps = jax.jit(scan_steps)
+
+    def sample_batches(self, edge: int, n_iters: int, seed: int
+                       ) -> Tuple[jax.Array, jax.Array]:
+        data = self.edge_data[edge]
+        rng = np.random.default_rng(seed)
+        idx = rng.integers(0, len(data["y"]), size=(n_iters, self.batch))
+        return jnp.asarray(data["x"][idx]), jnp.asarray(data["y"][idx])
+
+    def local_train(self, params: Params, edge: int, n_iters: int,
+                    seed: int) -> Tuple[Params, Dict]:
+        xs, ys = self.sample_batches(edge, n_iters, seed)
+        return self._scan_steps(params, xs, ys), {}
+
+    def evaluate(self, params: Params) -> Dict[str, float]:
+        return self.model.evaluate(params, self.eval_set)
+
+
+class LMExecutor:
+    """Small LMs under the same EL interface (loss-based metric)."""
+
+    def __init__(self, model, model_cfg: ModelConfig, train_cfg: TrainConfig,
+                 batch: int = 4, seq_len: int = 64, seed: int = 0):
+        self.model = model
+        self.train_cfg = train_cfg
+        self.data = SyntheticLMData.for_model(model_cfg, batch, seq_len,
+                                              seed=seed)
+        train_step = make_train_step(model, train_cfg)
+
+        def scan_steps(state: TrainState, edge: jax.Array, start: jax.Array,
+                       n_iters: jax.Array, h_max: int) -> TrainState:
+            def body(s, i):
+                b = self.data.batch(edge, start + i)
+                s2, _ = train_step(s, b)
+                s = jax.tree.map(
+                    lambda a, bb: jnp.where(i < n_iters, bb, a), s, s2)
+                return s, None
+            state, _ = jax.lax.scan(body, state, jnp.arange(h_max))
+            return state
+
+        self._scan = {}
+        self._scan_fn = scan_steps
+        self._step_counter = np.zeros(64, np.int64)
+        self._eval_batch = self.data.batch(999, 0)
+
+        def eval_loss(params):
+            _, m = model.loss(params, self._eval_batch)
+            return m["ce_loss"]
+
+        self._eval = jax.jit(eval_loss)
+
+    def local_train(self, params: Params, edge: int, n_iters: int,
+                    seed: int) -> Tuple[Params, Dict]:
+        h_max = int(n_iters)
+        if h_max not in self._scan:
+            self._scan[h_max] = jax.jit(
+                partial(self._scan_fn, h_max=h_max))
+        state = TrainState(params, init_opt_state(self.train_cfg, params))
+        start = int(self._step_counter[edge])
+        self._step_counter[edge] += h_max
+        state = self._scan[h_max](state, jnp.asarray(edge),
+                                  jnp.asarray(start), jnp.asarray(n_iters))
+        return state.params, {}
+
+    def evaluate(self, params: Params) -> Dict[str, float]:
+        loss = float(self._eval(params))
+        return {"loss": loss, "neg_loss": -loss}

@@ -1,0 +1,226 @@
+"""The OL4EL data plane on a TPU mesh: masked local-SGD rounds.
+
+TPU-native adaptation of the paper's protocol (DESIGN.md §2): every edge
+server is one slice of the (`pod`,`data`) mesh axes holding a full model
+replica sharded over `model`.  Model/optimizer state carries a leading
+edge dimension sharded over the edge axes, so
+
+  * a *local iteration* touches only `model`-axis collectives, and
+  * a *global aggregation* is a single parameter mean over the edge dim —
+    one all-reduce over (`pod`,`data`), exactly the collective the OL4EL
+    bandit meters.
+
+``el_round`` executes one coordination round for all edges at once:
+``lax.scan`` over ``h_max`` potential local steps with per-edge masking
+(edge *i* applies updates only while ``step < intervals[i]``), then a
+participation-weighted parameter aggregation.  The per-edge intervals come
+from the host-side CloudCoordinator between rounds (cloud = control plane,
+mesh = data plane).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig, TrainConfig
+from repro.sharding import edge_axes, param_specs
+from repro.train.optimizer import init_opt_state
+from repro.train.state import TrainState, make_train_step
+
+Params = Any
+
+
+class ELMeshState(NamedTuple):
+    """Per-edge replicated training state: every leaf has a leading edge
+    dim (sharded over the pod/data axes)."""
+    params: Params
+    opt: Any
+
+
+def init_el_state(model, train_cfg: TrainConfig, n_edges: int,
+                  rng: jax.Array) -> ELMeshState:
+    rngs = jax.random.split(rng, n_edges)
+
+    def one(r):
+        p = model.init(r)
+        return ELMeshState(p, init_opt_state(train_cfg, p))
+
+    return jax.vmap(one)(rngs)
+
+
+def make_el_round(model, train_cfg: TrainConfig, h_max: int,
+                  mode: str = "sync"):
+    """Build the jittable round function.
+
+    el_round(state, batches, intervals, weights) with
+      state:     ELMeshState, leading edge dim E on every leaf
+      batches:   pytree; tokens [E, h_max, B_e, S]
+      intervals: [E] int32 (1..h_max), from the cloud bandit
+      weights:   [E] f32 aggregation weights (sync: data sizes;
+                 async emulation: staleness discounts)
+    Returns (new_state, metrics).
+    """
+    train_step = make_train_step(model, train_cfg)
+
+    def per_edge(state_e: TrainState, batches_e, interval_e):
+        def body(carry, xs):
+            i, batch = xs
+            state = carry
+            new_state, metrics = train_step(state, batch)
+            take = i < interval_e
+            state = jax.tree.map(
+                lambda a, b: jnp.where(take, b, a), state, new_state)
+            return state, jnp.where(take, metrics["loss"], 0.0)
+
+        state_e, losses = lax.scan(
+            body, state_e, (jnp.arange(h_max), batches_e))
+        mean_loss = losses.sum() / jnp.maximum(interval_e, 1)
+        return state_e, mean_loss
+
+    def el_round(state: ELMeshState, batches, intervals: jax.Array,
+                 weights: jax.Array
+                 ) -> Tuple[ELMeshState, Dict[str, jax.Array]]:
+        edge_states = TrainState(state.params, state.opt)
+        new_states, losses = jax.vmap(per_edge)(edge_states, batches,
+                                                intervals)
+        w = (weights / jnp.sum(weights)).astype(jnp.float32)
+        # global update: one parameter all-reduce over the edge axes
+        agg = jax.tree.map(
+            lambda p: jnp.einsum("e...,e->...", p.astype(jnp.float32), w)
+            .astype(p.dtype),
+            new_states.params)
+        n_edges = intervals.shape[0]
+        if mode == "sync":
+            # every edge restarts from the fresh global model
+            new_params = jax.tree.map(
+                lambda a: jnp.repeat(a[None], n_edges, axis=0), agg)
+        else:
+            # async emulation: edges blend toward the global model with
+            # interval-dependent (staleness) rates
+            alpha = (1.0 / (1.0 + (intervals - 1).astype(jnp.float32)))
+
+            def blend(pe, g):
+                a = alpha.reshape((-1,) + (1,) * (pe.ndim - 1))
+                out = (pe.astype(jnp.float32) * (1.0 - a)
+                       + g.astype(jnp.float32)[None] * a)
+                return out.astype(pe.dtype)
+
+            new_params = jax.tree.map(blend, new_states.params, agg)
+        metrics = {
+            "mean_loss": jnp.sum(losses * w),
+            "mean_interval": jnp.mean(intervals.astype(jnp.float32)),
+        }
+        return ELMeshState(new_params, new_states.opt), metrics
+
+    return el_round
+
+
+def make_el_program(model, train_cfg: TrainConfig, n_edges: int,
+                    h_max: int, n_rounds: int, data_fn,
+                    comp_costs, comm_costs, mode: str = "async",
+                    ucb_c: float = 2.0):
+    """Beyond-paper: the ENTIRE OL4EL loop as one jittable program.
+
+    The paper (and our host coordinator) round-trips to the cloud between
+    rounds; on a TPU pod that host sync costs ~ms per round.  Here arm
+    selection (in-graph bandit), the masked local-SGD round, budget
+    accounting and bandit updates all live inside one ``lax.scan`` — the
+    whole collaboration compiles to a single pjit program.
+
+    data_fn(edge_ids [E], round_idx, step_idx [h_max]) -> batch pytree with
+    leading dims [E, h_max, ...]; must be jax-pure (the synthetic pipeline
+    is).  Returns ``program(el_state, bandit_states, budgets, rng)`` ->
+    (el_state, bandit_states, budgets, history).
+    """
+    from repro.core.bandit import jax_bandit_update, jax_select_arm
+
+    el_round = make_el_round(model, train_cfg, h_max, mode=mode)
+    comp = jnp.asarray(comp_costs, jnp.float32)        # [E]
+    comm = jnp.asarray(comm_costs, jnp.float32)        # [E]
+    arms_cost = (jnp.arange(1, h_max + 1, dtype=jnp.float32)[None, :]
+                 * comp[:, None] + comm[:, None])      # [E, K]
+
+    def program(el_state: ELMeshState, bandit_states, budgets: jax.Array,
+                rng: jax.Array):
+        def round_body(carry, rnd_idx):
+            el_state, bstates, budgets, rng, prev_loss = carry
+            rng, sub = jax.random.split(rng)
+            sel_rngs = jax.random.split(sub, n_edges)
+            arms = jax.vmap(
+                lambda r, s, b, c: jax_select_arm(r, s, b, c, ucb_c))(
+                sel_rngs, bstates, budgets, arms_cost)          # [E]
+            active = arms >= 0
+            intervals = jnp.where(active, arms + 1, 1)
+            if mode == "sync":
+                # one shared decision: the first active edge's arm
+                first = jnp.argmax(active)
+                intervals = jnp.full((n_edges,), intervals[first])
+                active = jnp.broadcast_to(active[first], (n_edges,))
+            batches = data_fn(jnp.arange(n_edges), rnd_idx,
+                              jnp.arange(h_max))
+            weights = active.astype(jnp.float32)
+            safe_w = jnp.where(jnp.any(active), weights,
+                               jnp.ones_like(weights))
+            new_state, metrics = el_round(el_state, batches, intervals,
+                                          safe_w)
+            any_active = jnp.any(active)
+            el_state = jax.tree.map(
+                lambda old, new: jnp.where(any_active, new, old),
+                el_state, new_state)
+            loss = metrics["mean_loss"]
+            utility = jnp.where(jnp.isfinite(prev_loss),
+                                prev_loss - loss, 0.0)
+            cost_e = (intervals.astype(jnp.float32) * comp + comm)
+            budgets = budgets - jnp.where(active, cost_e, 0.0)
+            bstates = jax.vmap(jax_bandit_update)(
+                bstates, arms, jnp.full((n_edges,), utility), cost_e)
+            carry = (el_state, bstates, budgets, rng, loss)
+            return carry, {"loss": loss, "intervals": intervals,
+                           "active": active, "budgets": budgets}
+
+        init = (el_state, bandit_states, budgets, rng,
+                jnp.asarray(jnp.inf, jnp.float32))
+        (el_state, bandit_states, budgets, _, _), hist = lax.scan(
+            round_body, init, jnp.arange(n_rounds))
+        return el_state, bandit_states, budgets, hist
+
+    return program
+
+
+def el_state_specs(model_cfg: ModelConfig, mesh: Mesh,
+                   state_shape: ELMeshState) -> ELMeshState:
+    """PartitionSpecs: leading edge dim over (pod,data); params sharded by
+    the per-arch resolver; optimizer moments mirror the params."""
+    ea = edge_axes(mesh)
+
+    def strip_lead(shape_tree):
+        return jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), shape_tree)
+
+    p_specs = param_specs(model_cfg, mesh, strip_lead(state_shape.params))
+    p_specs = jax.tree.map(lambda s: P(ea, *s), p_specs,
+                           is_leaf=lambda x: isinstance(x, P))
+
+    # optimizer moments mirror the param specs (ZeRO-style: fully sharded
+    # like their params); the step counter replicates.  SGD-without-momentum
+    # keeps scalar nu placeholders -> replicated.
+    mu_specs = p_specs
+    nu_shape = state_shape.opt.nu
+    same_struct = (jax.tree_util.tree_structure(nu_shape)
+                   == jax.tree_util.tree_structure(state_shape.params))
+    p_leaf_shapes = [x.shape for x in jax.tree.leaves(state_shape.params)]
+    nu_leaf_shapes = [x.shape for x in jax.tree.leaves(nu_shape)]
+    if same_struct and p_leaf_shapes == nu_leaf_shapes:
+        nu_specs = p_specs
+    else:   # stacked scalar placeholders [E]: shard the edge dim only
+        nu_specs = jax.tree.map(
+            lambda x: P(ea, *([None] * (x.ndim - 1))) if x.ndim else P(),
+            nu_shape)
+    opt_specs = type(state_shape.opt)(step=P(), mu=mu_specs, nu=nu_specs)
+    return ELMeshState(params=p_specs, opt=opt_specs)

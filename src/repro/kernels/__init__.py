@@ -1,0 +1,21 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel ships three files:
+  kernel.py -- ``pl.pallas_call`` body with explicit BlockSpec VMEM tiling
+               (TPU is the target; CPU validation runs interpret=True),
+  ops.py    -- the jit'd public wrapper (custom_vjp where training needs
+               gradients; backward routes through the jnp oracle),
+  ref.py    -- the pure-jnp oracle used by the allclose test sweeps.
+
+Kernels:
+  flash_attention -- causal GQA flash attention w/ sliding window
+  ssd_scan        -- Mamba-2 chunked SSD (intra-chunk MXU matmuls,
+                     sequential inter-chunk state carry)
+  kmeans_assign   -- K-means E-step (the paper's own workload hot spot)
+"""
+
+
+def interpret_default() -> bool:
+    """Pallas kernels execute natively only on TPU; elsewhere interpret."""
+    import jax
+    return jax.default_backend() != "tpu"

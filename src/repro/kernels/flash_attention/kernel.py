@@ -1,0 +1,116 @@
+"""Causal GQA flash attention — Pallas TPU kernel.
+
+Tiling (per DESIGN.md §5): the grid is (batch, q_heads, Sq/bq, Sk/bk) with
+the KV axis innermost — TPU executes the last grid axis sequentially per
+core, so fp32 online-softmax accumulators (m, l, acc) live in VMEM scratch
+and carry across KV blocks.  Per step the kernel holds one Q block
+[bq, D], one K/V block [bk, D] in VMEM and runs two MXU matmuls
+([bq,D]x[D,bk] and [bq,bk]x[bk,D]); bq=bk=128 keeps every matmul dim a
+multiple of the 128-lane MXU width for head_dim in {64,128,256}.
+
+GQA is expressed in the K/V index_map (query head h reads kv head
+h // group) — no KV replication in HBM or VMEM.  The sliding-window mask
+reuses the causal-mask path with a lower bound.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                 scale: float, bq: int, bk: int, n_kv_blocks: int,
+                 window: int, causal: bool):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, :, 0, :]                       # [bq, D]
+    k = k_ref[0, :, 0, :]                       # [bk, D]
+    v = v_ref[0, :, 0, :]                       # [bk, D]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale     # [bq, bk]
+
+    q_pos = iq * bq + lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = ik * bk + lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), jnp.bool_)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                         # [bq]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_cur)             # rescale factor
+    p = jnp.exp(s - m_cur[:, None])             # [bq, bk]
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+    acc_ref[...] = (acc_ref[...] * alpha[:, None]
+                    + jax.lax.dot_general(
+                        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32))
+    m_ref[...] = m_cur
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0,
+                        block_q: int = 128, block_k: int = 128,
+                        interpret: bool = False) -> jax.Array:
+    """q: [B, S, H, D]; k, v: [B, S, KV, D] -> [B, S, H, D]."""
+    b, s, h, d = q.shape
+    kvh = k.shape[2]
+    assert h % kvh == 0, (h, kvh)
+    group = h // kvh
+    bq = min(block_q, s)
+    bk = min(block_k, s)
+    assert s % bq == 0 and s % bk == 0, (s, bq, bk)
+    n_q, n_kv = s // bq, s // bk
+    scale = 1.0 / math.sqrt(d)
+
+    kernel = functools.partial(
+        _attn_kernel, scale=scale, bq=bq, bk=bk, n_kv_blocks=n_kv,
+        window=window, causal=causal)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, bq, 1, d), lambda b_, h_, iq, ik: (b_, iq, h_, 0)),
+            pl.BlockSpec((1, bk, 1, d),
+                         lambda b_, h_, iq, ik, group=group:
+                         (b_, ik, h_ // group, 0)),
+            pl.BlockSpec((1, bk, 1, d),
+                         lambda b_, h_, iq, ik, group=group:
+                         (b_, ik, h_ // group, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, d),
+                               lambda b_, h_, iq, ik: (b_, iq, h_, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, s, h, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),       # running max m
+            pltpu.VMEM((bq,), jnp.float32),       # running denom l
+            pltpu.VMEM((bq, d), jnp.float32),     # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

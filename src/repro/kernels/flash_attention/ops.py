@@ -1,0 +1,43 @@
+"""Public flash-attention op: Pallas forward, oracle-gradient backward.
+
+The backward pass is not the bottleneck this repo optimizes (the dry-run
+and serving paths are forward-only), so grads route through the jnp oracle
+via ``jax.custom_vjp`` — a standard arrangement that keeps training
+correct while the forward uses the TPU kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import interpret_default
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    interpret: Optional[bool] = None):
+    interp = interpret_default() if interpret is None else interpret
+    return flash_attention_fwd(q, k, v, causal=causal, window=window,
+                               interpret=interp)
+
+
+def _fwd(q, k, v, causal, window, interpret):
+    out = flash_attention(q, k, v, causal, window, interpret)
+    return out, (q, k, v)
+
+
+def _bwd(causal, window, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: attention_ref(q_, k_, v_, causal=causal,
+                                         window=window), q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fwd, _bwd)

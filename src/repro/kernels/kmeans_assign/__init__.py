@@ -1,0 +1,4 @@
+from repro.kernels.kmeans_assign import ops, ref
+from repro.kernels.kmeans_assign.ops import assign
+
+__all__ = ["assign", "ops", "ref"]

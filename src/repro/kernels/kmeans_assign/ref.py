@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the K-means assignment kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def assign_ref(x: jax.Array, centers: jax.Array):
+    """x: [N, D]; centers: [K, D] -> (assignments [N], min_d2 [N])."""
+    x32 = x.astype(jnp.float32)
+    c32 = centers.astype(jnp.float32)
+    d2 = (jnp.sum(x32 ** 2, -1, keepdims=True)
+          - 2.0 * x32 @ c32.T
+          + jnp.sum(c32 ** 2, -1)[None, :])
+    return jnp.argmin(d2, -1).astype(jnp.int32), jnp.min(d2, -1)

@@ -1,0 +1,112 @@
+"""Mamba-2 SSD (state-space duality) — Pallas TPU kernel.
+
+Chunked dual form: the grid is (batch, heads, S/chunk) with the chunk axis
+innermost/sequential, carrying the running SSM state [P, N] in fp32 VMEM
+scratch across chunks (the inter-chunk recurrence).  Per chunk the kernel
+does the intra-chunk dense work on the MXU:
+
+    G     = C_blk @ B_blk^T                    [L, L]   (MXU)
+    Ydiag = (G * decay) @ X_blk                [L, P]   (MXU)
+    Yoff  = (exp(a_cs) * (C_blk @ state^T))    [L, P]   (MXU)
+    state = exp(a_last) * state + X^T @ (B_blk * decay_states)   (MXU)
+
+with L = chunk length (128 — MXU-aligned), P = head_dim, N = d_state.
+VMEM per step: X [L,P] + B/C [L,N] + state [P,N] + [L,L] temporaries —
+~300 KB at (L=128, P=64, N=128), comfortably inside the ~16 MB VMEM.
+
+B/C are shared across heads (ngroups=1): their index_map ignores the head
+grid coordinate, so the same VMEM block is reused across the head axis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, da_ref, b_ref, c_ref, y_ref, state_out_ref,
+                state_ref, *, chunk: int, n_chunks: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)        # [L, P]
+    da = da_ref[0, :, 0].astype(jnp.float32)         # [L]
+    b = b_ref[0].astype(jnp.float32)                 # [L, N]
+    c = c_ref[0].astype(jnp.float32)                 # [L, N]
+
+    a_cs = jnp.cumsum(da)                            # [L]
+    # intra-chunk decay matrix: exp(a_cs[i] - a_cs[j]) for i >= j
+    seg = a_cs[:, None] - a_cs[None, :]              # [L, L]
+    il = lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jl = lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.where(jl <= il, jnp.exp(seg), 0.0)   # [L, L]
+
+    g = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [L, L]
+    y_diag = jax.lax.dot_general(g * decay, x, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+
+    # off-diagonal: contribution of the carried state
+    state = state_ref[...]                           # [P, N]
+    c_state = jax.lax.dot_general(c, state, (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    y_off = jnp.exp(a_cs)[:, None] * c_state         # [L, P]
+
+    y_ref[0, :, 0, :] = (y_diag + y_off).astype(y_ref.dtype)
+
+    # state update: state' = exp(a_last) * state + X^T (B * decay_states)
+    a_last = a_cs[-1]
+    decay_states = jnp.exp(a_last - a_cs)            # [L]
+    bw = b * decay_states[:, None]                   # [L, N]
+    upd = jax.lax.dot_general(x, bw, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # [P, N]
+    state_ref[...] = jnp.exp(a_last) * state + upd
+
+    @pl.when(ic == n_chunks - 1)
+    def _emit_state():
+        state_out_ref[0, 0] = state_ref[...]
+
+
+def ssd_fwd(x: jax.Array, da: jax.Array, b_mat: jax.Array, c_mat: jax.Array,
+            chunk: int, interpret: bool = False):
+    """x: [B,S,H,P] (pre-scaled by dt); da: [B,S,H]; b/c: [B,S,N].
+
+    Returns (y [B,S,H,P], final_state [B,H,P,N] fp32).
+    """
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    n_chunks = s // chunk
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk, n_chunks=n_chunks)
+    y, final_state = pl.pallas_call(
+        kernel,
+        grid=(bsz, h, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, 1, p),
+                         lambda b_, h_, ic: (b_, ic, h_, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda b_, h_, ic: (b_, ic, h_)),
+            pl.BlockSpec((1, chunk, n), lambda b_, h_, ic: (b_, ic, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b_, h_, ic: (b_, ic, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, 1, p),
+                         lambda b_, h_, ic: (b_, ic, h_, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda b_, h_, ic: (b_, h_, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, s, h, p), x.dtype),
+            jax.ShapeDtypeStruct((bsz, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, da, b_mat, c_mat)
+    return y, final_state

@@ -1,0 +1,35 @@
+"""Public SSD op: Pallas forward, oracle-gradient backward."""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+
+from repro.kernels import interpret_default
+from repro.kernels.ssd_scan.kernel import ssd_fwd
+from repro.kernels.ssd_scan.ref import ssd_reference
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def ssd(x, da, b_mat, c_mat, chunk: int,
+        interpret: Optional[bool] = None) -> Tuple[jax.Array, jax.Array]:
+    interp = interpret_default() if interpret is None else interpret
+    return ssd_fwd(x, da, b_mat, c_mat, chunk, interpret=interp)
+
+
+def _fwd(x, da, b_mat, c_mat, chunk, interpret):
+    out = ssd(x, da, b_mat, c_mat, chunk, interpret)
+    return out, (x, da, b_mat, c_mat)
+
+
+def _bwd(chunk, interpret, res, g):
+    x, da, b_mat, c_mat = res
+    _, vjp = jax.vjp(
+        lambda x_, da_, b_, c_: ssd_reference(x_, da_, b_, c_, chunk),
+        x, da, b_mat, c_mat)
+    return vjp(g)
+
+
+ssd.defvjp(_fwd, _bwd)

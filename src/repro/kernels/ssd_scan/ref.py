@@ -1,0 +1,6 @@
+"""Oracle for the SSD kernel — re-exports the model-layer chunked
+reference (single source of truth for SSD semantics)."""
+
+from repro.models.mamba2 import segsum, ssd_reference
+
+__all__ = ["ssd_reference", "segsum"]

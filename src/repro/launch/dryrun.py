@@ -1,0 +1,438 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=" + \
+    os.environ.get("REPRO_DRYRUN_DEVICES", "512")
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh).
+
+The two lines above MUST stay the first statements of this module (before
+any jax import): jax locks the device count on first backend init, and the
+production meshes need 512 host placeholder devices.  Do not replicate
+this env var anywhere global (conftest/pyproject) — smoke tests and
+benches must see 1 device.
+
+Per combo this driver:
+  1. builds the model from the arch config (with per-shape adaptations),
+  2. resolves parameter / batch / cache PartitionSpecs from the per-arch
+     sharding resolver,
+  3. ``jax.jit(step, in_shardings=...).lower(**ShapeDtypeStructs)``,
+  4. ``.compile()`` — success proves the distribution config is coherent,
+  5. records ``memory_analysis()``, ``cost_analysis()`` and the collective
+     bytes parsed from the optimized HLO into a JSONL row that
+     ``benchmarks/roofline.py`` consumes.
+
+Step per shape kind:
+  train    -> ``train_step``  (AdamW, FSDP param layout)   [baseline]
+              or ``el_round`` (--step el_round): the paper's OL4EL round
+  prefill  -> ``prefill_step`` (forward, full sequence)
+  decode   -> ``decode_step``  (ONE token vs a seq_len KV/SSM cache)
+"""
+
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import (ARCH_IDS, INPUT_SHAPES, TrainConfig, get_config)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import (adapt_model_for_shape, el_round_batch_struct,
+                                input_specs)
+from repro.models import build_model
+from repro.sharding import (batch_spec, cache_specs, edge_axes, param_specs,
+                            to_shardings)
+from repro.train.optimizer import init_opt_state
+from repro.train.state import (TrainState, make_prefill_step,
+                               make_train_step)
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(pred|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|"
+                       r"u64|c64|c128)\[([0-9,]*)\]")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Any]:
+    """Sum the bytes moved by every collective op in the optimized HLO.
+
+    Post-optimization HLO prints operands without types, so we meter the
+    RESULT type of each collective: for all-reduce / all-to-all /
+    collective-permute the result equals the operand; for all-gather the
+    result is the gathered (received) payload per device; for
+    reduce-scatter we scale the result back up by the shrink factor when
+    derivable.  Shapes in the partitioned module are per-device.
+    ``-start`` async forms are counted once (the ``-done`` op has a
+    different result structure and is skipped via the op-name match).
+    """
+    per_op: Dict[str, Dict[str, float]] = {}
+    for line in hlo_text.splitlines():
+        m = re.search(
+            r"=\s+(\(?[a-z0-9\[\],{}\s]+?\)?)\s+"
+            r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
+            r"collective-permute)(?:-start)?\(", line)
+        if not m:
+            continue
+        result_type, op = m.group(1), m.group(2)
+        nbytes = _type_bytes(result_type)
+        d = per_op.setdefault(op, {"count": 0, "bytes": 0})
+        d["count"] += 1
+        d["bytes"] += nbytes
+    total = sum(d["bytes"] for d in per_op.values())
+    return {"per_op": per_op, "bytes_per_device": total}
+
+
+def _mem_dict(compiled) -> Dict[str, float]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:                                  # pragma: no cover
+        return {"error": str(e)}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out
+
+
+def _cost_dict(compiled) -> Dict[str, float]:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception as e:                                  # pragma: no cover
+        return {"error": str(e)}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {k: float(v) for k, v in ca.items()
+            if k in ("flops", "bytes accessed", "transcendentals")}
+
+
+# ---------------------------------------------------------------------------
+# Lowering per combo
+# ---------------------------------------------------------------------------
+
+
+def _dryrun_train_cfg(shape, opt_state_dtype: str = "float32"
+                      ) -> TrainConfig:
+    return TrainConfig(optimizer="adamw", global_batch=shape.global_batch,
+                       seq_len=shape.seq_len, total_steps=1000,
+                       opt_state_dtype=opt_state_dtype)
+
+
+def lower_combo(arch: str, shape_name: str, multi_pod: bool,
+                step_mode: str = "auto", h_max: int = 4,
+                window_slice: bool = False,
+                fused_xent: bool = False,
+                no_remat: bool = False,
+                moe_sort_dispatch: bool = False,
+                prefill_last_only: bool = False,
+                ring_cache: bool = False,
+                moe_groups: int = 0,
+                opt_state_dtype: str = "float32",
+                extra_tag: str = "",
+                depth_groups: Optional[int] = None) -> Dict[str, Any]:
+    """Lower + compile one combo.
+
+    ``depth_groups``: calibration mode — lower a depth-reduced UNROLLED
+    variant (prefix + depth_groups * group layers, scan_layers=False).
+    XLA's HloCostAnalysis counts while-loop (lax.scan) bodies exactly once,
+    so scanned-layer lowerings under-report flops/bytes/collectives by
+    ~n_groups x.  Two calibration points (1 and 2 groups) give exact
+    per-group deltas; benchmarks/roofline.py extrapolates
+    ``total = c1 + (n_groups - 1) * (c2 - c1)``.
+    """
+    t0 = time.time()
+    shape = INPUT_SHAPES[shape_name]
+    exp = get_config(arch)
+    model_cfg = adapt_model_for_shape(exp.model, shape)
+    n_groups_full = None
+    if depth_groups is not None:
+        from repro.models.transformer import layer_groups
+        pre, grp, n_groups_full = layer_groups(model_cfg)
+        model_cfg = dataclasses.replace(
+            model_cfg,
+            n_layers=len(pre) + depth_groups * max(len(grp), 1),
+            scan_layers=False)
+        extra_tag = ((extra_tag + "|") if extra_tag else "") \
+            + f"calib{depth_groups}"
+    if no_remat:
+        model_cfg = dataclasses.replace(model_cfg, remat=False)
+    if moe_sort_dispatch and model_cfg.moe.enabled:
+        model_cfg = dataclasses.replace(
+            model_cfg,
+            moe=dataclasses.replace(model_cfg.moe, dispatch="sort"))
+    if moe_groups and model_cfg.moe.enabled:
+        model_cfg = dataclasses.replace(
+            model_cfg,
+            moe=dataclasses.replace(model_cfg.moe,
+                                    dispatch_groups=moe_groups))
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    logits_spec = None
+    if fused_xent and shape.kind == "train":
+        logits_spec = P(edge_axes(mesh), None, "model")
+    model = build_model(model_cfg, window_slice=window_slice,
+                        fused_xent=fused_xent, logits_spec=logits_spec,
+                        ring_cache=ring_cache)
+    rng = jax.random.key(0)
+    params_shape = jax.eval_shape(model.init, rng)
+
+    record: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": int(n_chips),
+        "step": step_mode,
+        "tag": extra_tag,
+        "params": int(model_cfg.num_params()),
+        "active_params": int(model_cfg.num_active_params()),
+        "sliding_window": model_cfg.sliding_window,
+    }
+    if depth_groups is not None:
+        record["depth_groups"] = depth_groups
+        record["n_groups_full"] = n_groups_full
+        record["n_layers_reduced"] = model_cfg.n_layers
+
+    if shape.kind == "train" and step_mode in ("auto", "train_step"):
+        record["step"] = "train_step"
+        tc = _dryrun_train_cfg(shape, opt_state_dtype)
+        p_specs = param_specs(model_cfg, mesh, params_shape, fsdp=True)
+        opt_shape = jax.eval_shape(
+            lambda p: init_opt_state(tc, p), params_shape)
+        state_shape = TrainState(params_shape, opt_shape)
+        mu_specs, nu_specs = p_specs, p_specs
+        if (jax.tree_util.tree_structure(opt_shape.nu)
+                != jax.tree_util.tree_structure(params_shape)):
+            nu_specs = jax.tree.map(lambda x: P(), opt_shape.nu)
+        state_specs = TrainState(
+            p_specs, type(opt_shape)(step=P(), mu=mu_specs, nu=nu_specs))
+        batch_shape = input_specs(model_cfg, shape_name)
+        b_specs = jax.tree.map(
+            lambda x: P(edge_axes(mesh), *([None] * (len(x.shape) - 1))),
+            batch_shape)
+        step_fn = make_train_step(model, tc)
+        fn = jax.jit(step_fn,
+                     in_shardings=(to_shardings(mesh, state_specs),
+                                   to_shardings(mesh, b_specs)))
+        with mesh:
+            lowered = fn.lower(state_shape, batch_shape)
+    elif shape.kind == "train" and step_mode == "el_round":
+        record["step"] = "el_round"
+        from repro.federated.local_sgd import (el_state_specs, init_el_state,
+                                               make_el_round)
+        tc = _dryrun_train_cfg(shape)
+        n_edges = 1
+        for ax, s in zip(mesh.axis_names, mesh.devices.shape):
+            if ax in ("pod", "data"):
+                n_edges *= s
+        record["n_edges"] = n_edges
+        record["h_max"] = h_max
+        el_shape = jax.eval_shape(
+            lambda r: init_el_state(model, tc, n_edges, r), rng)
+        el_specs = el_state_specs(model_cfg, mesh, el_shape)
+        batch_shape = el_round_batch_struct(
+            model_cfg, n_edges, h_max, shape.global_batch, shape.seq_len)
+        ea = edge_axes(mesh)
+        b_specs = jax.tree.map(
+            lambda x: P(ea, *([None] * (len(x.shape) - 1))), batch_shape)
+        ivec = jax.ShapeDtypeStruct((n_edges,), jnp.int32)
+        wvec = jax.ShapeDtypeStruct((n_edges,), jnp.float32)
+        el_round = make_el_round(model, tc, h_max=h_max)
+        fn = jax.jit(el_round, in_shardings=(
+            to_shardings(mesh, el_specs), to_shardings(mesh, b_specs),
+            NamedSharding(mesh, P(ea)), NamedSharding(mesh, P(ea))))
+        with mesh:
+            lowered = fn.lower(el_shape, batch_shape, ivec, wvec)
+    elif shape.kind == "prefill":
+        record["step"] = "prefill_step"
+        p_specs = param_specs(model_cfg, mesh, params_shape, fsdp=False)
+        batch_shape = input_specs(model_cfg, shape_name)
+        b_specs = jax.tree.map(
+            lambda x: P(edge_axes(mesh), *([None] * (len(x.shape) - 1))),
+            batch_shape)
+        fn = jax.jit(make_prefill_step(model, last_only=prefill_last_only),
+                     in_shardings=(to_shardings(mesh, p_specs),
+                                   to_shardings(mesh, b_specs)))
+        with mesh:
+            lowered = fn.lower(params_shape, batch_shape)
+    else:  # decode
+        record["step"] = "decode_step"
+        p_specs = param_specs(model_cfg, mesh, params_shape, fsdp=False)
+        cache_shape = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len))
+        c_specs = cache_specs(model_cfg, mesh, cache_shape,
+                              shape.global_batch)
+        tok_shape = input_specs(model_cfg, shape_name)["tokens"]
+        ea = edge_axes(mesh)
+        n_edge = 1
+        for ax, s in zip(mesh.axis_names, mesh.devices.shape):
+            if ax in ("pod", "data"):
+                n_edge *= s
+        tok_spec = (P(ea, *([None] * (len(tok_shape.shape) - 1)))
+                    if tok_shape.shape[0] % n_edge == 0 else
+                    P(*([None] * len(tok_shape.shape))))
+
+        def decode_fn(params, tokens, cache):
+            return model.decode_step(params, tokens, cache)
+
+        fn = jax.jit(decode_fn, in_shardings=(
+            to_shardings(mesh, p_specs),
+            NamedSharding(mesh, tok_spec),
+            to_shardings(mesh, c_specs)))
+        with mesh:
+            lowered = fn.lower(params_shape, tok_shape, cache_shape)
+
+    record["lower_s"] = round(time.time() - t0, 2)
+    t1 = time.time()
+    compiled = lowered.compile()
+    record["compile_s"] = round(time.time() - t1, 2)
+    record["memory"] = _mem_dict(compiled)
+    record["cost"] = _cost_dict(compiled)
+    try:
+        hlo = compiled.as_text()
+        record["collectives"] = parse_collectives(hlo)
+        record["hlo_lines"] = hlo.count("\n")
+    except Exception as e:                                  # pragma: no cover
+        record["collectives"] = {"error": str(e)}
+    record["ok"] = True
+    return record
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="arch id (default: all)")
+    ap.add_argument("--shape", default=None,
+                    choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod",
+                                                      "both"])
+    ap.add_argument("--step", default="auto",
+                    choices=["auto", "train_step", "el_round"])
+    ap.add_argument("--h-max", type=int, default=4)
+    ap.add_argument("--window-slice", action="store_true",
+                    help="enable KV-slice optimization for sliding-window")
+    ap.add_argument("--fused-xent", action="store_true",
+                    help="sharded cross-entropy (no logits all-gather)")
+    ap.add_argument("--no-remat", action="store_true",
+                    help="disable activation checkpointing")
+    ap.add_argument("--moe-sort-dispatch", action="store_true",
+                    help="sort-based MoE position-in-expert (O(Tk) mem)")
+    ap.add_argument("--prefill-last-only", action="store_true",
+                    help="serving prefill: emit only last-position logits")
+    ap.add_argument("--ring-cache", action="store_true",
+                    help="rolling window-length KV cache for decode")
+    ap.add_argument("--moe-groups", type=int, default=0,
+                    help="group-local MoE dispatch (set to n data shards)")
+    ap.add_argument("--opt-state-dtype", default="float32",
+                    help="Adam moment dtype (bf16 halves optimizer memory)")
+    ap.add_argument("--calibrate", action="store_true",
+                    help="run the 2-point depth calibration (unrolled "
+                         "prefix+G and prefix+2G) for scan-aware roofline "
+                         "flop/byte/collective extrapolation")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default="results/dryrun.jsonl")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args(argv)
+
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+    meshes = {"pod": [False], "multipod": [True],
+              "both": [False, True]}[args.mesh]
+
+    done = set()
+    if args.skip_existing and os.path.exists(args.out):
+        with open(args.out) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                    done.add((r["arch"], r["shape"], r["mesh"], r["step"],
+                              r.get("tag", "")))
+                except Exception:
+                    pass
+
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+    failures = 0
+    with open(args.out, "a") as f:
+        for arch in archs:
+            for shape_name in shapes:
+                for mp in meshes:
+                    mesh_name = "2x16x16" if mp else "16x16"
+                    step = args.step
+                    key_step = ("train_step" if step in ("auto",)
+                                and INPUT_SHAPES[shape_name].kind == "train"
+                                else step)
+                    if (not args.calibrate
+                            and (arch, shape_name, mesh_name, key_step,
+                                 args.tag) in done):
+                        continue
+                    if (step == "el_round"
+                            and INPUT_SHAPES[shape_name].kind != "train"):
+                        continue
+                    depths = [1, 2] if args.calibrate else [None]
+                    for dg in depths:
+                        tag = args.tag
+                        if dg:
+                            tag = ((tag + "|") if tag else "") + f"calib{dg}"
+                        if dg and (arch, shape_name, mesh_name, key_step,
+                                   tag) in done:
+                            continue
+                        try:
+                            rec = lower_combo(
+                                arch, shape_name, mp, step,
+                                h_max=args.h_max,
+                                window_slice=args.window_slice,
+                                fused_xent=args.fused_xent,
+                                no_remat=args.no_remat,
+                                moe_sort_dispatch=args.moe_sort_dispatch,
+                                prefill_last_only=args.prefill_last_only,
+                                ring_cache=args.ring_cache,
+                                moe_groups=args.moe_groups,
+                                opt_state_dtype=args.opt_state_dtype,
+                                extra_tag=args.tag, depth_groups=dg)
+                        except Exception as e:
+                            rec = {"arch": arch, "shape": shape_name,
+                                   "mesh": mesh_name, "step": step,
+                                   "tag": tag, "ok": False,
+                                   "error": f"{type(e).__name__}: {e}"}
+                            failures += 1
+                        f.write(json.dumps(rec) + "\n")
+                        f.flush()
+                        status = "OK" if rec.get("ok") else "FAIL"
+                        mem = rec.get("memory", {}).get(
+                            "argument_size_in_bytes", 0)
+                        print(f"[{status}] {arch} {shape_name} {mesh_name} "
+                              f"{rec.get('step')} tag={rec.get('tag', '')} "
+                              f"args={mem/2**30:.2f}GiB "
+                              f"compile={rec.get('compile_s', '-')}s",
+                              flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state; callers control when devices are materialized.
+
+Target hardware (roofline constants in benchmarks/roofline.py):
+  TPU v5e, 197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+  Single pod: 16x16 = 256 chips, axes (data, model).
+  Multi-pod:  2x16x16 = 512 chips, axes (pod, data, model).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import os
+    if os.environ.get("REPRO_DEBUG_MESH"):        # tiny-mesh CI/debug mode
+        d = int(os.environ["REPRO_DEBUG_MESH"])
+        shape = (2, d, d) if multi_pod else (d, d)
+    else:
+        shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 2):
+    """Small mesh for CPU multi-device tests (subprocesses set
+    ``--xla_force_host_platform_device_count`` accordingly)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

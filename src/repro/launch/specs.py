@@ -1,0 +1,88 @@
+"""ShapeDtypeStruct input stand-ins for every (arch x input-shape) combo.
+
+``input_specs`` never allocates device memory — everything is a
+ShapeDtypeStruct (weak-type-correct, shardable), the pattern required for
+the multi-pod dry-run.  ``decode`` shapes describe ONE new token against a
+KV/SSM cache of ``seq_len``; ``train``/``prefill`` describe full sequences.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import (ExperimentConfig, InputShape, INPUT_SHAPES,
+                          ModelConfig)
+
+SDS = jax.ShapeDtypeStruct
+
+
+# Sliding window applied to full-attention archs for the long-context shape
+# (DESIGN.md carve-out: long_500k needs sub-quadratic attention).
+LONG_CONTEXT_WINDOW = 8192
+
+
+def adapt_model_for_shape(model_cfg: ModelConfig,
+                          shape: InputShape) -> ModelConfig:
+    """Per-shape config adjustments (documented in DESIGN.md):
+
+    * ``long_500k`` on attention architectures enables sliding-window
+      attention (window 8192).  Pure/hybrid SSM archs run natively: mamba2
+      has no attention; jamba keeps its 9 full-attention layers (KV fits
+      once sharded).
+    """
+    if shape.name == "long_500k" and model_cfg.family not in ("ssm", "hybrid"):
+        return dataclasses.replace(model_cfg,
+                                   sliding_window=LONG_CONTEXT_WINDOW)
+    return model_cfg
+
+
+def batch_struct(model_cfg: ModelConfig, batch: int, seq_len: int
+                 ) -> Dict[str, Any]:
+    """Training/prefill batch stand-in for one global step."""
+    out: Dict[str, Any] = {}
+    if model_cfg.n_codebooks > 1:
+        out["tokens"] = SDS((batch, model_cfg.n_codebooks, seq_len),
+                            jnp.int32)
+    else:
+        out["tokens"] = SDS((batch, seq_len), jnp.int32)
+    if model_cfg.num_prefix_embeddings:
+        out["prefix_emb"] = SDS(
+            (batch, model_cfg.num_prefix_embeddings, model_cfg.d_model),
+            jnp.dtype(model_cfg.dtype))
+    return out
+
+
+def decode_token_struct(model_cfg: ModelConfig, batch: int) -> Any:
+    if model_cfg.n_codebooks > 1:
+        return SDS((batch, model_cfg.n_codebooks, 1), jnp.int32)
+    return SDS((batch, 1), jnp.int32)
+
+
+def input_specs(model_cfg: ModelConfig, shape_name: str) -> Dict[str, Any]:
+    """The model-input stand-ins for one assigned input shape."""
+    shape = INPUT_SHAPES[shape_name]
+    model_cfg = adapt_model_for_shape(model_cfg, shape)
+    if shape.kind in ("train", "prefill"):
+        return batch_struct(model_cfg, shape.global_batch, shape.seq_len)
+    return {"tokens": decode_token_struct(model_cfg, shape.global_batch)}
+
+
+def el_round_batch_struct(model_cfg: ModelConfig, n_edges: int, h_max: int,
+                          batch: int, seq_len: int) -> Dict[str, Any]:
+    """Batch stand-in for one OL4EL round: per-edge, per-local-step."""
+    per_edge = batch // n_edges
+    if model_cfg.n_codebooks > 1:
+        tokens = SDS((n_edges, h_max, per_edge, model_cfg.n_codebooks,
+                      seq_len), jnp.int32)
+    else:
+        tokens = SDS((n_edges, h_max, per_edge, seq_len), jnp.int32)
+    out: Dict[str, Any] = {"tokens": tokens}
+    if model_cfg.num_prefix_embeddings:
+        out["prefix_emb"] = SDS(
+            (n_edges, h_max, per_edge, model_cfg.num_prefix_embeddings,
+             model_cfg.d_model), jnp.dtype(model_cfg.dtype))
+    return out

@@ -1,0 +1,130 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> ...``
+
+Two execution modes:
+  * ``--mode standard`` — plain synchronous training (train_step loop).
+  * ``--mode ol4el``    — the paper's edge-cloud collaborative loop: E
+    simulated edges, per-round intervals chosen by the budget-limited MAB,
+    masked local steps + weighted aggregation (``el_round``), budgets
+    charged per the heterogeneous cost model.
+
+On a real TPU cluster the same code runs under the production mesh (see
+``repro.launch.mesh``); on this CPU host it runs on the default device
+with the smoke-scale configs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import get_config, get_smoke_config
+from repro.core.coordinator import CloudCoordinator
+from repro.data import SyntheticLMData
+from repro.federated import init_el_state, make_el_round
+from repro.models import build_model
+from repro.train import (checkpoint, init_train_state, make_train_step)
+
+
+def train_standard(exp, args) -> None:
+    model = build_model(exp.model)
+    state = init_train_state(model, exp.train, jax.random.key(exp.train.seed))
+    data = SyntheticLMData.for_model(exp.model, args.batch, args.seq)
+    step = jax.jit(make_train_step(model, exp.train))
+    for i in range(args.steps):
+        t0 = time.time()
+        state, metrics = step(state, data.batch(0, i))
+        if i % args.log_every == 0 or i == args.steps - 1:
+            print(f"step {i:5d} loss={float(metrics['loss']):.4f} "
+                  f"lr={float(metrics['lr']):.2e} "
+                  f"gnorm={float(metrics['grad_norm']):.2f} "
+                  f"dt={time.time() - t0:.2f}s", flush=True)
+    if args.ckpt:
+        checkpoint.save(args.ckpt, state, step=args.steps)
+        print(f"saved checkpoint to {args.ckpt}")
+
+
+def train_ol4el(exp, args) -> None:
+    model = build_model(exp.model)
+    ol = dataclasses.replace(exp.ol4el, n_edges=args.edges,
+                             heterogeneity=args.heterogeneity,
+                             budget=args.budget, mode=args.el_mode)
+    coord = CloudCoordinator(ol, args.edges, lr=exp.train.peak_lr)
+    h_max = ol.max_interval
+    state = init_el_state(model, exp.train, args.edges,
+                          jax.random.key(exp.train.seed))
+    data = SyntheticLMData.for_model(exp.model, args.batch, args.seq)
+    el_round = jax.jit(make_el_round(model, exp.train, h_max=h_max,
+                                     mode="sync" if ol.mode == "sync"
+                                     else "async"))
+    prev_loss = None
+    rnd = 0
+    step_counter = np.zeros(args.edges, np.int64)
+    while rnd < args.steps:
+        intervals = []
+        for e in range(args.edges):
+            i = coord.decide(0 if ol.mode == "sync" else e)
+            if i < 0:
+                print(f"round {rnd}: edge {e} budget exhausted -> stop")
+                return
+            intervals.append(i)
+        if ol.mode == "sync":
+            intervals = [intervals[0]] * args.edges
+        batches = {"tokens": jnp.stack([
+            jnp.stack([data.batch(e, int(step_counter[e]) + s)["tokens"]
+                       for s in range(h_max)])
+            for e in range(args.edges)])}
+        ivec = jnp.asarray(intervals, jnp.int32)
+        state, metrics = el_round(state, batches, ivec,
+                                  jnp.ones(args.edges, jnp.float32))
+        loss = float(metrics["mean_loss"])
+        for e in range(args.edges):
+            step_counter[e] += intervals[e]
+            cost = coord.realized_cost(e, intervals[e])
+            coord.charge(e, cost)
+            utility = 0.0 if prev_loss is None else max(prev_loss - loss, 0.0)
+            coord.observe(0 if ol.mode == "sync" else e, intervals[e],
+                          utility, cost)
+        prev_loss = loss
+        rnd += 1
+        if rnd % args.log_every == 0:
+            cons = coord.total_consumed()
+            print(f"round {rnd:4d} loss={loss:.4f} "
+                  f"intervals={intervals} consumed={cons:.0f}/"
+                  f"{args.edges * args.budget:.0f}", flush=True)
+    if args.ckpt:
+        checkpoint.save(args.ckpt, state, step=rnd)
+        print(f"saved EL checkpoint to {args.ckpt}")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced smoke config (CPU-friendly)")
+    ap.add_argument("--mode", default="standard",
+                    choices=["standard", "ol4el"])
+    ap.add_argument("--el-mode", default="async", choices=["sync", "async"])
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--edges", type=int, default=4)
+    ap.add_argument("--heterogeneity", type=float, default=4.0)
+    ap.add_argument("--budget", type=float, default=1e5)
+    ap.add_argument("--log-every", type=int, default=5)
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args(argv)
+
+    exp = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.mode == "standard":
+        train_standard(exp, args)
+    else:
+        train_ol4el(exp, args)
+
+
+if __name__ == "__main__":
+    main()

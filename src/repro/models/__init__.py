@@ -1,0 +1,19 @@
+"""Model zoo: unified LM over ModelConfig plus the paper's classic models."""
+
+from __future__ import annotations
+
+from repro.config import ModelConfig
+from repro.models.transformer import LM
+from repro.models.classic import KMeans, LinearSVM
+
+
+def build_model(cfg: ModelConfig, **kwargs):
+    """``--arch`` entry point: ModelConfig -> model object."""
+    if cfg.family == "classic":
+        if cfg.name.startswith("kmeans"):
+            return KMeans(cfg, **kwargs)
+        return LinearSVM(cfg, **kwargs)
+    return LM(cfg, **kwargs)
+
+
+__all__ = ["LM", "KMeans", "LinearSVM", "build_model"]

@@ -1,0 +1,258 @@
+"""Mamba-2 (SSD — state-space duality) mixer layer. [arXiv:2405.21060]
+
+Chunked SSD reference in pure jnp (the oracle for the Pallas ``ssd_scan``
+kernel) plus the single-token recurrent decode step.  Single B/C group
+(ngroups=1), scalar-per-head A — the Mamba-2 defaults.
+
+Layer structure (Mamba-2 block):
+    in_proj -> [z | x | B | C | dt]
+    causal depthwise conv + silu over (x, B, C)
+    y = SSD(x * dt, dt*A, B, C) + D * x
+    out = out_proj( rmsnorm(y * silu(z)) )
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.config import ModelConfig
+from repro.models.layers import dense_init, init_rms_norm, rms_norm
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# SSD core (chunked scan) — pure jnp oracle
+# ---------------------------------------------------------------------------
+
+
+def segsum(x: jax.Array) -> jax.Array:
+    """Segment-sum: out[..., i, j] = sum_{k=j+1..i} x[..., k] (i >= j)."""
+    l = x.shape[-1]
+    csum = jnp.cumsum(x, axis=-1)
+    out = csum[..., :, None] - csum[..., None, :]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_reference(x: jax.Array, dA: jax.Array, b_mat: jax.Array,
+                  c_mat: jax.Array, chunk: int,
+                  initial_state: Optional[jax.Array] = None
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD.
+
+    x:  [B, S, H, P]  (pre-scaled by dt)
+    dA: [B, S, H]     (dt * A, negative)
+    b_mat, c_mat: [B, S, N]  (single group, shared across heads)
+    Returns (y [B, S, H, P], final_state [B, H, P, N]).
+    S must be divisible by ``chunk``.
+    """
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    c = s // chunk
+    xc = x.reshape(bsz, c, chunk, h, p).astype(jnp.float32)
+    bc = b_mat.reshape(bsz, c, chunk, n).astype(jnp.float32)
+    cc = c_mat.reshape(bsz, c, chunk, n).astype(jnp.float32)
+    a = dA.reshape(bsz, c, chunk, h).transpose(0, 3, 1, 2)  # [B,H,C,L]
+    a = a.astype(jnp.float32)
+    a_cs = jnp.cumsum(a, axis=-1)
+
+    # 1) intra-chunk (diagonal blocks)
+    decay = jnp.exp(segsum(a))                               # [B,H,C,L,L]
+    y_diag = jnp.einsum("bcln,bcsn,bhcls,bcshp->bclhp",
+                        cc, bc, decay, xc)
+
+    # 2) per-chunk states
+    decay_states = jnp.exp(a_cs[..., -1:] - a_cs)            # [B,H,C,L]
+    states = jnp.einsum("bcln,bhcl,bclhp->bchpn",
+                        bc, decay_states, xc)                # [B,C,H,P,N]
+
+    # 3) inter-chunk recurrence
+    if initial_state is None:
+        initial_state = jnp.zeros((bsz, h, p, n), jnp.float32)
+    states = jnp.concatenate(
+        [initial_state[:, None].astype(jnp.float32), states], axis=1)
+    chunk_decay = a_cs[..., -1]                              # [B,H,C]
+    dc = jnp.exp(segsum(jnp.pad(chunk_decay, ((0, 0), (0, 0), (1, 0)))))
+    new_states = jnp.einsum("bhzc,bchpn->bzhpn", dc, states)  # [B,C+1,H,P,N]
+    prev_states, final_state = new_states[:, :-1], new_states[:, -1]
+
+    # 4) state -> output (off-diagonal contribution)
+    out_decay = jnp.exp(a_cs)                                # [B,H,C,L]
+    y_off = jnp.einsum("bcln,bchpn,bhcl->bclhp", cc, prev_states, out_decay)
+
+    y = (y_diag + y_off).reshape(bsz, s, h, p)
+    return y.astype(x.dtype), final_state
+
+
+def ssd_recurrent_step(state: jax.Array, x_t: jax.Array, da_t: jax.Array,
+                       b_t: jax.Array, c_t: jax.Array
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Single-token SSD recurrence.
+
+    state: [B, H, P, N]; x_t: [B, H, P] (pre-scaled by dt);
+    da_t: [B, H]; b_t, c_t: [B, N].
+    Returns (y_t [B, H, P], new_state).
+    """
+    decay = jnp.exp(da_t.astype(jnp.float32))[..., None, None]   # [B,H,1,1]
+    outer = (x_t.astype(jnp.float32)[..., None]
+             * b_t.astype(jnp.float32)[:, None, None, :])        # [B,H,P,N]
+    new_state = state * decay + outer
+    y = jnp.einsum("bhpn,bn->bhp", new_state,
+                   c_t.astype(jnp.float32))
+    return y.astype(x_t.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 mixer layer
+# ---------------------------------------------------------------------------
+
+
+def init_mamba(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    mc = cfg.mamba
+    di = mc.d_inner(d)
+    nh = mc.n_heads(d)
+    n = mc.d_state
+    conv_ch = di + 2 * n
+    ks = jax.random.split(key, 4)
+    # dt bias init: softplus^-1 of dt in [1e-3, 1e-1] (mamba default ~ 0.001..0.1)
+    dt = jnp.exp(jax.random.uniform(ks[2], (nh,), jnp.float32)
+                 * (jnp.log(0.1) - jnp.log(0.001)) + jnp.log(0.001))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))      # inverse softplus
+    return {
+        "norm": init_rms_norm(d),
+        "in_proj": dense_init(ks[0], (d, 2 * di + 2 * n + nh), in_axis_size=d),
+        "conv_w": dense_init(ks[1], (mc.d_conv, conv_ch), in_axis_size=mc.d_conv),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": dt_bias,
+        "gate_norm": init_rms_norm(di),
+        "out_proj": dense_init(ks[3], (di, d), in_axis_size=di),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    d = cfg.d_model
+    mc = cfg.mamba
+    di = mc.d_inner(d)
+    n = mc.d_state
+    nh = mc.n_heads(d)
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di: 2 * di + 2 * n]
+    dt = zxbcdt[..., 2 * di + 2 * n:]
+    return z, xbc, dt, di, n, nh
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                 prev: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv over sequence. xbc: [B, S, C]; w: [K, C]."""
+    k = w.shape[0]
+    if prev is None:
+        pad = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = prev.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)          # [B, S+K-1, C]
+    out = sum(xp[:, i: i + xbc.shape[1]] * w[i].astype(xbc.dtype)
+              for i in range(k))
+    return jax.nn.silu(out + b.astype(xbc.dtype))
+
+
+def mamba_mixer(params: Params, cfg: ModelConfig, x: jax.Array,
+                use_kernel: bool = False) -> jax.Array:
+    """Full-sequence Mamba-2 mixer (train / prefill). x: [B, S, d]."""
+    y, _ = mamba_mixer_with_state(params, cfg, x, use_kernel=use_kernel)
+    return y
+
+
+def mamba_mixer_with_state(params: Params, cfg: ModelConfig, x: jax.Array,
+                           use_kernel: bool = False
+                           ) -> Tuple[jax.Array, Params]:
+    """Mixer that also returns the decode cache (final SSM + conv state)."""
+    dtype = x.dtype
+    mc = cfg.mamba
+    zxbcdt = x @ params["in_proj"].astype(dtype)
+    z, xbc_raw, dt, di, n, nh = _split_proj(cfg, zxbcdt)
+    # conv cache: the last (d_conv - 1) *raw* channel inputs
+    k1 = mc.d_conv - 1
+    if xbc_raw.shape[1] >= k1:
+        conv_tail = xbc_raw[:, -k1:] if k1 else xbc_raw[:, :0]
+    else:
+        conv_tail = jnp.pad(xbc_raw,
+                            ((0, 0), (k1 - xbc_raw.shape[1], 0), (0, 0)))
+    xbc = _causal_conv(xbc_raw, params["conv_w"], params["conv_b"])
+    xs = xbc[..., :di]
+    b_mat = xbc[..., di: di + n]
+    c_mat = xbc[..., di + n:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"])                    # [B,S,H]
+    a = -jnp.exp(params["A_log"])                                # [H]
+    xh = xs.reshape(*xs.shape[:2], nh, mc.head_dim)              # [B,S,H,P]
+    x_scaled = xh * dt[..., None].astype(dtype)
+    da = dt * a                                                  # [B,S,H]
+    s = x.shape[1]
+    chunk = min(mc.chunk_size, s)
+    if s % chunk != 0:  # pad to a chunk multiple (masked timesteps decay=1,x=0)
+        pad = chunk - s % chunk
+        x_scaled = jnp.pad(x_scaled, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        da = jnp.pad(da, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0)))
+    if use_kernel:
+        from repro.kernels.ssd_scan import ops as ssd_ops
+        y, final_state = ssd_ops.ssd(x_scaled, da, b_mat, c_mat, chunk)
+    else:
+        y, final_state = ssd_reference(x_scaled, da, b_mat, c_mat, chunk)
+    y = y[:, :s]
+    y = y + xh * params["D"].astype(dtype)[None, None, :, None]
+    y = y.reshape(*x.shape[:2], di)
+    y = rms_norm(params["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = y @ params["out_proj"].astype(dtype)
+    return out, {"conv": conv_tail, "ssm": final_state}
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype) -> Params:
+    d = cfg.d_model
+    mc = cfg.mamba
+    di = mc.d_inner(d)
+    n = mc.d_state
+    nh = mc.n_heads(d)
+    return {
+        "conv": jnp.zeros((batch, mc.d_conv - 1, di + 2 * n), dtype),
+        "ssm": jnp.zeros((batch, nh, mc.head_dim, n), jnp.float32),
+    }
+
+
+def mamba_decode(params: Params, cfg: ModelConfig, x: jax.Array,
+                 cache: Params) -> Tuple[jax.Array, Params]:
+    """One-token recurrent step. x: [B, 1, d]."""
+    dtype = x.dtype
+    mc = cfg.mamba
+    zxbcdt = x @ params["in_proj"].astype(dtype)
+    z, xbc, dt, di, n, nh = _split_proj(cfg, zxbcdt)
+    # conv over (cached window + new token)
+    conv_in = jnp.concatenate([cache["conv"].astype(dtype), xbc], axis=1)
+    w = params["conv_w"].astype(dtype)
+    out = sum(conv_in[:, i: i + 1] * w[i] for i in range(mc.d_conv))
+    xbc_t = jax.nn.silu(out + params["conv_b"].astype(dtype))    # [B,1,C]
+    new_conv = conv_in[:, 1:]
+    xs = xbc_t[..., :di]
+    b_t = xbc_t[:, 0, di: di + n]
+    c_t = xbc_t[:, 0, di + n:]
+    dt_t = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                           + params["dt_bias"])                  # [B,H]
+    a = -jnp.exp(params["A_log"])
+    xh = xs[:, 0].reshape(-1, nh, mc.head_dim)                   # [B,H,P]
+    y_t, new_ssm = ssd_recurrent_step(
+        cache["ssm"], xh * dt_t[..., None].astype(dtype), dt_t * a, b_t, c_t)
+    y_t = y_t + xh * params["D"].astype(dtype)[None, :, None]
+    y = y_t.reshape(-1, 1, di)
+    y = rms_norm(params["gate_norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    y = y @ params["out_proj"].astype(dtype)
+    return y, {"conv": new_conv, "ssm": new_ssm}

@@ -1,0 +1,161 @@
+"""Batched serving engine: continuous batching over a fixed-slot cache.
+
+Production-shaped serving loop for the model zoo:
+  * a fixed number of batch *slots*, each owning a segment of the KV/SSM
+    cache (ring-cache aware for sliding-window archs);
+  * waiting requests are admitted in waves into free slots (left-padded
+    to a common length), prefilled as one batch, then decoded in
+    lock-step; finished slots free early (EOS / max tokens) while the
+    rest keep decoding;
+  * greedy or temperature sampling, max-token / EOS termination.
+
+The engine is deliberately host-driven (admission control is control
+plane); the only jitted device functions are the model's ``prefill`` and
+``decode_step``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+
+Params = Any
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                 # [S] or [CB, S] token ids
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    temperature: float = 0.0
+    # filled by the engine
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, model, params: Params, n_slots: int = 4,
+                 max_len: int = 512, seed: int = 0):
+        self.model = model
+        self.cfg: ModelConfig = model.cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.rng = jax.random.key(seed)
+        # one shared cache with a batch dim == n_slots; slots stay
+        # position-aligned by LEFT-padding prompts at admission time
+        self.cache = model.init_cache(n_slots, max_len)
+        self.slot_req: List[Optional[Request]] = [None] * n_slots
+        self.waiting: List[Request] = []
+        self._decode = jax.jit(model.decode_step)
+
+    # -- queue API -----------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        self.waiting.append(req)
+
+    @property
+    def active(self) -> int:
+        return sum(r is not None for r in self.slot_req)
+
+    def has_work(self) -> bool:
+        return bool(self.waiting) or self.active > 0
+
+    # -- internals ------------------------------------------------------------
+
+    def _sample(self, logits, temperature: float) -> jax.Array:
+        lg = logits[..., -1, :]
+        if temperature <= 0:
+            return jnp.argmax(lg, axis=-1)
+        self.rng, sub = jax.random.split(self.rng)
+        return jax.random.categorical(sub, lg / temperature, axis=-1)
+
+    # -- main loop -------------------------------------------------------------
+
+    def step(self) -> List[Request]:
+        """Admit + decode one step. Returns requests completed this step.
+
+        Simplified continuous batching: all active slots share one decode
+        cadence; admission happens whenever a slot is free.  To keep the
+        single shared ``index`` consistent across slots, the engine admits
+        only when the queue position matches — prompts are left-padded to
+        the current shared length (standard same-length batching).
+        """
+        completed: List[Request] = []
+        # admission: all slots empty -> start a fresh generation wave
+        if self.active == 0 and self.waiting:
+            wave = self.waiting[: self.n_slots]
+            self.waiting = self.waiting[len(wave):]
+            self.cache = self.model.init_cache(self.n_slots, self.max_len)
+            max_prompt = max(len(r.prompt if r.prompt.ndim == 1
+                                 else r.prompt[0]) for r in wave)
+            prompts = []
+            for slot, req in enumerate(wave):
+                self.slot_req[slot] = req
+                p = np.asarray(req.prompt)
+                pad = max_prompt - (len(p) if p.ndim == 1 else p.shape[-1])
+                if p.ndim == 1:
+                    p = np.pad(p, (pad, 0))
+                else:
+                    p = np.pad(p, ((0, 0), (pad, 0)))
+                prompts.append(p)
+            batch = np.zeros((self.n_slots,) + prompts[0].shape, np.int32)
+            for i, p in enumerate(prompts):
+                batch[i] = p
+            logits, self.cache = self.model.prefill(
+                self.params, jnp.asarray(batch), self.cache)
+            tok = self._sample(logits, wave[0].temperature)
+            self._last_tok = tok
+            flat = np.asarray(tok).reshape(self.n_slots, -1)
+            for slot, req in enumerate(self.slot_req):
+                if req is not None:
+                    self._append_and_check(slot, req, int(flat[slot, 0]),
+                                           completed)
+            return completed
+
+        if self.active == 0:
+            return completed
+
+        # decode step for all active slots
+        tok = self._last_tok
+        if self.cfg.n_codebooks > 1:
+            inp = tok.reshape(self.n_slots, self.cfg.n_codebooks, 1)
+        else:
+            inp = tok.reshape(self.n_slots, 1)
+        logits, self.cache = self._decode(self.params,
+                                          jnp.asarray(inp, jnp.int32),
+                                          self.cache)
+        temperature = next(r.temperature for r in self.slot_req
+                           if r is not None)
+        tok = self._sample(logits, temperature)
+        self._last_tok = tok
+        flat = np.asarray(tok).reshape(self.n_slots, -1)
+        for slot, req in enumerate(self.slot_req):
+            if req is not None:
+                self._append_and_check(slot, req, int(flat[slot, 0]),
+                                       completed)
+        return completed
+
+    def _append_and_check(self, slot: int, req: Request, t: int,
+                          completed: List[Request]) -> None:
+        req.output.append(t)
+        if (len(req.output) >= req.max_new_tokens
+                or (req.eos_id is not None and t == req.eos_id)):
+            req.done = True
+            completed.append(req)
+            self.slot_req[slot] = None
+
+    def run(self, max_steps: int = 10_000) -> List[Request]:
+        done: List[Request] = []
+        for _ in range(max_steps):
+            if not self.has_work():
+                break
+            done += self.step()
+        return done

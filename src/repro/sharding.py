@@ -1,0 +1,213 @@
+"""Per-architecture sharding-rule resolver.
+
+Maps every parameter / activation / cache tensor to a PartitionSpec for the
+production meshes.  Rules are *name + shape* based and divisibility-checked
+against the actual mesh axis sizes, because the assigned architectures have
+head counts (40, 56, 36, 24...) that do not all divide the 16-way model
+axis: the resolver prefers sharding heads, falls back to head_dim, then to
+replication — recorded per-arch by the dry-run.
+
+Conventions:
+  * ``model`` axis: tensor-parallel dim (heads / d_ff / experts / d_inner).
+  * ``data`` (+ ``pod``) axes: the batch — and, for the batch=1 long-context
+    shape, the KV-cache *sequence* dim instead (flash-decoding style).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def edge_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _div(n: int, m: int) -> bool:
+    return m > 0 and n % m == 0
+
+
+def _param_spec(name: str, shape: Tuple[int, ...], ms: int) -> P:
+    """PartitionSpec for one parameter leaf (no stacking dim)."""
+    nd = len(shape)
+
+    def pick(*cands: Tuple[int, str]) -> P:
+        """First candidate dim divisible by the model-axis size wins."""
+        spec: list = [None] * nd
+        for dim, axis in cands:
+            if _div(shape[dim], ms):
+                spec[dim] = axis
+                return P(*spec)
+        return P(*spec)
+
+    if name == "embed":
+        if nd == 3:                       # [CB, V, d]
+            return pick((1, "model"), (2, "model"))
+        return pick((0, "model"), (1, "model"))          # [V, d]
+    if name == "lm_head":
+        if nd == 3:                       # [CB, d, V]
+            return pick((2, "model"), (1, "model"))
+        return pick((1, "model"), (0, "model"))          # [d, V]
+    if name in ("wq", "wk", "wv"):        # [d, H, hd]
+        return pick((1, "model"), (2, "model"))
+    if name == "wo" and nd == 3:          # [H, hd, d]
+        return pick((0, "model"), (1, "model"))
+    if name == "wo" and nd == 2:          # mlp down [f, d]
+        return pick((0, "model"))
+    if name in ("bq", "bk", "bv"):        # [H, hd]
+        return pick((0, "model"), (1, "model"))
+    if name in ("wi_gate", "wi_up", "ws_gate", "ws_up"):  # [d, f]
+        return pick((1, "model"))
+    if name == "ws_down":                 # [f, d]
+        return pick((0, "model"))
+    if name == "router":                  # [d, E]
+        return pick((1, "model"))
+    if name in ("we_gate", "we_up"):      # [E, d, f]
+        return pick((0, "model"), (2, "model"))
+    if name == "we_down":                 # [E, f, d]
+        return pick((0, "model"), (1, "model"))
+    if name == "in_proj":                 # [d, 2di+2n+nh]
+        return pick((1, "model"))
+    if name == "conv_w":                  # [K, C]
+        return pick((1, "model"))
+    if name in ("conv_b", "gate_norm", "A_log", "D", "dt_bias"):
+        return pick((0, "model"))
+    if name == "out_proj":                # [di, d]
+        return pick((0, "model"))
+    # norms, scalars, classic-model params: replicate
+    return P(*([None] * nd))
+
+
+def param_specs(cfg: ModelConfig, mesh: Mesh, params_shape: Any,
+                fsdp: bool = False) -> Any:
+    """PartitionSpec pytree matching ``params_shape`` (eval_shape output).
+
+    ``fsdp=True`` additionally shards each parameter's largest still-
+    unsharded dim over the edge (pod+data) axes when divisible — the
+    ZeRO-3/FSDP layout used by the baseline ``train_step`` so that e.g.
+    jamba-398B optimizer state spreads over all chips, not just the
+    ``model`` axis.
+    """
+    ms = _axis_size(mesh, "model")
+    ea = edge_axes(mesh)
+    n_edge = _prod(_axis_size(mesh, a) for a in ea)
+
+    def add_fsdp(spec: P, shape: Tuple[int, ...]) -> P:
+        if not fsdp or len(shape) < 2 or n_edge <= 1:
+            return spec
+        dims = sorted(range(len(shape)), key=lambda i: -shape[i])
+        out = list(spec) + [None] * (len(shape) - len(spec))
+        for i in dims:
+            if out[i] is None and _div(shape[i], n_edge):
+                out[i] = ea
+                return P(*out)
+        return spec
+
+    def leaf_spec(path, leaf) -> P:
+        keys = [getattr(k, "key", getattr(k, "idx", None))
+                for k in path]
+        name = next((k for k in reversed(keys) if isinstance(k, str)
+                     and not k.startswith("sub")), "")
+        # scanned models stack group params on a leading n_groups dim;
+        # unrolled models keep a list of per-group dicts (no extra dim)
+        stacked = ("groups" in keys) and cfg.scan_layers
+        shape = leaf.shape
+        if stacked:
+            base = add_fsdp(_param_spec(name, shape[1:], ms), shape[1:])
+            return P(None, *base)
+        return add_fsdp(_param_spec(name, shape, ms), shape)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, params_shape)
+
+
+def batch_spec(mesh: Mesh) -> P:
+    """Token batches: batch dim over the edge (pod+data) axes."""
+    return P(edge_axes(mesh))
+
+
+def batch_sharding(cfg: ModelConfig, mesh: Mesh, batch_shape: Any,
+                   shard_batch: bool = True) -> Any:
+    """Shardings for a train/prefill input batch pytree."""
+    ea = edge_axes(mesh)
+
+    def leaf(path, x) -> P:
+        keys = [getattr(k, "key", None) for k in path]
+        nd = len(x.shape)
+        if not shard_batch or x.shape[0] % max(
+                1, _prod(_axis_size(mesh, a) for a in ea)):
+            return P(*([None] * nd))
+        if "prefix_emb" in keys:
+            return P(ea, None, None)
+        return P(ea, *([None] * (nd - 1)))
+
+    return jax.tree_util.tree_map_with_path(leaf, batch_shape)
+
+
+def _prod(it) -> int:
+    out = 1
+    for v in it:
+        out *= v
+    return out
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, cache_shape: Any,
+                batch: int) -> Any:
+    """PartitionSpecs for the decode cache.
+
+    batch >= n_edge_devices -> shard batch over edge axes; batch == 1
+    (long-context) -> shard the KV *sequence* dim over the edge axes
+    instead, giving flash-decoding-style partial-softmax collectives.
+    """
+    ms = _axis_size(mesh, "model")
+    ea = edge_axes(mesh)
+    n_edge = _prod(_axis_size(mesh, a) for a in ea)
+    shard_batch = _div(batch, n_edge)
+
+    def leaf_spec(path, leaf) -> P:
+        keys = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+        name = next((k for k in reversed(keys) if isinstance(k, str)
+                     and not k.startswith("sub")), "")
+        stacked = ("groups" in keys) and cfg.scan_layers
+        shape = leaf.shape[1:] if stacked else leaf.shape
+        nd = len(shape)
+        spec: list = [None] * nd
+        if name in ("k", "v"):            # [B, S, KV, hd]
+            if shard_batch:
+                spec[0] = ea
+            elif _div(shape[1], n_edge):
+                spec[1] = ea              # seq-sharded KV (batch=1)
+            if _div(shape[2], ms):
+                spec[2] = "model"
+            elif _div(shape[3], ms):
+                spec[3] = "model"
+        elif name == "conv":              # [B, K-1, C]
+            if shard_batch:
+                spec[0] = ea
+            if _div(shape[2], ms):
+                spec[2] = "model"
+        elif name == "ssm":               # [B, H, P, N]
+            if shard_batch:
+                spec[0] = ea
+            if _div(shape[1], ms):
+                spec[1] = "model"
+            elif _div(shape[2], ms):
+                spec[2] = "model"
+        # "index": replicated scalar
+        if stacked:
+            return P(None, *spec)
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, cache_shape)
+
+
+def to_shardings(mesh: Mesh, specs: Any) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,11 @@
+from repro.train.optimizer import (OptState, apply_updates, init_opt_state,
+                                   lr_schedule)
+from repro.train.state import (TrainState, init_train_state, make_decode_step,
+                               make_eval_step, make_prefill_step,
+                               make_train_step)
+
+__all__ = [
+    "OptState", "apply_updates", "init_opt_state", "lr_schedule",
+    "TrainState", "init_train_state", "make_train_step", "make_eval_step",
+    "make_prefill_step", "make_decode_step",
+]

@@ -1,0 +1,87 @@
+"""Dependency-free checkpointing: pytrees <-> .npz files.
+
+Paths are serialized as '/'-joined key strings; restore rebuilds into a
+template pytree (shape/dtype validated), so it round-trips params, opt
+state, EL runtime state, and bandit state alike.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        elif hasattr(k, "name"):
+            parts.append(str(k.name))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def save(path: str, tree: Any, step: int | None = None) -> None:
+    flat = {}
+    for kp, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _path_str(kp) or "_root"
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:
+            flat["bf16:" + key] = arr.astype(np.float32)
+        else:
+            flat[key] = arr
+    if step is not None:
+        flat["_ckpt_step"] = np.asarray(step)
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **flat)
+
+
+def restore(path: str, template: Any) -> Any:
+    """Load a checkpoint into the structure of ``template``."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz",
+                   allow_pickle=False)
+    stored: Dict[str, np.ndarray] = {}
+    bf16 = set()
+    for k in data.files:
+        if k.startswith("bf16:"):
+            stored[k[5:]] = data[k]
+            bf16.add(k[5:])
+        else:
+            stored[k] = data[k]
+
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(template)
+    out = []
+    for kp, leaf in leaves:
+        key = _path_str(kp) or "_root"
+        if key not in stored:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = stored[key]
+        want = jnp.asarray(leaf)
+        if key in bf16:
+            arr = arr.astype(jnp.bfloat16)
+        got = jnp.asarray(arr).astype(want.dtype)
+        if got.shape != want.shape:
+            raise ValueError(
+                f"shape mismatch for {key!r}: ckpt {got.shape} "
+                f"vs template {want.shape}")
+        out.append(got)
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(template), out)
+
+
+def latest_step(path: str) -> int | None:
+    try:
+        data = np.load(path if path.endswith(".npz") else path + ".npz")
+    except FileNotFoundError:
+        return None
+    if "_ckpt_step" in data.files:
+        return int(data["_ckpt_step"])
+    return None

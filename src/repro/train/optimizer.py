@@ -1,0 +1,126 @@
+"""Optimizers and LR schedules (no optax dependency — built in JAX).
+
+Supports AdamW and SGD(+momentum) with global-norm gradient clipping, and
+three schedules: cosine, constant, and MiniCPM's Warmup-Stable-Decay (WSD)
+[arXiv:2404.06395] — warmup, a long constant plateau, then a short decay
+tail starting at ``decay_start_frac`` of total steps.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+
+def lr_schedule(cfg: TrainConfig, step: jax.Array) -> jax.Array:
+    """Learning rate at ``step`` (0-based), as a traced scalar."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.asarray(max(cfg.warmup_steps, 1), jnp.float32)
+    total = jnp.asarray(max(cfg.total_steps, 1), jnp.float32)
+    peak = jnp.asarray(cfg.peak_lr, jnp.float32)
+    floor = peak * cfg.min_lr_ratio
+    warmup_lr = peak * jnp.minimum(step + 1.0, warm) / warm
+    if cfg.schedule == "constant":
+        post = peak
+    elif cfg.schedule == "wsd":
+        decay_start = total * cfg.decay_start_frac
+        frac = jnp.clip((step - decay_start)
+                        / jnp.maximum(total - decay_start, 1.0), 0.0, 1.0)
+        post = peak - (peak - floor) * frac            # linear decay tail
+    else:  # cosine
+        frac = jnp.clip((step - warm) / jnp.maximum(total - warm, 1.0),
+                        0.0, 1.0)
+        post = floor + 0.5 * (peak - floor) * (1.0 + jnp.cos(jnp.pi * frac))
+    return jnp.where(step < warm, warmup_lr, post)
+
+
+# ---------------------------------------------------------------------------
+# Optimizer
+# ---------------------------------------------------------------------------
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Params            # first moment (adamw) / momentum buffer (sgd)
+    nu: Params            # second moment (adamw) / unused zeros (sgd)
+
+
+def init_opt_state(cfg: TrainConfig, params: Params) -> OptState:
+    mdt = jnp.dtype(cfg.opt_state_dtype)
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, mdt), params)
+    if cfg.optimizer == "sgd" and cfg.momentum == 0.0:
+        # no buffers needed; keep shape-compatible empty moments
+        zeros_nu = jax.tree.map(lambda p: jnp.zeros((), mdt), params)
+    else:
+        zeros_nu = zeros
+    return OptState(step=jnp.zeros((), jnp.int32), mu=zeros, nu=zeros_nu)
+
+
+def clip_by_global_norm(grads: Params, max_norm: float
+                        ) -> Tuple[Params, jax.Array]:
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    if max_norm <= 0:
+        return grads, gnorm
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), gnorm
+
+
+def apply_updates(cfg: TrainConfig, params: Params, grads: Params,
+                  opt_state: OptState
+                  ) -> Tuple[Params, OptState, Dict[str, jax.Array]]:
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = opt_state.step
+    lr = lr_schedule(cfg, step)
+    if cfg.optimizer == "sgd":
+        if cfg.momentum > 0.0:
+            mu = jax.tree.map(lambda m, g: cfg.momentum * m + g,
+                              opt_state.mu, grads)
+            update = mu
+        else:
+            mu, update = opt_state.mu, grads
+        new_params = jax.tree.map(
+            lambda p, u: (p - lr * (u + cfg.weight_decay
+                                    * p.astype(jnp.float32))).astype(p.dtype),
+            params, update)
+        new_state = OptState(step + 1, mu, opt_state.nu)
+    else:  # adamw
+        b1, b2 = cfg.beta1, cfg.beta2
+        mdt = jnp.dtype(cfg.opt_state_dtype)
+        # moments stored in opt_state_dtype; update math in fp32
+        mu = jax.tree.map(
+            lambda m, g: (b1 * m.astype(jnp.float32)
+                          + (1 - b1) * g).astype(mdt),
+            opt_state.mu, grads)
+        nu = jax.tree.map(
+            lambda v, g: (b2 * v.astype(jnp.float32)
+                          + (1 - b2) * jnp.square(g)).astype(mdt),
+            opt_state.nu, grads)
+        t = (step + 1).astype(jnp.float32)
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        def upd(p, m, v):
+            m = m.astype(jnp.float32)
+            v = v.astype(jnp.float32)
+            mhat = m / bc1
+            vhat = v / bc2
+            u = mhat / (jnp.sqrt(vhat) + 1e-8)
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        new_state = OptState(step + 1, mu, nu)
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}

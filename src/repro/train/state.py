@@ -1,0 +1,67 @@
+"""Train state + step factories."""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+from repro.train.optimizer import OptState, apply_updates, init_opt_state
+
+Params = Any
+
+
+class TrainState(NamedTuple):
+    params: Params
+    opt: OptState
+
+
+def init_train_state(model, train_cfg: TrainConfig,
+                     rng: jax.Array) -> TrainState:
+    params = model.init(rng)
+    return TrainState(params=params, opt=init_opt_state(train_cfg, params))
+
+
+def make_train_step(model, train_cfg: TrainConfig):
+    """Standard synchronous train step: grad -> clip -> update."""
+
+    def train_step(state: TrainState, batch: Dict[str, jax.Array]
+                   ) -> Tuple[TrainState, Dict[str, jax.Array]]:
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss, has_aux=True)(state.params, batch)
+        params, opt, opt_metrics = apply_updates(
+            train_cfg, state.params, grads, state.opt)
+        metrics = dict(metrics, **opt_metrics)
+        return TrainState(params, opt), metrics
+
+    return train_step
+
+
+def make_eval_step(model):
+    def eval_step(params: Params, batch: Dict[str, jax.Array]
+                  ) -> Dict[str, jax.Array]:
+        _, metrics = model.loss(params, batch)
+        return metrics
+
+    return eval_step
+
+
+def make_prefill_step(model, last_only: bool = False):
+    def prefill_step(params: Params, batch: Dict[str, jax.Array]
+                     ) -> jax.Array:
+        logits, _ = model.forward(params, batch["tokens"],
+                                  batch.get("prefix_emb"),
+                                  last_only=last_only)
+        return logits
+
+    return prefill_step
+
+
+def make_decode_step(model):
+    def decode_step(params: Params, tokens: jax.Array, cache: Any
+                    ) -> Tuple[jax.Array, Any]:
+        return model.decode_step(params, tokens, cache)
+
+    return decode_step

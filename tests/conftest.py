@@ -1,0 +1,35 @@
+"""Shared pytest fixtures.
+
+NOTE: no XLA_FLAGS manipulation here — smoke tests and benches must see the
+single real CPU device.  Multi-device tests spawn subprocesses that set
+``--xla_force_host_platform_device_count`` themselves (see
+``tests/test_dryrun.py``).
+"""
+
+import os
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.key(0)
+
+
+@pytest.fixture()
+def np_rng():
+    return np.random.default_rng(0)
+
+
+def assert_finite(tree, name="tree"):
+    import jax.numpy as jnp
+    for i, leaf in enumerate(jax.tree.leaves(tree)):
+        assert bool(jnp.all(jnp.isfinite(leaf.astype(jnp.float32)))), \
+            f"non-finite values in {name} leaf {i}"

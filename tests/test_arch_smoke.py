@@ -1,0 +1,134 @@
+"""Per-architecture smoke tests (deliverable f).
+
+For each assigned arch: instantiate the REDUCED same-family variant and run
+one forward + one train step + one prefill/decode step on CPU, asserting
+output shapes and the absence of NaNs.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.config import ARCH_IDS, get_smoke_config
+from repro.data import SyntheticLMData
+from repro.models import build_model
+from repro.train import init_train_state, make_train_step
+
+from conftest import assert_finite
+
+
+def _batch(cfg, b=2, s=32):
+    data = SyntheticLMData.for_model(cfg.model, b, s)
+    return data.batch(0, 0)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_and_finite(arch):
+    cfg = get_smoke_config(arch)
+    m = build_model(cfg.model)
+    params = m.init(jax.random.key(0))
+    batch = _batch(cfg)
+    logits, aux = m.forward(params, batch["tokens"],
+                            batch.get("prefix_emb"))
+    mc = cfg.model
+    b, s = 2, 32
+    n_prefix = mc.num_prefix_embeddings
+    if mc.n_codebooks > 1:
+        assert logits.shape == (b, mc.n_codebooks, s, mc.vocab_size)
+    else:
+        assert logits.shape == (b, s + n_prefix, mc.vocab_size)
+    assert_finite(logits, f"{arch} logits")
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_decreases_nothing_nan(arch):
+    cfg = get_smoke_config(arch)
+    m = build_model(cfg.model)
+    state = init_train_state(m, cfg.train, jax.random.key(0))
+    step = jax.jit(make_train_step(m, cfg.train))
+    batch = _batch(cfg)
+    state, metrics = step(state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    assert metrics["grad_norm"] > 0.0
+    assert_finite(state.params, f"{arch} params after step")
+    assert int(state.opt.step) == 1
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_step_shapes(arch):
+    cfg = get_smoke_config(arch)
+    m = build_model(cfg.model)
+    params = m.init(jax.random.key(0))
+    mc = cfg.model
+    b = 2
+    cache = m.init_cache(b, 64)
+    if mc.n_codebooks > 1:
+        tok = jnp.ones((b, mc.n_codebooks, 1), jnp.int32)
+    else:
+        tok = jnp.ones((b, 1), jnp.int32)
+    logits, cache = m.decode_step(params, tok, cache)
+    if mc.n_codebooks > 1:
+        assert logits.shape == (b, mc.n_codebooks, 1, mc.vocab_size)
+    else:
+        assert logits.shape == (b, 1, mc.vocab_size)
+    assert int(cache["index"]) == 1
+    assert_finite(logits, f"{arch} decode logits")
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "mamba2-370m",
+                                  "jamba-1.5-large-398b", "olmoe-1b-7b"])
+def test_prefill_decode_matches_forward(arch):
+    """Strong consistency: prefill+decode logits == full-forward logits."""
+    cfg = get_smoke_config(arch)
+    model_cfg = dataclasses.replace(cfg.model, dtype="float32")
+    m = build_model(model_cfg)
+    params = m.init(jax.random.key(1))
+    b, s = 2, 24
+    tokens = jax.random.randint(jax.random.key(2), (b, s), 0,
+                                model_cfg.vocab_size)
+    full_logits, _ = m.forward(params, tokens)
+    cache = m.init_cache(b, s + 8)
+    _, cache = m.prefill(params, tokens[:, :-1], cache)
+    dec_logits, _ = m.decode_step(params, tokens[:, -1:], cache)
+    err = jnp.max(jnp.abs(full_logits[:, -1] - dec_logits[:, 0]))
+    assert float(err) < 2e-3, f"{arch}: prefill/decode mismatch {err}"
+
+
+def test_fused_xent_matches_baseline_loss():
+    """§Perf optimization: sharded cross-entropy == gather cross-entropy."""
+    import dataclasses
+    from repro.config import get_smoke_config
+    cfg = dataclasses.replace(get_smoke_config("qwen3-1.7b").model,
+                              dtype="float32")
+    m0 = build_model(cfg)
+    m1 = build_model(cfg, fused_xent=True)
+    params = m0.init(jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 32), 0, cfg.vocab_size)
+    l0, _ = m0.loss(params, {"tokens": toks})
+    l1, _ = m1.loss(params, {"tokens": toks})
+    assert abs(float(l0) - float(l1)) < 1e-5
+    g0 = jax.grad(lambda p: m0.loss(p, {"tokens": toks})[0])(params)
+    g1 = jax.grad(lambda p: m1.loss(p, {"tokens": toks})[0])(params)
+    for a, b in zip(jax.tree.leaves(g0), jax.tree.leaves(g1)):
+        assert float(jnp.max(jnp.abs(a - b))) < 1e-4
+
+
+def test_window_slice_decode_matches_masked():
+    """§Perf optimization: windowed KV slice decode == masked full-cache."""
+    import dataclasses
+    from repro.config import get_smoke_config
+    cfg = dataclasses.replace(get_smoke_config("qwen3-1.7b").model,
+                              dtype="float32", sliding_window=16)
+    m0 = build_model(cfg)
+    m1 = build_model(cfg, window_slice=True)
+    params = m0.init(jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 40), 0, cfg.vocab_size)
+    c0, c1 = m0.init_cache(2, 48), m1.init_cache(2, 48)
+    _, c0 = m0.prefill(params, toks, c0)
+    _, c1 = m1.prefill(params, toks, c1)
+    l0, _ = m0.decode_step(params, toks[:, -1:], c0)
+    l1, _ = m1.decode_step(params, toks[:, -1:], c1)
+    assert float(jnp.max(jnp.abs(l0 - l1))) < 1e-4

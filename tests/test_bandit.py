@@ -1,0 +1,146 @@
+"""Budget-limited MAB: invariants + behaviour (unit + hypothesis property)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bandit import (BanditState, arm_costs, regret_oracle,
+                               select_arm)
+
+POLICIES = ["ol4el", "ucb_bv", "greedy", "freq_only", "eps_greedy",
+            "uniform", "fixed_i"]
+
+
+def test_arm_costs_linear_in_interval():
+    c = arm_costs(5, comp_cost=10.0, comm_cost=50.0)
+    assert np.allclose(c, [60, 70, 80, 90, 100])
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_never_selects_unaffordable(policy):
+    rng = np.random.default_rng(0)
+    costs = arm_costs(6, 10.0, 50.0)      # 60..110
+    st_ = BanditState.create(6)
+    for t in range(200):
+        budget = rng.uniform(0, 130)
+        arm = select_arm(st_, budget, costs, policy=policy, rng=rng)
+        if arm >= 0:
+            assert costs[arm] <= budget + 1e-9
+            st_.update(arm, rng.uniform(), costs[arm])
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_returns_minus_one_when_broke(policy):
+    costs = arm_costs(4, 10.0, 50.0)
+    st_ = BanditState.create(4)
+    assert select_arm(st_, 10.0, costs, policy=policy) == -1
+
+
+def test_initialization_phase_tries_every_arm():
+    """Paper §IV.B: the initial phase tries each feasible arm once."""
+    rng = np.random.default_rng(1)
+    costs = arm_costs(5, 1.0, 2.0)
+    st_ = BanditState.create(5)
+    seen = []
+    for _ in range(5):
+        arm = select_arm(st_, 1000.0, costs, policy="ol4el", rng=rng)
+        seen.append(arm)
+        st_.update(arm, 0.5, costs[arm])
+    assert sorted(seen) == [0, 1, 2, 3, 4]
+
+
+def _simulate(policy, means, costs, budget, seed=0, noise=0.05):
+    rng = np.random.default_rng(seed)
+    st_ = BanditState.create(len(means))
+    residual, total_u, pulls = budget, 0.0, 0
+    while True:
+        arm = select_arm(st_, residual, costs, policy=policy, rng=rng)
+        if arm < 0:
+            break
+        u = means[arm] + noise * rng.standard_normal()
+        st_.update(arm, u, costs[arm])
+        residual -= costs[arm]
+        total_u += means[arm]           # true expected utility earned
+        pulls += 1
+    return total_u, pulls
+
+
+def test_ol4el_beats_uniform_on_skewed_arms():
+    """With one clearly-best density arm, OL4EL should out-earn uniform."""
+    means = np.array([0.05, 0.1, 0.8, 0.15, 0.1])
+    costs = arm_costs(5, 2.0, 10.0)     # 12..20
+    u_ol, _ = zip(*[ _simulate("ol4el", means, costs, 2000.0, s)
+                     for s in range(5) ])
+    u_un, _ = zip(*[ _simulate("uniform", means, costs, 2000.0, s)
+                     for s in range(5) ])
+    assert np.mean(u_ol) > np.mean(u_un) * 1.1
+
+
+def test_greedy_matches_oracle_asymptotically():
+    means = np.array([0.2, 0.9, 0.3])
+    costs = np.array([10.0, 12.0, 11.0])
+    u, pulls = _simulate("greedy", means, costs, 5000.0, noise=0.01)
+    oracle = regret_oracle(means, costs, 5000.0)
+    assert u > 0.85 * oracle
+
+
+def test_ucb_bv_learns_costs():
+    """Variable costs: ucb_bv should discover the cheap-good arm."""
+    rng = np.random.default_rng(3)
+    means_u = np.array([0.3, 0.3, 0.3])
+    means_c = np.array([30.0, 10.0, 30.0])     # arm 1 cheapest
+    st_ = BanditState.create(3)
+    residual = 3000.0
+    picks = []
+    while True:
+        arm = select_arm(st_, residual, means_c, policy="ucb_bv", rng=rng)
+        if arm < 0:
+            break
+        c = means_c[arm] * (1 + 0.2 * rng.standard_normal())
+        c = max(c, 1.0)
+        st_.update(arm, means_u[arm] + 0.05 * rng.standard_normal(), c)
+        residual -= c
+        picks.append(arm)
+    tail = picks[len(picks) // 2:]
+    assert np.mean(np.asarray(tail) == 1) > 0.5
+
+
+@given(
+    n_arms=st.integers(2, 8),
+    comp=st.floats(0.5, 20.0),
+    comm=st.floats(0.5, 50.0),
+    budget=st.floats(10.0, 5000.0),
+    policy=st.sampled_from(POLICIES),
+    seed=st.integers(0, 100),
+)
+@settings(max_examples=60, deadline=None)
+def test_property_budget_never_exceeded(n_arms, comp, comm, budget, policy,
+                                        seed):
+    """System invariant: cumulative cost never exceeds the budget, and
+    termination always happens (-1) once no arm is affordable."""
+    rng = np.random.default_rng(seed)
+    costs = arm_costs(n_arms, comp, comm)
+    st_ = BanditState.create(n_arms)
+    residual = budget
+    for _ in range(10_000):
+        arm = select_arm(st_, residual, costs, policy=policy, rng=rng)
+        if arm < 0:
+            assert (costs > residual + 1e-9).all()
+            break
+        st_.update(arm, rng.uniform(), costs[arm])
+        residual -= costs[arm]
+        assert residual >= -1e-6
+    else:
+        pytest.fail("bandit loop did not terminate")
+
+
+@given(utilities=st.lists(st.floats(0.0, 1.0), min_size=3, max_size=3),
+       seed=st.integers(0, 50))
+@settings(max_examples=30, deadline=None)
+def test_property_state_statistics(utilities, seed):
+    st_ = BanditState.create(3)
+    for i, u in enumerate(utilities):
+        st_.update(i % 3, u, 1.0)
+    assert st_.t == len(utilities)
+    assert st_.counts.sum() == len(utilities)
+    assert np.isclose(st_.utility_sum.sum(), sum(utilities))

@@ -1,0 +1,83 @@
+"""In-graph (jittable) bandit: equivalence with the host bandit + jit/vmap."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.bandit import (BanditState, arm_costs, jax_bandit_init,
+                               jax_bandit_update, jax_select_arm,
+                               jax_selection_weights, select_arm)
+
+
+def test_weights_match_host_policy_distribution():
+    """After identical updates, jnp selection weights ∝ host ol4el weights."""
+    costs = arm_costs(5, 10.0, 50.0)
+    host = BanditState.create(5)
+    dev = jax_bandit_init(5)
+    rng = np.random.default_rng(0)
+    for i in range(25):
+        arm = i % 5
+        u = rng.uniform()
+        host.update(arm, u, costs[arm])
+        dev = jax_bandit_update(dev, jnp.asarray(arm), jnp.asarray(u),
+                                jnp.asarray(costs[arm]))
+    np.testing.assert_array_equal(np.asarray(dev["counts"]), host.counts)
+    np.testing.assert_allclose(np.asarray(dev["utility_sum"]),
+                               host.utility_sum, rtol=1e-6)
+    w = np.asarray(jax_selection_weights(dev, 500.0, jnp.asarray(costs)))
+    # host weight reconstruction (same formula)
+    n = np.maximum(host.counts, 1)
+    ucb = host.mean_utility() + np.sqrt(2.0 * np.log(max(host.t, 2)) / n)
+    density = ucb / costs
+    feasible = costs <= 500.0
+    d = density - density[feasible].min() + 1e-9
+    freq = np.where(feasible, np.floor(500.0 / costs), 0.0)
+    expect = np.where(feasible, np.maximum(d * freq, 1e-12), 0.0)
+    np.testing.assert_allclose(w, expect, rtol=1e-5)
+
+
+def test_jax_select_arm_jits_and_respects_budget():
+    costs = jnp.asarray(arm_costs(4, 10.0, 50.0))
+    state = jax_bandit_init(4)
+    sel = jax.jit(jax_select_arm)
+    # broke: nothing affordable
+    assert int(sel(jax.random.key(0), state, 10.0, costs)) == -1
+    # rich: always feasible, arm in range
+    for i in range(20):
+        arm = int(sel(jax.random.key(i), state, 1000.0, costs))
+        assert 0 <= arm < 4
+        state = jax_bandit_update(state, jnp.asarray(arm),
+                                  jnp.asarray(0.5), costs[arm])
+    assert int(state["t"]) == 20
+
+
+def test_jax_bandit_vmaps_over_edges():
+    """Async mode: one bandit per edge, vmapped selection."""
+    n_edges, k = 4, 5
+    costs = jnp.asarray(arm_costs(k, 10.0, 50.0))
+    states = jax.vmap(lambda _: jax_bandit_init(k))(jnp.arange(n_edges))
+    budgets = jnp.asarray([100.0, 200.0, 500.0, 40.0])
+    rngs = jax.random.split(jax.random.key(0), n_edges)
+    arms = jax.vmap(lambda r, s, b: jax_select_arm(r, s, b, costs))(
+        rngs, states, budgets)
+    arms = np.asarray(arms)
+    assert arms[3] == -1                   # 40 < cheapest arm (60)
+    assert all(0 <= a < k for a in arms[:3])
+    # update all edges in one vmapped call
+    states = jax.vmap(jax_bandit_update)(
+        states, jnp.maximum(jnp.asarray(arms), 0),
+        jnp.full((n_edges,), 0.3), jnp.full((n_edges,), 60.0))
+    assert int(states["t"][0]) == 1
+
+
+def test_initialization_phase_in_graph():
+    costs = jnp.asarray(arm_costs(3, 1.0, 2.0))
+    state = jax_bandit_init(3)
+    seen = set()
+    for i in range(3):
+        arm = int(jax_select_arm(jax.random.key(i), state, 100.0, costs))
+        seen.add(arm)
+        state = jax_bandit_update(state, jnp.asarray(arm),
+                                  jnp.asarray(0.5), costs[arm])
+    assert seen == {0, 1, 2}

@@ -1,0 +1,62 @@
+"""The paper's SVM and K-means models."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import get_config
+from repro.data import make_traffic_dataset, make_wafer_dataset
+from repro.models import build_model
+from repro.models.classic import cluster_f1
+
+
+def test_svm_trains_above_chance():
+    train, test = make_wafer_dataset(n=3000)
+    model = build_model(get_config("svm-wafer").model)
+    params = model.init(jax.random.key(0))
+    rng = np.random.default_rng(0)
+    xb = jnp.asarray(train["x"])
+    yb = jnp.asarray(train["y"])
+    step = jax.jit(lambda p, x, y: model.local_step(p, {"x": x, "y": y},
+                                                    0.05)[0])
+    for _ in range(100):
+        idx = rng.integers(0, len(train["y"]), 128)
+        params = step(params, xb[idx], yb[idx])
+    acc = model.evaluate(params, {k: jnp.asarray(v)
+                                  for k, v in test.items()})["accuracy"]
+    assert acc > 0.6            # chance is 0.125
+
+
+def test_kmeans_lloyd_reduces_inertia():
+    train, test = make_traffic_dataset(n=2000)
+    model = build_model(get_config("kmeans-traffic").model)
+    params = model.init(jax.random.key(0))
+    x = jnp.asarray(train["x"][:512])
+    i0 = float(model.inertia(params, x))
+    for _ in range(20):
+        params, _ = model.local_step(params, {"x": x}, 1.0)
+    i1 = float(model.inertia(params, x))
+    assert i1 < i0 * 0.9
+
+
+def test_kmeans_assign_uses_kernel_consistently():
+    train, _ = make_traffic_dataset(n=500)
+    cfg = get_config("kmeans-traffic").model
+    m_ref = build_model(cfg)
+    m_ker = build_model(cfg, use_kernel=True)
+    params = m_ref.init(jax.random.key(2))
+    x = jnp.asarray(train["x"])
+    a1 = np.asarray(m_ref.assign(params, x))
+    a2 = np.asarray(m_ker.assign(params, x))
+    assert (a1 == a2).mean() > 0.999
+
+
+def test_cluster_f1_perfect_and_random():
+    y = np.repeat(np.arange(3), 50)
+    assert cluster_f1(y.copy(), y, 3) == pytest.approx(1.0)
+    perm = np.array([2, 0, 1])[y]       # relabeled clusters, same structure
+    assert cluster_f1(perm, y, 3) == pytest.approx(1.0)
+    rng = np.random.default_rng(0)
+    rand = rng.integers(0, 3, size=y.size)
+    assert cluster_f1(rand, y, 3) < 0.6

@@ -1,0 +1,83 @@
+"""Dry-run integration: lower+compile on a small forced-device mesh in a
+subprocess (keeps the main test process at 1 device), plus HLO collective
+parsing units."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.launch.dryrun import _type_bytes, parse_collectives
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_dryrun(args, out):
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(REPO, "src"),
+               REPRO_DRYRUN_DEVICES="8",
+               REPRO_DEBUG_MESH="2")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--out", out] + args,
+        capture_output=True, text=True, env=env, timeout=900)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch,shape", [
+    ("qwen3-1.7b", "train_4k"),
+    ("olmoe-1b-7b", "decode_32k"),
+    ("mamba2-370m", "long_500k"),
+])
+def test_dryrun_small_mesh(tmp_path, arch, shape):
+    out = str(tmp_path / "dry.jsonl")
+    r = _run_dryrun(["--arch", arch, "--shape", shape, "--mesh", "pod"],
+                    out)
+    assert r.returncode == 0, r.stdout + r.stderr
+    rec = json.loads(open(out).readline())
+    assert rec["ok"], rec
+    assert rec["memory"].get("argument_size_in_bytes", 0) > 0
+    assert "collectives" in rec
+
+
+@pytest.mark.slow
+def test_dryrun_el_round_small_mesh(tmp_path):
+    out = str(tmp_path / "dry_el.jsonl")
+    r = _run_dryrun(["--arch", "qwen3-1.7b", "--shape", "train_4k",
+                     "--step", "el_round", "--mesh", "pod"], out)
+    assert r.returncode == 0, r.stdout + r.stderr
+    rec = json.loads(open(out).readline())
+    assert rec["ok"], rec
+    assert rec["step"] == "el_round"
+    assert rec["n_edges"] == 2            # debug mesh: data axis = 2
+
+
+# ---------------------------------------------------------------------------
+# HLO parsing units
+# ---------------------------------------------------------------------------
+
+
+def test_type_bytes():
+    assert _type_bytes("bf16[4,128]{1,0}") == 4 * 128 * 2
+    assert _type_bytes("f32[16]") == 64
+    assert _type_bytes("(f32[2,2], bf16[4])") == 16 + 8
+    assert _type_bytes("pred[]") == 1
+
+
+def test_parse_collectives_counts_and_bytes():
+    # post-optimization HLO prints operands WITHOUT types; the parser
+    # meters each collective's RESULT type (== operand for all-reduce /
+    # all-to-all / permute; == received payload for all-gather)
+    hlo = """
+  %ar = bf16[8,128]{1,0} all-reduce(%x), replica_groups={}
+  %ag.1 = f32[32,16]{1,0} all-gather(%y), dimensions={0}
+  %p = f32[4]{0} collective-permute(%z), source_target_pairs={{0,1}}
+  %other = f32[4]{0} add(%a, %b)
+"""
+    out = parse_collectives(hlo)
+    assert out["per_op"]["all-reduce"]["count"] == 1
+    assert out["per_op"]["all-reduce"]["bytes"] == 8 * 128 * 2
+    assert out["per_op"]["all-gather"]["bytes"] == 32 * 16 * 4  # result
+    assert out["per_op"]["collective-permute"]["count"] == 1
+    assert "add" not in out["per_op"]

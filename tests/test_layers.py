@@ -1,0 +1,145 @@
+"""Layer-level behaviour: RoPE, RMSNorm, attention paths, mamba mixer."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import MambaConfig, ModelConfig
+from repro.models import layers as L
+from repro.models import mamba2 as M
+
+
+CFG = ModelConfig(d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                  dtype="float32")
+
+
+def test_rms_norm_scale_identity():
+    x = jax.random.normal(jax.random.key(0), (2, 8, 16))
+    y = L.rms_norm(jnp.zeros(16), x)
+    rms = jnp.sqrt(jnp.mean(y ** 2, -1))
+    np.testing.assert_allclose(np.asarray(rms), 1.0, atol=1e-3)
+
+
+def test_rope_preserves_norm_and_relative():
+    x = jax.random.normal(jax.random.key(1), (1, 8, 2, 32))
+    pos = jnp.arange(8)
+    y = L.apply_rope(x, pos, 10000.0)
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(y, axis=-1)),
+                               np.asarray(jnp.linalg.norm(x, axis=-1)),
+                               rtol=1e-5)
+    # relative property: <rope(q,i), rope(k,j)> depends only on i-j
+    q = jax.random.normal(jax.random.key(2), (1, 1, 1, 32))
+    k = jax.random.normal(jax.random.key(3), (1, 1, 1, 32))
+    def dot(i, j):
+        qi = L.apply_rope(q, jnp.array([i]), 10000.0)
+        kj = L.apply_rope(k, jnp.array([j]), 10000.0)
+        return float(jnp.sum(qi * kj))
+    assert dot(3, 1) == pytest.approx(dot(7, 5), rel=1e-4)
+
+
+def test_blocked_attention_matches_naive():
+    cfg = CFG
+    p = L.init_attention(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (2, 96, 64))
+    pos = jnp.arange(96)
+    y_naive = L.attention(p, cfg, x, pos, impl="naive")
+    y_blocked = L.attention(p, cfg, x, pos, impl="blocked")
+    np.testing.assert_allclose(np.asarray(y_naive), np.asarray(y_blocked),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_sliding_window_blocks_distant_tokens():
+    cfg = dataclasses.replace(CFG, sliding_window=8)
+    p = L.init_attention(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (1, 64, 64))
+    pos = jnp.arange(64)
+    y = L.attention(p, cfg, x, pos, impl="naive")
+    # perturbing a token far outside the window must not change the output
+    x2 = x.at[:, 0].add(100.0)
+    y2 = L.attention(p, cfg, x2, pos, impl="naive")
+    np.testing.assert_allclose(np.asarray(y[:, 32:]),
+                               np.asarray(y2[:, 32:]), atol=1e-4)
+
+
+def test_windowed_slice_matches_masked():
+    """The KV-slice optimization must be numerically identical."""
+    cfg = dataclasses.replace(CFG, sliding_window=32)
+    p = L.init_attention(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (1, 256, 64))
+    pos = jnp.arange(256)
+    y_masked = L.attention(p, cfg, x, pos, impl="blocked")
+    y_sliced = L.attention(p, cfg, x, pos, impl="blocked",
+                           window_slice=True)
+    np.testing.assert_allclose(np.asarray(y_masked), np.asarray(y_sliced),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_attention_fill_then_decode_consistent():
+    cfg = CFG
+    p = L.init_attention(jax.random.key(0), cfg)
+    s = 16
+    x = jax.random.normal(jax.random.key(1), (2, s, 64))
+    pos = jnp.arange(s)
+    y_full = L.attention(p, cfg, x, pos, impl="naive")
+    ck = jnp.zeros((2, s + 4, 2, 16))
+    cv = jnp.zeros((2, s + 4, 2, 16))
+    _, ck, cv = L.attention_fill(p, cfg, x[:, :-1], pos[:-1], ck, cv)
+    y_dec, _, _ = L.attention_decode(p, cfg, x[:, -1:], ck, cv,
+                                     jnp.asarray(s - 1, jnp.int32))
+    np.testing.assert_allclose(np.asarray(y_full[:, -1:]),
+                               np.asarray(y_dec), atol=1e-4, rtol=1e-4)
+
+
+def test_qkv_bias_and_qk_norm_paths():
+    for flags in [dict(qkv_bias=True), dict(qk_norm=True),
+                  dict(qkv_bias=True, qk_norm=True)]:
+        cfg = dataclasses.replace(CFG, **flags)
+        p = L.init_attention(jax.random.key(0), cfg)
+        x = jax.random.normal(jax.random.key(1), (1, 8, 64))
+        y = L.attention(p, cfg, x, jnp.arange(8))
+        assert bool(jnp.isfinite(y).all())
+        if flags.get("qkv_bias"):
+            assert "bq" in p
+        if flags.get("qk_norm"):
+            assert "q_norm" in p
+
+
+# ---------------------------------------------------------------------------
+# mamba mixer
+# ---------------------------------------------------------------------------
+
+
+def _mamba_cfg():
+    return ModelConfig(d_model=32, n_layers=1, d_ff=0, dtype="float32",
+                       mamba=MambaConfig(d_state=16, d_conv=4, expand=2,
+                                         head_dim=16, chunk_size=16))
+
+
+def test_mamba_mixer_prefill_decode_chain():
+    cfg = _mamba_cfg()
+    p = M.init_mamba(jax.random.key(0), cfg)
+    s = 24
+    x = jax.random.normal(jax.random.key(1), (2, s, 32))
+    y_full, cache = M.mamba_mixer_with_state(p, cfg, x)
+    # continue decoding one more token from the cached state
+    x_next = jax.random.normal(jax.random.key(2), (2, 1, 32))
+    y_dec, _ = M.mamba_decode(p, cfg, x_next, cache)
+    # reference: full pass over s+1 tokens
+    y_ref, _ = M.mamba_mixer_with_state(
+        p, cfg, jnp.concatenate([x, x_next], axis=1))
+    np.testing.assert_allclose(np.asarray(y_dec), np.asarray(y_ref[:, -1:]),
+                               atol=2e-4, rtol=1e-3)
+
+
+def test_mamba_chunk_padding_is_exact():
+    """seq not a multiple of chunk_size must give identical results."""
+    cfg = _mamba_cfg()                      # chunk 16
+    p = M.init_mamba(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (1, 40, 32))   # 40 % 16 != 0
+    y40 = M.mamba_mixer(p, cfg, x)
+    y48 = M.mamba_mixer(p, cfg, jnp.pad(x, ((0, 0), (0, 8), (0, 0))))
+    np.testing.assert_allclose(np.asarray(y40), np.asarray(y48[:, :40]),
+                               atol=2e-4, rtol=1e-3)

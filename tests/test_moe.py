@@ -1,0 +1,128 @@
+"""MoE routing/dispatch properties (unit + hypothesis)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import ModelConfig, MoEConfig
+from repro.models import moe as MoE
+
+
+def make_cfg(e=4, k=2, d=32, f=16, shared=0, cf=1.25):
+    return ModelConfig(
+        d_model=d, moe=MoEConfig(num_experts=e, top_k=k, expert_ffn_dim=f,
+                                 num_shared_experts=shared,
+                                 shared_ffn_dim=f * max(shared, 1),
+                                 capacity_factor=cf),
+        dtype="float32")
+
+
+def test_output_shape_and_finite():
+    cfg = make_cfg()
+    p = MoE.init_moe(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (2, 8, 32))
+    y, aux = MoE.moe_ffn(p, cfg, x)
+    assert y.shape == x.shape
+    assert bool(jnp.isfinite(y).all())
+    assert float(aux["load_balance_loss"]) > 0.0
+
+
+def test_decode_dropless_consistency():
+    """Single-token dispatch must equal its slice of the full pass."""
+    cfg = make_cfg()
+    p = MoE.init_moe(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(2), (4, 16, 32))
+    y_full, _ = MoE.moe_ffn(p, cfg, x)
+    for t in [0, 7, 15]:
+        y_t, _ = MoE.moe_ffn(p, cfg, x[:, t:t + 1])
+        np.testing.assert_allclose(np.asarray(y_full[:, t]),
+                                   np.asarray(y_t[:, 0]), atol=1e-5)
+
+
+def test_shared_experts_always_contribute():
+    """Zeroing the routed experts must leave the shared-expert output."""
+    cfg = make_cfg(shared=2)
+    p = MoE.init_moe(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(3), (1, 4, 32))
+    y, _ = MoE.moe_ffn(p, cfg, x)
+    p_zero = dict(p, we_down=jnp.zeros_like(p["we_down"]))
+    y_shared, _ = MoE.moe_ffn(p_zero, cfg, x)
+    assert float(jnp.max(jnp.abs(y_shared))) > 0.0
+    assert not np.allclose(np.asarray(y), np.asarray(y_shared))
+
+
+def test_load_balance_loss_uniform_is_one():
+    """Perfectly uniform routing gives lb_loss == 1 (E * E * (1/E)^2)."""
+    cfg = make_cfg(e=8, k=1)
+    # craft logits: uniform probabilities -> P_e = 1/E; f_e depends on
+    # argmax tie-breaks, so use rotation-symmetric inputs instead
+    t = 64
+    x = jax.random.normal(jax.random.key(4), (1, t, 32))
+    p = MoE.init_moe(jax.random.key(5), cfg)
+    _, aux = MoE.moe_ffn(p, cfg, x)
+    # random init routes near-uniformly in expectation: loss close to 1
+    assert 0.8 < float(aux["load_balance_loss"]) < 1.6
+
+
+@given(e=st.sampled_from([2, 4, 8]), k=st.integers(1, 4),
+       t=st.integers(1, 16), seed=st.integers(0, 20))
+@settings(max_examples=25, deadline=None)
+def test_property_topk_gates_normalized(e, k, t, seed):
+    k = min(k, e)
+    cfg = make_cfg(e=e, k=k)
+    x = jax.random.normal(jax.random.key(seed), (1, t, 32))
+    p = MoE.init_moe(jax.random.key(seed + 1), cfg)
+    logits = (x.reshape(-1, 32) @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, -1)
+    gate, idx = jax.lax.top_k(probs, k)
+    gate = gate / gate.sum(-1, keepdims=True)
+    assert np.allclose(np.asarray(gate.sum(-1)), 1.0, atol=1e-5)
+    # top-k indices are distinct per token
+    idx = np.asarray(idx)
+    for row in idx:
+        assert len(set(row.tolist())) == k
+
+
+@given(t=st.sampled_from([8, 64, 256]), seed=st.integers(0, 10))
+@settings(max_examples=12, deadline=None)
+def test_property_moe_permutation_equivariant(t, seed):
+    """Permuting tokens permutes outputs (given dropless capacity)."""
+    cfg = make_cfg(cf=8.0)            # high capacity: no drops
+    p = MoE.init_moe(jax.random.key(seed), cfg)
+    x = jax.random.normal(jax.random.key(seed + 99), (1, t, 32))
+    perm = jax.random.permutation(jax.random.key(seed + 5), t)
+    y1, _ = MoE.moe_ffn(p, cfg, x)
+    y2, _ = MoE.moe_ffn(p, cfg, x[:, perm])
+    np.testing.assert_allclose(np.asarray(y1[:, perm]), np.asarray(y2),
+                               atol=2e-5)
+
+
+def test_capacity_drops_tokens_when_tight():
+    """With capacity_factor -> tiny and large T, some contributions drop."""
+    cfg = make_cfg(cf=0.25)
+    p = MoE.init_moe(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(6), (8, 1024, 32))
+    y_tight, _ = MoE.moe_ffn(p, cfg, x)
+    cfg_loose = make_cfg(cf=8.0)
+    y_loose, _ = MoE.moe_ffn(p, cfg_loose, x)
+    assert not np.allclose(np.asarray(y_tight), np.asarray(y_loose))
+
+
+def test_sort_dispatch_bit_identical_to_cumsum():
+    """§Perf optimization: sort-based dispatch must match the baseline
+    exactly, including capacity drops (stable sort preserves token order)."""
+    import dataclasses
+    cfg_c = make_cfg(cf=0.5)                 # tight capacity: drops happen
+    cfg_s = dataclasses.replace(
+        cfg_c, moe=dataclasses.replace(cfg_c.moe, dispatch="sort"))
+    p = MoE.init_moe(jax.random.key(0), cfg_c)
+    x = jax.random.normal(jax.random.key(1), (4, 512, 32))
+    y1, a1 = MoE.moe_ffn(p, cfg_c, x)
+    y2, a2 = MoE.moe_ffn(p, cfg_s, x)
+    np.testing.assert_array_equal(np.asarray(y1), np.asarray(y2))
+    assert float(a1["load_balance_loss"]) == pytest.approx(
+        float(a2["load_balance_loss"]))

@@ -1,0 +1,184 @@
+"""Optimizer, schedules, checkpointing, data pipeline."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.config import TrainConfig, get_smoke_config
+from repro.data import (SyntheticLMData, make_traffic_dataset,
+                        make_wafer_dataset, partition_edges)
+from repro.train import (checkpoint, init_opt_state, init_train_state,
+                         lr_schedule, make_train_step)
+from repro.train import checkpoint as ck
+from repro.train.optimizer import apply_updates, clip_by_global_norm
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+
+def test_cosine_schedule_shape():
+    tc = TrainConfig(schedule="cosine", warmup_steps=10, total_steps=100,
+                     peak_lr=1.0, min_lr_ratio=0.1)
+    assert float(lr_schedule(tc, 0)) == pytest.approx(0.1)
+    assert float(lr_schedule(tc, 9)) == pytest.approx(1.0)
+    assert float(lr_schedule(tc, 99)) == pytest.approx(0.1, abs=1e-2)
+
+
+def test_wsd_schedule_plateau_and_decay():
+    tc = TrainConfig(schedule="wsd", warmup_steps=10, total_steps=100,
+                     peak_lr=1.0, min_lr_ratio=0.1, decay_start_frac=0.8)
+    plateau = [float(lr_schedule(tc, s)) for s in range(10, 80)]
+    assert all(abs(v - 1.0) < 1e-6 for v in plateau)
+    assert float(lr_schedule(tc, 99)) < 0.2
+
+
+@given(step=st.integers(0, 2000))
+@settings(max_examples=40, deadline=None)
+def test_property_lr_positive_bounded(step):
+    for sched in ("cosine", "wsd", "constant"):
+        tc = TrainConfig(schedule=sched, warmup_steps=17, total_steps=1000,
+                         peak_lr=3e-4)
+        lr = float(lr_schedule(tc, step))
+        assert 0.0 < lr <= 3e-4 + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(20.0)
+    total = jnp.sqrt(jnp.sum(clipped["a"] ** 2))
+    assert float(total) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_adamw_reduces_quadratic():
+    tc = TrainConfig(optimizer="adamw", peak_lr=0.1, schedule="constant",
+                     warmup_steps=1, weight_decay=0.0, grad_clip=0.0)
+    params = {"w": jnp.array([3.0, -2.0])}
+    opt = init_opt_state(tc, params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, opt, _ = apply_updates(tc, params, grads, opt)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.1
+
+
+def test_sgd_momentum_state():
+    tc = TrainConfig(optimizer="sgd", momentum=0.9, peak_lr=0.01,
+                     schedule="constant", warmup_steps=1, weight_decay=0.0,
+                     grad_clip=0.0)
+    params = {"w": jnp.ones(3)}
+    opt = init_opt_state(tc, params)
+    params2, opt2, m = apply_updates(tc, params, {"w": jnp.ones(3)}, opt)
+    assert float(params2["w"][0]) < 1.0
+    assert int(opt2.step) == 1
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_roundtrip_trainstate(tmp_path):
+    cfg = get_smoke_config("olmoe-1b-7b")
+    from repro.models import build_model
+    m = build_model(cfg.model)
+    state = init_train_state(m, cfg.train, jax.random.key(0))
+    path = str(tmp_path / "state.npz")
+    ck.save(path, state, step=7)
+    back = ck.restore(path, state)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(back)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32))
+    assert ck.latest_step(path) == 7
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    path = str(tmp_path / "x.npz")
+    ck.save(path, {"a": jnp.zeros((2, 3))})
+    with pytest.raises(ValueError):
+        ck.restore(path, {"a": jnp.zeros((3, 2))})
+
+
+def test_checkpoint_missing_leaf_raises(tmp_path):
+    path = str(tmp_path / "y.npz")
+    ck.save(path, {"a": jnp.zeros(2)})
+    with pytest.raises(KeyError):
+        ck.restore(path, {"a": jnp.zeros(2), "b": jnp.zeros(2)})
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+
+
+def test_lm_data_deterministic_and_edge_distinct():
+    d = SyntheticLMData(vocab=128, seq_len=16, batch_size=4)
+    b1 = d.batch(0, 5)["tokens"]
+    b2 = d.batch(0, 5)["tokens"]
+    np.testing.assert_array_equal(np.asarray(b1), np.asarray(b2))
+    b3 = d.batch(1, 5)["tokens"]
+    assert not np.array_equal(np.asarray(b1), np.asarray(b3))
+    assert int(b1.max()) < 128 and int(b1.min()) >= 0
+
+
+def test_edge_marginals_differ():
+    """Non-IID: different edges have different token marginals."""
+    d = SyntheticLMData(vocab=64, seq_len=256, batch_size=8)
+    h = []
+    for e in range(2):
+        toks = np.asarray(d.batch(e, 0)["tokens"]).ravel()
+        h.append(np.bincount(toks, minlength=64) / toks.size)
+    assert np.abs(h[0] - h[1]).sum() > 0.2
+
+
+def test_partition_edges_covers_and_noniid():
+    train, _ = make_wafer_dataset(n=2000)
+    parts = partition_edges(train, 4, alpha=0.3)
+    total = sum(len(p["y"]) for p in parts)
+    assert total == len(train["y"])
+    # non-IID: per-edge class distributions differ
+    dists = [np.bincount(p["y"], minlength=8) / max(len(p["y"]), 1)
+             for p in parts]
+    assert np.abs(dists[0] - dists[1]).sum() > 0.2
+
+
+def test_classic_datasets_shapes():
+    train, test = make_wafer_dataset(n=1000)
+    assert train["x"].shape[1] == 59
+    assert int(train["y"].max()) == 7
+    train, test = make_traffic_dataset(n=1000)
+    assert train["x"].shape[1] == 64
+    assert int(train["y"].max()) == 2
+
+
+def test_bf16_optimizer_state_trains():
+    """§Perf It.4: bf16 Adam moments — state dtype honored, loss still falls
+    (update math stays fp32)."""
+    import dataclasses
+    from repro.config import get_smoke_config
+    from repro.data import SyntheticLMData
+    from repro.models import build_model
+
+    cfg = get_smoke_config("qwen3-1.7b")
+    tc = dataclasses.replace(cfg.train, opt_state_dtype="bfloat16")
+    m = build_model(cfg.model)
+    state = init_train_state(m, tc, jax.random.key(0))
+    assert jax.tree.leaves(state.opt.mu)[0].dtype == jnp.bfloat16
+    data = SyntheticLMData.for_model(cfg.model, 2, 64)
+    step = jax.jit(make_train_step(m, tc))
+    losses = []
+    for i in range(5):
+        state, metrics = step(state, data.batch(0, i))
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0]
+    assert all(np.isfinite(l) for l in losses)
