@@ -4,15 +4,16 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional
+from typing import Dict
 
 import jax
 import numpy as np
 
-from repro.config import OL4ELConfig, get_config
+from repro.config import get_config
 from repro.data import (make_traffic_dataset, make_wafer_dataset,
                         partition_edges)
-from repro.federated import ClassicExecutor, ELSimulator, SimResult
+from repro.el import ELSession
+from repro.federated import ClassicExecutor
 from repro.models import build_model
 
 # Paper workloads: ("svm", accuracy) and ("kmeans", F1).
@@ -38,12 +39,15 @@ def run_el(workload: str, policy: str, mode: str, heterogeneity: float,
            n_data: int = 20000, cost_noise: float = 0.0,
            cost_model: str = "fixed", max_interval: int = 10,
            alpha: float = 100.0, async_alpha: float = 0.5,
-           lr: float | None = None, batch: int | None = None) -> ELRun:
-    """One EL experiment mirroring the paper's §V setup.
+           lr: float | None = None, batch: int | None = None,
+           ingraph: bool = False) -> ELRun:
+    """One EL experiment mirroring the paper's §V setup, through the
+    ``repro.el.ELSession`` façade.
 
     ``alpha`` is the Dirichlet concentration of the per-edge data split:
     the paper partitions data without skew, so the default is IID-like
     (alpha=100); pass alpha<=1 for the non-IID extension experiments.
+    ``ingraph=True`` routes sync runs through the compiled fast path.
     """
     if workload == "svm":
         train, test = make_wafer_dataset(n=n_data, seed=seed)
@@ -63,12 +67,16 @@ def run_el(workload: str, policy: str, mode: str, heterogeneity: float,
         heterogeneity=heterogeneity, utility=utility, seed=seed,
         cost_noise=cost_noise, cost_model=cost_model,
         max_interval=max_interval)
+    if ingraph and mode != "sync":
+        raise ValueError("ingraph=True is sync-only; an async run cannot be "
+                         "routed through the compiled sync fast path")
     edges = partition_edges(train, n_edges, alpha=alpha, seed=seed)
     ex = ClassicExecutor(model, edges, test, batch=batch, lr=lr)
-    sim = ELSimulator(ex, ol, model.init(jax.random.key(seed)),
-                      n_samples=[len(e["y"]) for e in edges],
-                      metric_name=metric, lr=lr, async_alpha=async_alpha)
-    res = sim.run()
+    session = ELSession(ol, metric_name=metric, lr=lr,
+                        async_alpha=async_alpha).with_executor(
+        ex, init_params=model.init(jax.random.key(seed)),
+        n_samples=[len(e["y"]) for e in edges])
+    res = session.run_sync_ingraph() if ingraph else session.run()
     return ELRun(workload, policy, mode, heterogeneity, n_edges, budget,
                  res.final_metric, res.n_aggregations, res.total_consumed,
                  res.records)

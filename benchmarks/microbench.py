@@ -84,6 +84,45 @@ def run(quiet: bool = False) -> List[Dict]:
                      us_per_call=dt / max(r.n_aggregations, 1),
                      derived=f"acc={r.final_metric:.3f}"))
 
+    # host-driven sync loop vs the fully in-graph fast path (ONE compiled
+    # lax.while_loop per run): per-aggregation cost, warm in both cases
+    import dataclasses as _dc
+    from repro.config import get_config as _get_config
+    from repro.data import make_wafer_dataset, partition_edges
+    from repro.el import ELSession
+    from repro.federated import ClassicExecutor
+    from repro.models import build_model
+    train_d, test_d = make_wafer_dataset(n=2000, seed=0)
+    exp = _get_config("svm-wafer")
+    svm = build_model(exp.model)
+    ol = _dc.replace(exp.ol4el, mode="sync", policy="ol4el", n_edges=3,
+                     budget=6000.0, heterogeneity=6.0, utility="eval_gain",
+                     seed=0)
+    edges = partition_edges(train_d, 3, alpha=1.0, seed=0)
+    ex = ClassicExecutor(svm, edges, test_d, batch=64, lr=0.05)
+    ns = [len(e["y"]) for e in edges]
+
+    def session():
+        return ELSession(ol, metric_name="accuracy", lr=0.05) \
+            .with_executor(ex, n_samples=ns)
+
+    session().run_sync()                        # warm the executor jits
+    t0 = time.perf_counter()
+    host = session().run_sync()
+    host_us = (time.perf_counter() - t0) * 1e6 / max(host.n_aggregations, 1)
+    rows.append(dict(name="el_sync_host_per_round", us_per_call=host_us,
+                     derived=f"acc={host.final_metric:.3f}"))
+
+    sess = session()
+    sess.run_sync_ingraph()                     # compile the program
+    t0 = time.perf_counter()
+    ing = sess.run_sync_ingraph()
+    ing_us = (time.perf_counter() - t0) * 1e6 / max(ing.n_aggregations, 1)
+    rows.append(dict(
+        name="el_sync_ingraph_per_round", us_per_call=ing_us,
+        derived=f"acc={ing.final_metric:.3f},"
+                f"speedup={host_us / max(ing_us, 1e-9):.1f}x_vs_host"))
+
     if not quiet:
         for row in rows:
             print(f"micro {row['name']:40s} {row['us_per_call']:12.1f} us  "

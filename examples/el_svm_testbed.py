@@ -16,7 +16,8 @@ import jax
 
 from repro.config import get_config
 from repro.data import make_wafer_dataset, partition_edges
-from repro.federated import ClassicExecutor, ELSimulator
+from repro.el import ELSession
+from repro.federated import ClassicExecutor
 from repro.models import build_model
 
 
@@ -26,6 +27,8 @@ def main():
     ap.add_argument("--edges", type=int, default=3)
     ap.add_argument("--budget", type=float, default=5000.0)
     ap.add_argument("--samples", type=int, default=8000)
+    ap.add_argument("--ingraph", action="store_true",
+                    help="run the sync rows through the compiled fast path")
     args = ap.parse_args()
 
     train, test = make_wafer_dataset(n=args.samples)
@@ -48,10 +51,13 @@ def main():
             cost_model="variable" if policy == "ucb_bv" else "fixed",
             cost_noise=0.2 if policy == "ucb_bv" else 0.0)
         ex = ClassicExecutor(model, edges, test, batch=64, lr=0.05)
-        sim = ELSimulator(ex, ol, model.init(jax.random.key(0)),
-                          n_samples=[len(e["y"]) for e in edges],
-                          metric_name="accuracy", lr=0.05)
-        res = sim.run()
+        session = (ELSession(ol, metric_name="accuracy", lr=0.05)
+                   .with_executor(ex,
+                                  init_params=model.init(jax.random.key(0)),
+                                  n_samples=[len(e["y"]) for e in edges]))
+        use_fastpath = (args.ingraph and mode == "sync"
+                        and policy == "ol4el")
+        res = session.run_sync_ingraph() if use_fastpath else session.run()
         print(f"{policy + '-' + mode:16s} {res.final_metric:9.4f} "
               f"{res.n_aggregations:13d} {res.total_consumed:9.0f}")
 

@@ -1,9 +1,10 @@
 """End-to-end driver: train a ~100M-parameter LM with the OL4EL
 edge-cloud loop — the paper's technique applied to LM pretraining.
 
-Four simulated heterogeneous edges, per-round global-update intervals
-chosen by the budget-limited bandit, masked local-SGD rounds with
-parameter aggregation, budget accounting, and checkpointing.
+Simulated heterogeneous edges, per-block global-update intervals chosen
+by the budget-limited bandit, local-SGD blocks with staleness-aware
+merging, budget accounting, and checkpointing — all through the
+``repro.el.ELSession`` façade.
 
     PYTHONPATH=src python examples/train_lm_ol4el.py \
         --preset 100m --rounds 100         # full driver (slow on CPU)
@@ -12,21 +13,15 @@ parameter aggregation, budget accounting, and checkpointing.
 """
 
 import argparse
-import dataclasses
 import os
 import sys
 import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
 from repro.config import ModelConfig, OL4ELConfig, TrainConfig
-from repro.core.coordinator import CloudCoordinator
-from repro.data import SyntheticLMData
-from repro.federated import init_el_state, make_el_round
+from repro.el import ELSession
+from repro.federated import LMExecutor
 from repro.models import build_model
 from repro.train import checkpoint
 
@@ -73,54 +68,32 @@ def main():
                      utility="loss_delta")
 
     model = build_model(mc)
-    coord = CloudCoordinator(ol, args.edges, lr=tc.peak_lr)
-    state = init_el_state(model, tc, args.edges, jax.random.key(0))
-    data = SyntheticLMData.for_model(mc, args.batch, args.seq)
-    el_round = jax.jit(make_el_round(model, tc, h_max=ol.max_interval,
-                                     mode="async"))
+    ex = LMExecutor(model, mc, tc, batch=args.batch, seq_len=args.seq)
 
-    step_counter = np.zeros(args.edges, np.int64)
-    prev_loss, t_start = None, time.time()
-    history = []
-    for rnd in range(args.rounds):
-        intervals = []
-        for e in range(args.edges):
-            i = coord.decide(e)
-            if i < 0:
-                print(f"round {rnd}: budgets exhausted -> stop")
-                break
-            intervals.append(i)
-        if len(intervals) < args.edges:
-            break
-        batches = {"tokens": jnp.stack([
-            jnp.stack([data.batch(e, int(step_counter[e]) + s)["tokens"]
-                       for s in range(ol.max_interval)])
-            for e in range(args.edges)])}
-        state, metrics = el_round(state, batches,
-                                  jnp.asarray(intervals, jnp.int32),
-                                  jnp.ones(args.edges, jnp.float32))
-        loss = float(metrics["mean_loss"])
-        for e in range(args.edges):
-            step_counter[e] += intervals[e]
-            cost = coord.realized_cost(e, intervals[e])
-            coord.charge(e, cost)
-            u = 0.0 if prev_loss is None else prev_loss - loss
-            coord.observe(e, intervals[e], u, cost)
-        prev_loss = loss
-        history.append((rnd, loss, list(intervals),
-                        coord.total_consumed()))
-        if rnd % 10 == 0 or rnd == args.rounds - 1:
-            print(f"round {rnd:4d} loss={loss:.4f} intervals={intervals} "
-                  f"consumed={coord.total_consumed():.0f} "
+    t_start = time.time()
+
+    def progress(rec):
+        if rec.n_aggregations % 10 == 0:
+            print(f"event {rec.n_aggregations:4d} loss={rec.metric:.4f} "
+                  f"edge={rec.edge} interval={rec.interval:.0f} "
+                  f"consumed={rec.total_consumed:.0f} "
                   f"({time.time() - t_start:.0f}s)", flush=True)
 
-    checkpoint.save(args.ckpt, state, step=len(history))
-    print(f"done: {len(history)} rounds, final loss "
-          f"{history[-1][1]:.4f}, checkpoint -> {args.ckpt}")
-    # bandit summary
-    arms = coord.bandits[0].counts if coord.cfg.mode == "sync" else \
-        sum(b.counts for b in coord.bandits)
-    print("arm pull counts (interval 1..K):", list(map(int, arms)))
+    session = (ELSession(ol, metric_name="loss", lr=tc.peak_lr)
+               .with_executor(ex)
+               .with_policy(args.policy)
+               .on_round(progress))
+    report = session.run(max_events=args.rounds * args.edges)
+
+    print(f"done: {report.n_aggregations} aggregations, final loss "
+          f"{report.final_metric:.4f}, consumed "
+          f"{report.total_consumed:.0f}/{args.edges * args.budget:.0f} "
+          f"({report.terminated_reason})")
+    print("arm pull counts (interval 1..K):", report.arm_pulls)
+    if args.ckpt:
+        checkpoint.save(args.ckpt, report.final_params,
+                        step=report.n_aggregations)
+        print(f"saved checkpoint -> {args.ckpt}")
 
 
 if __name__ == "__main__":

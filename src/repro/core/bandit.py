@@ -5,6 +5,11 @@ Arms are *global update intervals* I in {1..K}.  Pulling arm I costs
 observed at the next global aggregation.  The bandit must maximize average
 utility before the per-edge budget runs out.
 
+This module owns the sufficient statistics (``BanditState``) and the
+in-graph (jittable) bandit; the host selection rules themselves live as
+first-class objects in ``repro.el.policies`` (``select_arm`` below is a
+thin compatibility shim over that registry).
+
 Policies:
 
   * ``ol4el``     — the paper's 3-step fixed-cost procedure (§IV.B.1),
@@ -37,7 +42,7 @@ a leading edge dimension for the async mode (one bandit per edge).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional
 
 import numpy as np
 
@@ -99,63 +104,16 @@ def select_arm(state: BanditState, residual_budget: float,
                rng: Optional[np.random.Generator] = None,
                ucb_c: float = 2.0, eps: float = 0.1,
                fixed_arm: int = 3) -> int:
-    """Choose an arm. Returns -1 when no arm is affordable (terminate)."""
+    """Choose an arm. Returns -1 when no arm is affordable (terminate).
+
+    Compatibility shim over the first-class policy objects in
+    ``repro.el.policies`` (where the selection rules now live); prefer
+    ``policies.get(name).select(...)`` in new code.
+    """
+    from repro.el import policies as el_policies
     rng = rng or np.random.default_rng(0)
-    feasible = costs <= residual_budget + 1e-12
-    if not feasible.any():
-        return -1
-
-    # Initialization phase: try every feasible arm once (paper §IV.B).
-    untried = feasible & (state.counts == 0)
-    if policy in ("ol4el", "ucb_bv", "greedy", "eps_greedy", "freq_only") \
-            and untried.any():
-        return int(np.argmax(untried))
-
-    if policy == "fixed_i":
-        arm = min(fixed_arm, state.n_arms - 1)
-        return arm if feasible[arm] else int(np.argmax(feasible))
-    if policy == "uniform":
-        return int(rng.choice(np.flatnonzero(feasible)))
-
-    if policy == "ucb_bv":
-        # UCB-BV1 (variable costs): exploration bonus on utility AND cost.
-        n = np.maximum(state.counts, 1)
-        eps_i = np.sqrt(np.log(max(state.t - 1, 2)) / n)
-        mean_c = state.mean_cost(fallback=costs)
-        lam = max(float(np.min(mean_c)), 1e-6)
-        denom = lam - eps_i
-        density = state.mean_utility() / np.maximum(mean_c, 1e-9)
-        d = np.where(denom > 1e-9,
-                     density + (1.0 + 1.0 / lam) * eps_i / np.maximum(denom,
-                                                                      1e-9),
-                     np.inf)
-        d = np.where(feasible, d, -np.inf)
-        return int(np.argmax(d))
-
-    ucb = _ucb(state, ucb_c)
-    density = np.where(feasible, ucb / np.maximum(costs, 1e-9), -np.inf)
-
-    if policy == "greedy":
-        return int(np.argmax(density))
-    if policy == "eps_greedy":
-        if rng.random() < eps:
-            return int(rng.choice(np.flatnonzero(feasible)))
-        return int(np.argmax(density))
-
-    # --- the paper's 3-step procedure -----------------------------------
-    freq = np.where(feasible, np.floor(residual_budget / costs), 0.0)
-    if policy == "freq_only":                    # literal reading
-        w = freq
-    else:                                        # "ol4el": density x freq
-        d = np.where(np.isfinite(density), density, np.nanmax(
-            np.where(np.isfinite(density), density, -np.inf)) + 1.0)
-        d = d - d.min() + 1e-9                   # shift to positive
-        w = d * freq
-    w = np.where(feasible, np.maximum(w, 0.0), 0.0)
-    if w.sum() <= 0:
-        return int(rng.choice(np.flatnonzero(feasible)))
-    p = w / w.sum()
-    return int(rng.choice(len(costs), p=p))
+    pol = el_policies.get(policy, ucb_c=ucb_c, eps=eps, fixed_arm=fixed_arm)
+    return pol.select(state, residual_budget, costs, rng)
 
 
 # ---------------------------------------------------------------------------

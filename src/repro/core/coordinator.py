@@ -14,8 +14,7 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.config import OL4ELConfig
-from repro.core.bandit import BanditState, arm_costs, select_arm
-from repro.core.strategies import ACSync
+from repro.core.bandit import BanditState, arm_costs
 
 
 def edge_speed_factors(n_edges: int, heterogeneity: float) -> np.ndarray:
@@ -40,7 +39,8 @@ class CloudCoordinator:
     """Decides per-edge global-update intervals under budget constraints."""
 
     def __init__(self, cfg: OL4ELConfig, n_edges: Optional[int] = None,
-                 lr: float = 0.1):
+                 lr: float = 0.1, policy=None):
+        from repro.el import policies as el_policies
         self.cfg = cfg
         self.n_edges = n_edges or cfg.n_edges
         self.rng = np.random.default_rng(cfg.seed)
@@ -54,8 +54,12 @@ class CloudCoordinator:
         else:
             self.bandits = [BanditState.create(k)
                             for _ in range(self.n_edges)]
-        self.ac = ACSync(eta=lr, max_interval=k) \
-            if cfg.policy == "ac_sync" else None
+        # the collaboration strategy is a first-class object (registry:
+        # repro.el.policies); pass policy= to inject a configured instance
+        self.policy = policy if policy is not None else el_policies.get(
+            cfg.policy, ucb_c=cfg.ucb_c, eps=cfg.eps,
+            fixed_arm=cfg.fixed_interval - 1, eta=lr, max_interval=k)
+        self.ac = getattr(self.policy, "ac", None)
         self.history: List[Dict] = []
 
     # -- cost model ----------------------------------------------------------
@@ -103,19 +107,9 @@ class CloudCoordinator:
     def decide(self, edge: int = 0) -> int:
         """Pick the global-update interval for ``edge`` (1-based interval).
         Returns -1 when the edge's budget affords no arm (terminate)."""
-        cfg = self.cfg
-        if cfg.policy == "ac_sync":
-            assert self.ac is not None
-            worst = int(np.argmax(self.comp_cost))
-            e = worst if cfg.mode == "sync" else edge
-            return self.ac.select_tau(self._residual_for(edge),
-                                      float(self.comp_cost[e]),
-                                      float(self.comm_cost[e]))
-        state = self._bandit_for(edge)
-        arm = select_arm(state, self._residual_for(edge),
-                         self._costs_for(edge), policy=cfg.policy,
-                         rng=self.rng, ucb_c=cfg.ucb_c, eps=cfg.eps,
-                         fixed_arm=cfg.fixed_interval - 1)
+        arm = self.policy.select(self._bandit_for(edge),
+                                 self._residual_for(edge),
+                                 self._costs_for(edge), self.rng)
         return -1 if arm < 0 else arm + 1
 
     def observe(self, edge: int, interval: int, utility: float,

@@ -1,0 +1,23 @@
+"""``repro.el`` — the unified edge-cloud collaborative-learning runtime.
+
+The public surface of the OL4EL reproduction:
+
+  * :class:`ELSession` — configure-then-run façade (host sync/async loops
+    plus the compiled ``run_sync_ingraph`` fast path);
+  * :class:`ELReport` / :class:`RoundRecord` — run artifacts;
+  * :mod:`repro.el.policies` — first-class collaboration strategies behind
+    a registry (``policies.get("ol4el")``);
+  * :class:`EdgeExecutor` — the typed data-plane Protocol executors
+    implement (``ClassicExecutor`` / ``LMExecutor`` satisfy it).
+"""
+
+from repro.el import policies
+from repro.el.executor import (EdgeExecutor, InGraphExecutor,
+                               validate_executor)
+from repro.el.report import ELReport, RoundRecord
+from repro.el.session import ELSession
+
+__all__ = [
+    "ELSession", "ELReport", "RoundRecord", "EdgeExecutor",
+    "InGraphExecutor", "validate_executor", "policies",
+]

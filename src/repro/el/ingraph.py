@@ -1,0 +1,226 @@
+"""The fully in-graph sync fast path: one XLA program per EL run.
+
+The host-driven runtime round-trips cloud↔device once per round: a numpy
+bandit picks the interval, a jitted scan runs the local iterations, numpy
+charges the budgets.  This module stages the *entire* budgeted sync loop —
+
+    in-graph bandit select  (``jax_selection_weights`` + categorical)
+      → ``lax.scan`` local iterations, vmapped over edges
+      → weighted parameter aggregation
+      → in-graph utility (eval-gain or param-delta)
+      → ``jax_bandit_update`` + budget charge
+
+— into a single ``lax.while_loop``, so an entire run (hundreds of rounds)
+is ONE compiled program with zero host synchronization.  This is what the
+previously-dormant ``jax_bandit_*`` functions exist for.
+
+Restrictions (asserted by the builder): sync mode, the ``ol4el`` policy,
+the fixed cost model, and a jax-pure executor (``InGraphExecutor`` — i.e.
+``ClassicExecutor``-shaped: raw per-edge arrays + a jittable
+``model.local_step``).  Everything else stays on the host path.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.config import OL4ELConfig
+from repro.core.bandit import (jax_bandit_init, jax_bandit_update,
+                               jax_selection_weights)
+from repro.core.coordinator import edge_speed_factors
+
+Params = Any
+
+
+def _pad_edge_data(edge_data: List[Dict[str, np.ndarray]]
+                   ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Stack per-edge datasets [E, Nmax, d] / [E, Nmax] with wraparound
+    padding (padding rows repeat real rows, so uniform index sampling over
+    [0, n_e) never sees them)."""
+    n = np.array([len(d["y"]) for d in edge_data], np.int32)
+    n_max = int(n.max())
+    dim = edge_data[0]["x"].shape[-1]
+    xs = np.zeros((len(edge_data), n_max, dim), np.float32)
+    ys = np.zeros((len(edge_data), n_max), np.int32)
+    for e, d in enumerate(edge_data):
+        reps = -(-n_max // len(d["y"]))
+        xs[e] = np.tile(np.asarray(d["x"], np.float32), (reps, 1))[:n_max]
+        ys[e] = np.tile(np.asarray(d["y"], np.int32), reps)[:n_max]
+    return jnp.asarray(xs), jnp.asarray(ys), jnp.asarray(n)
+
+
+def default_metric_fn(model, eval_set, metric_name: str
+                      ) -> Optional[Callable[[Params], jax.Array]]:
+    """A jittable eval metric when the model supports one (SVM accuracy);
+    None means the in-graph path must run with a params-only utility."""
+    if metric_name == "accuracy" and hasattr(model, "scores"):
+        xe = jnp.asarray(eval_set["x"], jnp.float32)
+        ye = jnp.asarray(eval_set["y"], jnp.int32)
+
+        def accuracy(params):
+            pred = jnp.argmax(model.scores(params, xe), -1)
+            return jnp.mean((pred == ye).astype(jnp.float32))
+
+        return accuracy
+    return None
+
+
+def _tree_l2(a: Params, b: Params) -> jax.Array:
+    total = sum(jnp.sum((x.astype(jnp.float32) - y.astype(jnp.float32)) ** 2)
+                for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+    return jnp.sqrt(total)
+
+
+def make_sync_fastpath(model, edge_data, eval_set, cfg: OL4ELConfig, *,
+                       lr: float, batch: int,
+                       n_samples: Optional[np.ndarray] = None,
+                       metric_fn: Optional[Callable] = None,
+                       metric_name: str = "accuracy",
+                       max_rounds: int = 512):
+    """Build ``program(init_params, rng) -> (params, out)`` — the whole
+    budgeted sync run as one jitted ``lax.while_loop``.
+
+    ``out`` is a dict of device arrays: per-round ``metric``, ``utility``,
+    ``interval``, ``consumed`` (cumulative total across edges), ``wall``
+    (cumulative straggler time), plus scalars ``n_rounds`` and the final
+    per-edge ``budgets_left``.
+    """
+    if cfg.mode != "sync":
+        raise ValueError("the in-graph fast path is sync-only "
+                         f"(cfg.mode={cfg.mode!r})")
+    if cfg.policy != "ol4el":
+        raise ValueError("the in-graph fast path implements the ol4el "
+                         f"selection rule only (cfg.policy={cfg.policy!r})")
+    if cfg.cost_model != "fixed":
+        raise ValueError("variable-cost mode draws host-side noise; use the "
+                         "host path (cfg.cost_model must be 'fixed')")
+    if cfg.utility not in ("eval_gain", "param_delta"):
+        raise ValueError(f"unsupported in-graph utility {cfg.utility!r}")
+
+    n_edges, k = cfg.n_edges, cfg.max_interval
+    speed = edge_speed_factors(n_edges, cfg.heterogeneity)
+    comp = jnp.asarray(cfg.comp_cost * speed, jnp.float32)          # [E]
+    comm = jnp.full((n_edges,), cfg.comm_cost, jnp.float32)         # [E]
+    intervals_f = jnp.arange(1, k + 1, dtype=jnp.float32)
+    # sync feasibility is scored against the binding (slowest) edge
+    worst = int(np.argmax(np.asarray(comp)))
+    costs_k = intervals_f * comp[worst] + comm[worst]               # [K]
+    min_edge_cost = comp + comm                                     # [E]
+
+    xs, ys, n_per_edge = _pad_edge_data(edge_data)
+    w_agg = (np.ones(n_edges) if n_samples is None
+             else np.asarray(n_samples, np.float64))
+    w_agg = jnp.asarray(w_agg / w_agg.sum(), jnp.float32)
+
+    if metric_fn is None:
+        metric_fn = default_metric_fn(model, eval_set, metric_name)
+    if cfg.utility == "eval_gain" and metric_fn is None:
+        raise ValueError(
+            "utility='eval_gain' needs a jittable metric; pass metric_fn= "
+            "or use utility='param_delta'")
+
+    def local_block(params: Params, edge: jax.Array, interval: jax.Array,
+                    key: jax.Array) -> Params:
+        """`interval` masked local iterations on one edge's shard."""
+
+        def body(p, step):
+            u = jax.random.uniform(jax.random.fold_in(key, step), (batch,))
+            idx = (u * n_per_edge[edge].astype(jnp.float32)).astype(jnp.int32)
+            b = {"x": xs[edge][idx], "y": ys[edge][idx]}
+            p2, _ = model.local_step(p, b, lr)
+            take = step < interval
+            return jax.tree.map(
+                lambda a, c: jnp.where(take, c, a), p, p2), None
+
+        params, _ = lax.scan(body, params, jnp.arange(k))
+        return params
+
+    def weighted_mean(trees: Params) -> Params:
+        return jax.tree.map(
+            lambda leaf: jnp.einsum(
+                "e...,e->...", leaf.astype(jnp.float32), w_agg
+            ).astype(leaf.dtype), trees)
+
+    def cond(carry):
+        (_, _, consumed, t, _, _, _, _) = carry
+        resid = cfg.budget - consumed                                # [E]
+        affordable = jnp.min(resid) >= jnp.min(costs_k) - 1e-12
+        exhausted = jnp.any(resid < min_edge_cost)
+        return (t < max_rounds) & affordable & ~exhausted
+
+    def body(carry):
+        (params, bstate, consumed, t, rng, prev_metric, wall, hist) = carry
+        rng, k_sel, k_data = jax.random.split(rng, 3)
+        resid = jnp.min(cfg.budget - consumed)
+        w = jax_selection_weights(bstate, resid, costs_k, cfg.ucb_c)
+        logits = jnp.where(w > 0, jnp.log(jnp.maximum(w, 1e-30)), -jnp.inf)
+        arm = jax.random.categorical(k_sel, logits)
+        interval = arm + 1
+
+        edge_ids = jnp.arange(n_edges)
+        keys = jax.vmap(lambda e: jax.random.fold_in(k_data, e))(edge_ids)
+        bcast = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_edges,) + x.shape), params)
+        edge_params = jax.vmap(local_block, in_axes=(0, 0, None, 0))(
+            bcast, edge_ids, interval, keys)
+        new_params = weighted_mean(edge_params)
+
+        # straggler semantics: every edge's clock advances by the slowest
+        # edge's round time (matches CloudCoordinator.charge in run_sync)
+        round_costs = interval.astype(jnp.float32) * comp + comm     # [E]
+        slot = jnp.max(round_costs)
+        consumed = consumed + slot
+
+        if metric_fn is not None:
+            metric = metric_fn(new_params)
+        else:
+            metric = jnp.float32(jnp.nan)
+        if cfg.utility == "eval_gain":
+            utility = metric - prev_metric
+        else:                                  # param_delta (§III.A)
+            utility = 1.0 / (1.0 + _tree_l2(params, new_params))
+
+        bstate = jax_bandit_update(bstate, arm, utility, slot)
+        wall = wall + slot
+        hist = {
+            "metric": hist["metric"].at[t].set(metric),
+            "utility": hist["utility"].at[t].set(utility),
+            "interval": hist["interval"].at[t].set(interval),
+            "consumed": hist["consumed"].at[t].set(
+                jnp.sum(consumed)),
+            "wall": hist["wall"].at[t].set(wall),
+        }
+        return (new_params, bstate, consumed, t + 1, rng, metric, wall,
+                hist)
+
+    def program(init_params: Params, rng: jax.Array):
+        bstate = jax_bandit_init(k)
+        consumed = jnp.zeros((n_edges,), jnp.float32)
+        if metric_fn is not None:
+            prev_metric = metric_fn(init_params)
+        else:
+            prev_metric = jnp.float32(jnp.nan)
+        hist = {
+            "metric": jnp.full((max_rounds,), jnp.nan, jnp.float32),
+            "utility": jnp.zeros((max_rounds,), jnp.float32),
+            "interval": jnp.zeros((max_rounds,), jnp.int32),
+            "consumed": jnp.zeros((max_rounds,), jnp.float32),
+            "wall": jnp.zeros((max_rounds,), jnp.float32),
+        }
+        carry = (init_params, bstate, consumed, jnp.int32(0), rng,
+                 prev_metric, jnp.float32(0.0), hist)
+        (params, bstate, consumed, t, _, _, wall, hist) = \
+            lax.while_loop(cond, body, carry)
+        out = dict(hist)
+        out["n_rounds"] = t
+        out["budgets_left"] = cfg.budget - consumed
+        out["arm_pulls"] = bstate["counts"]
+        out["wall_time"] = wall
+        return params, out
+
+    return program

@@ -1,0 +1,363 @@
+"""``ELSession`` — the single façade over the OL4EL runtime.
+
+    from repro.el import ELSession
+
+    report = (ELSession(cfg)
+              .with_executor(executor)            # any EdgeExecutor
+              .with_policy("ol4el")               # name or Policy object
+              .on_round(lambda rec: ...)          # streaming callbacks
+              .run())                             # -> ELReport
+
+One session owns the whole paper pipeline: the cloud coordinator (budgets
++ bandit), the utility estimator, the host-driven sync/async loops (the
+§V simulator semantics), and — for jax-pure executors — the compiled
+``run_sync_ingraph`` fast path that stages the entire budgeted loop into
+one XLA program (see ``repro.el.ingraph``).
+
+The legacy ``repro.federated.ELSimulator`` is now a deprecation shim over
+this class.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple, Union
+
+import jax
+import numpy as np
+
+from repro.config import ExperimentConfig, OL4ELConfig
+from repro.core.coordinator import CloudCoordinator
+from repro.core.utility import UtilityEstimator, param_l2_delta
+from repro.el import policies as el_policies
+from repro.el.executor import EdgeExecutor, validate_executor
+from repro.el.report import ELReport, RoundRecord
+
+Params = Any
+RoundCallback = Callable[[RoundRecord], None]
+
+
+class ELSession:
+    """Configure-then-run handle for one edge-cloud collaborative run."""
+
+    def __init__(self, cfg: Union[OL4ELConfig, ExperimentConfig], *,
+                 metric_name: str = "accuracy", lr: float = 0.1,
+                 async_alpha: float = 0.5):
+        if isinstance(cfg, ExperimentConfig):
+            cfg = cfg.ol4el
+        self.cfg = cfg
+        self.metric_name = metric_name
+        self.lr = lr
+        self.async_alpha = async_alpha
+        self._executor: Optional[EdgeExecutor] = None
+        self._init_params: Optional[Params] = None
+        self._n_samples: Optional[np.ndarray] = None
+        self._policy: Optional[el_policies.Policy] = None
+        self._callbacks: List[RoundCallback] = []
+        self.coord: Optional[CloudCoordinator] = None   # built per run
+        self._coord_consumed = False
+        self._fastpath = None                           # compiled program
+        self._fastpath_key = None
+
+    # -- builder API ---------------------------------------------------------
+
+    def with_executor(self, executor: EdgeExecutor, *,
+                      init_params: Optional[Params] = None,
+                      n_samples: Optional[Any] = None) -> "ELSession":
+        validate_executor(executor)
+        self._executor = executor
+        self._init_params = init_params
+        if n_samples is not None:
+            self._n_samples = np.asarray(n_samples, np.float64)
+        return self
+
+    def with_policy(self, policy: Union[str, el_policies.Policy]
+                    ) -> "ELSession":
+        if isinstance(policy, str):
+            self.cfg = dataclasses.replace(self.cfg, policy=policy)
+            self._policy = None
+        else:
+            self._policy = policy
+            self.cfg = dataclasses.replace(self.cfg, policy=policy.name)
+        self.coord = None                    # any prepared coordinator is stale
+        return self
+
+    def with_metric(self, metric_name: str) -> "ELSession":
+        self.metric_name = metric_name
+        return self
+
+    def on_round(self, callback: RoundCallback) -> "ELSession":
+        """Register a streaming per-aggregation callback."""
+        self._callbacks.append(callback)
+        return self
+
+    # -- internals -----------------------------------------------------------
+
+    def _require_executor(self) -> EdgeExecutor:
+        if self._executor is None:
+            raise RuntimeError("call .with_executor(...) before .run()")
+        return self._executor
+
+    def _initial_params(self) -> Params:
+        if self._init_params is not None:
+            return self._init_params
+        ex = self._require_executor()
+        if hasattr(ex, "init_params"):
+            return ex.init_params(self.cfg.seed)
+        raise RuntimeError(
+            f"{type(ex).__name__} has no init_params(); pass "
+            "init_params= to with_executor()")
+
+    def coordinator(self) -> CloudCoordinator:
+        """The current coordinator: before a run this is the instance the
+        next run will use (budgets/costs inspectable — or adjustable);
+        after a run it still holds that run's consumed state."""
+        if self.coord is None:
+            self.coord = CloudCoordinator(self.cfg, self.cfg.n_edges,
+                                          lr=self.lr, policy=self._policy)
+            self._coord_consumed = False
+        return self.coord
+
+    def _build(self) -> Tuple[CloudCoordinator, UtilityEstimator,
+                              np.random.Generator]:
+        if self._coord_consumed:             # each run starts from fresh
+            self.coord = None                # budgets/bandit statistics
+        coord = self.coordinator()
+        self._coord_consumed = True
+        utility = UtilityEstimator(self.cfg.utility)
+        rng = np.random.default_rng(self.cfg.seed + 17)
+        return coord, utility, rng
+
+    def _emit(self, records: List[RoundRecord], rec: RoundRecord) -> None:
+        records.append(rec)
+        for cb in self._callbacks:
+            cb(rec)
+
+    def _snapshot(self, ex: EdgeExecutor, utility: UtilityEstimator,
+                  params: Params, want_metric: bool) -> Dict[str, Any]:
+        snap: Dict[str, Any] = {"params": params, "loss": 0.0}
+        if want_metric or utility.kind in ("eval_gain", "loss_delta"):
+            m = ex.evaluate(params)
+            snap["metric"] = m[self.metric_name]
+            snap["loss"] = m.get("loss", 0.0)
+        else:
+            snap["metric"] = float("nan")
+        return snap
+
+    def _report(self, ex: EdgeExecutor, coord: CloudCoordinator,
+                params: Params, records: List[RoundRecord], reason: str,
+                t0: float) -> ELReport:
+        final = ex.evaluate(params)[self.metric_name]
+        pulls = np.zeros(self.cfg.max_interval, np.int64)
+        for b in coord.bandits:
+            pulls += np.asarray(b.counts)
+        return ELReport(
+            records=records,
+            final_metric=float(final),
+            n_aggregations=len(records),
+            total_consumed=coord.total_consumed(),
+            wall_time=records[-1].wall_time if records else 0.0,
+            terminated_reason=reason,
+            policy=self.cfg.policy,
+            mode=self.cfg.mode,
+            arm_pulls=[int(c) for c in pulls],
+            elapsed_s=time.perf_counter() - t0,
+            final_params=params,
+        )
+
+    # -- host-driven synchronous loop ----------------------------------------
+
+    def run_sync(self, max_rounds: int = 10_000,
+                 eval_every: int = 1) -> ELReport:
+        cfg = self.cfg
+        ex = self._require_executor()
+        coord, utility, rng = self._build()
+        t0 = time.perf_counter()
+        params = self._initial_params()
+        records: List[RoundRecord] = []
+        wall, n_agg = 0.0, 0
+        prev = self._snapshot(ex, utility, params, want_metric=True)
+        reason = "max_rounds"
+        for _ in range(max_rounds):
+            interval = coord.decide()
+            if interval < 0 or coord.all_exhausted():
+                reason = "budget_exhausted"
+                break
+            edge_params: List[Params] = []
+            round_costs = np.zeros(cfg.n_edges)
+            for e in range(cfg.n_edges):
+                p_e, _ = ex.local_train(params, e, interval,
+                                        rng.integers(1 << 31))
+                edge_params.append(p_e)
+                round_costs[e] = coord.realized_cost(e, interval)
+            # Time-budget semantics (paper §V.A): synchronous edges BLOCK
+            # on the slowest edge, so every edge's budget advances by the
+            # straggler's round time.
+            slot = float(round_costs.max())
+            for e in range(cfg.n_edges):
+                coord.charge(e, slot)
+            wall += slot
+            from repro.federated.aggregation import weighted_average
+            w = (np.ones(cfg.n_edges) if self._n_samples is None
+                 else self._n_samples)
+            params = weighted_average(edge_params, w)
+            n_agg += 1
+            new = self._snapshot(ex, utility, params,
+                                 want_metric=(n_agg % eval_every == 0))
+            u = utility(prev, new)
+            # sync: ONE bandit fed the worst-case (binding) cost
+            coord.observe(0, interval, u, slot)
+            if coord.ac is not None:
+                self._update_ac(coord, edge_params, prev["params"], params,
+                                interval)
+            prev = new
+            self._emit(records, RoundRecord(
+                wall, coord.total_consumed(), new["metric"], u,
+                interval, -1, n_agg))
+        return self._report(ex, coord, params, records, reason, t0)
+
+    # -- host-driven asynchronous (event-driven) loop ------------------------
+
+    def run_async(self, max_events: int = 50_000,
+                  eval_every: int = 1) -> ELReport:
+        cfg = self.cfg
+        ex = self._require_executor()
+        coord, utility, rng = self._build()
+        t0 = time.perf_counter()
+        global_params = self._initial_params()
+        records: List[RoundRecord] = []
+        n_agg = 0
+        prev = self._snapshot(ex, utility, global_params, want_metric=True)
+        # per-edge in-flight blocks: (finish_time, edge, interval, cost) —
+        # the SAME realized-cost draw sets the finish time AND is charged
+        # at completion, so charged budget always equals simulated
+        # wall-clock (one draw per block, not two independent ones).
+        heap: List[Tuple[float, int, int, float]] = []
+        fetch_version = np.zeros(cfg.n_edges)
+        version = 0
+        edge_params: List[Params] = [global_params] * cfg.n_edges
+        for e in range(cfg.n_edges):
+            i = coord.decide(e)
+            if i < 0:
+                continue
+            cost = coord.realized_cost(e, i)
+            heapq.heappush(heap, (cost, e, i, cost))
+            fetch_version[e] = version
+        wall = 0.0
+        reason = "max_events"
+        for _ in range(max_events):
+            if not heap:
+                reason = "budget_exhausted"
+                break
+            wall, e, interval, cost = heapq.heappop(heap)
+            # edge e finishes `interval` local iterations and uploads
+            p_e, _ = ex.local_train(edge_params[e], e, interval,
+                                    rng.integers(1 << 31))
+            coord.charge(e, cost)
+            # staleness in *epochs*: normalize raw version staleness by the
+            # fleet size so async mixing survives edge-count scaling
+            staleness = (version - fetch_version[e]) / max(cfg.n_edges, 1)
+            from repro.federated.aggregation import (staleness_alpha,
+                                                     staleness_mix)
+            alpha = staleness_alpha(self.async_alpha, staleness)
+            global_params = staleness_mix(global_params, p_e, alpha)
+            version += 1
+            n_agg += 1
+            new = self._snapshot(ex, utility, global_params,
+                                 want_metric=(n_agg % eval_every == 0))
+            u = utility(prev, new)
+            coord.observe(e, interval, u, cost)
+            prev = new
+            self._emit(records, RoundRecord(
+                wall, coord.total_consumed(), new["metric"], u,
+                float(interval), e, n_agg))
+            # edge fetches the fresh global model, schedules its next block
+            edge_params[e] = global_params
+            fetch_version[e] = version
+            nxt = coord.decide(e)
+            if nxt > 0 and not coord.exhausted(e):
+                next_cost = coord.realized_cost(e, nxt)
+                heapq.heappush(heap, (wall + next_cost, e, nxt, next_cost))
+        return self._report(ex, coord, global_params, records, reason, t0)
+
+    def run(self, **kw) -> ELReport:
+        if self.cfg.mode == "sync":
+            return self.run_sync(**kw)
+        return self.run_async(**kw)
+
+    # -- compiled fast path ---------------------------------------------------
+
+    def run_sync_ingraph(self, max_rounds: int = 512,
+                         metric_fn: Optional[Callable] = None) -> ELReport:
+        """Run the whole budgeted sync loop as ONE compiled XLA program.
+
+        Numerically equivalent (up to RNG streams) to ``run_sync`` under
+        the fast path's contract: sync mode, ``ol4el`` policy, fixed
+        costs, and an ``InGraphExecutor`` (e.g. ``ClassicExecutor``).
+        Callbacks still fire, streamed after the device loop finishes.
+        """
+        from repro.el.ingraph import make_sync_fastpath
+        ex = self._require_executor()
+        for attr in ("model", "edge_data", "eval_set", "batch", "lr"):
+            if not hasattr(ex, attr):
+                raise TypeError(
+                    f"{type(ex).__name__} is not in-graph capable (missing "
+                    f".{attr}); run_sync_ingraph needs an InGraphExecutor "
+                    "such as ClassicExecutor")
+        cfg = self.cfg
+        if cfg.mode != "sync":
+            cfg = dataclasses.replace(cfg, mode="sync")
+        # an injected ol4el Policy object carries its own exploration
+        # constant; honor it like the host path does (other policy objects
+        # are already rejected by the fast path's cfg.policy guard)
+        if self._policy is not None and self._policy.name == "ol4el":
+            cfg = dataclasses.replace(cfg, ucb_c=self._policy.ucb_c)
+        t0 = time.perf_counter()
+        key = (ex, cfg, max_rounds, metric_fn, self.metric_name,
+               None if self._n_samples is None else tuple(self._n_samples))
+        if self._fastpath is None or self._fastpath_key != key:
+            self._fastpath = jax.jit(make_sync_fastpath(
+                ex.model, ex.edge_data, ex.eval_set, cfg,
+                lr=ex.lr, batch=ex.batch, n_samples=self._n_samples,
+                metric_fn=metric_fn, metric_name=self.metric_name,
+                max_rounds=max_rounds))
+            self._fastpath_key = key
+        program = self._fastpath
+        params = self._initial_params()
+        params, out = jax.block_until_ready(
+            program(params, jax.random.key(cfg.seed + 17)))
+        n = int(out["n_rounds"])
+        records: List[RoundRecord] = []
+        for t in range(n):
+            self._emit(records, RoundRecord(
+                float(out["wall"][t]), float(out["consumed"][t]),
+                float(out["metric"][t]), float(out["utility"][t]),
+                float(out["interval"][t]), -1, t + 1))
+        final = ex.evaluate(params)[self.metric_name]
+        return ELReport(
+            records=records,
+            final_metric=float(final),
+            n_aggregations=n,
+            total_consumed=float(out["consumed"][n - 1]) if n else 0.0,
+            wall_time=float(out["wall_time"]),
+            terminated_reason=("max_rounds" if n >= max_rounds
+                               else "budget_exhausted"),
+            policy=cfg.policy,
+            mode="sync",
+            arm_pulls=[int(c) for c in np.asarray(out["arm_pulls"])],
+            elapsed_s=time.perf_counter() - t0,
+            final_params=params,
+        )
+
+    # -- AC-sync estimator plumbing -------------------------------------------
+
+    @staticmethod
+    def _update_ac(coord: CloudCoordinator, edge_params: List[Params],
+                   prev_global: Params, new_global: Params,
+                   tau: int) -> None:
+        local_deltas = np.array([param_l2_delta(prev_global, p)
+                                 for p in edge_params])
+        global_delta = param_l2_delta(prev_global, new_global)
+        coord.ac.update_estimates(local_deltas, global_delta, tau)

@@ -1,7 +1,13 @@
-"""Executors: the ML data-plane the simulator drives.
+"""Executors: the ML data-plane the EL runtime drives.
+
+Both satisfy the typed ``repro.el.EdgeExecutor`` Protocol (structurally —
+``local_train`` / ``evaluate`` / ``init_params``).
 
 ``ClassicExecutor`` — SVM / K-means local training on per-edge (non-IID)
 datasets, jitted per interval length via lax.scan over stacked minibatches.
+It also satisfies ``repro.el.InGraphExecutor`` (raw per-edge arrays + a
+jittable model), which is what lets ``ELSession.run_sync_ingraph`` stage
+a whole run into one XLA program.
 
 ``LMExecutor`` — small language models through the same interface (params
 only; per-edge optimizer moments are ephemeral within a local block, the
@@ -48,6 +54,9 @@ class ClassicExecutor:
             return params
 
         self._scan_steps = jax.jit(scan_steps)
+
+    def init_params(self, seed: int = 0) -> Params:
+        return self.model.init(jax.random.key(seed))
 
     def sample_batches(self, edge: int, n_iters: int, seed: int
                        ) -> Tuple[jax.Array, jax.Array]:
@@ -97,6 +106,9 @@ class LMExecutor:
             return m["ce_loss"]
 
         self._eval = jax.jit(eval_loss)
+
+    def init_params(self, seed: int = 0) -> Params:
+        return self.model.init(jax.random.key(seed))
 
     def local_train(self, params: Params, edge: int, n_iters: int,
                     seed: int) -> Tuple[Params, Dict]:

@@ -1,240 +1,83 @@
-"""Event-driven edge-cloud learning simulator (§V testbed/docker analogue).
+"""DEPRECATED shim — the event-driven EL simulator is now ``ELSession``.
 
-Reproduces the paper's experimental harness: N heterogeneous edge servers
-with per-edge resource budgets train a shared model under a coordination
-strategy.  Supports
+The host-driven sync/async loops (the paper's §V testbed analogue) moved
+to :mod:`repro.el.session`; this module keeps the historical
+``ELSimulator`` constructor signature and result types importable so old
+call sites keep working::
 
-  * synchronous rounds (cloud waits for all edges; wall-clock advances by
-    the slowest edge — the straggler effect the paper studies), and
-  * asynchronous event-driven execution (per-edge completion events; the
-    cloud merges one edge at a time with staleness-discounted mixing).
+    from repro.federated import ELSimulator, SimResult   # still fine
 
-Costs are metered exactly like the paper's simulator: integer-ish time
-units per local iteration (scaled per-edge by the heterogeneity factor) and
-per global update, optionally with i.i.d. noise (variable-cost mode).
+    sim = ELSimulator(executor, cfg, init_params, ...)
+    result = sim.run()        # delegates to ELSession.run()
 
-The simulator drives any executor exposing
-    ``local_train(params, edge, n_iters, rng) -> (params, info)``
-    ``evaluate(params) -> {metric_name: value}``
-so the same harness runs SVM, K-means and (small) LMs.
+New code should use::
+
+    from repro.el import ELSession
+    report = ELSession(cfg).with_executor(executor, ...).run()
+
+Behavioural fix carried by the move (previously a bug here): in
+``variable`` cost mode the async loop used to schedule a block's finish
+time from one ``realized_cost`` draw but charge a *second* independent
+draw when the block completed, so charged budget disagreed with simulated
+wall-clock.  The session engine draws once per block and reuses it for
+both.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import heapq
-from typing import Any, Callable, Dict, List, Optional, Tuple
+import warnings
+from typing import Any, Optional
 
-import jax
 import numpy as np
 
 from repro.config import OL4ELConfig
-from repro.core.coordinator import CloudCoordinator
-from repro.core.utility import UtilityEstimator, param_l2_delta
-from repro.federated.aggregation import (staleness_alpha, staleness_mix,
-                                         weighted_average)
+from repro.el.report import ELReport, RoundRecord
 
 Params = Any
 
+# Legacy names: SimResult was the pre-ELReport result dataclass with the
+# same fields; RoundRecord moved unchanged.
+SimResult = ELReport
 
-@dataclasses.dataclass
-class RoundRecord:
-    wall_time: float
-    total_consumed: float
-    metric: float
-    utility: float
-    interval: float            # mean interval this event/round
-    edge: int                  # -1 for sync rounds
-    n_aggregations: int
-
-
-@dataclasses.dataclass
-class SimResult:
-    records: List[RoundRecord]
-    final_metric: float
-    n_aggregations: int
-    total_consumed: float
-    wall_time: float
-    terminated_reason: str
-
-    def metric_at_consumption(self, budget_frac: float,
-                              total_budget: float) -> float:
-        """Metric achieved by the time a consumption level is reached."""
-        target = budget_frac * total_budget
-        best = 0.0
-        for r in self.records:
-            if r.total_consumed <= target:
-                best = r.metric
-        return best
+__all__ = ["ELSimulator", "SimResult", "RoundRecord"]
 
 
 class ELSimulator:
+    """Deprecated adapter over :class:`repro.el.ELSession`."""
+
     def __init__(self, executor, cfg: OL4ELConfig,
                  init_params: Params,
                  n_samples: Optional[np.ndarray] = None,
                  metric_name: str = "accuracy",
                  lr: float = 0.1,
                  async_alpha: float = 0.5):
-        self.ex = executor
+        warnings.warn(
+            "ELSimulator is deprecated; use repro.el.ELSession",
+            DeprecationWarning, stacklevel=2)
+        from repro.el.session import ELSession
         self.cfg = cfg
-        self.coord = CloudCoordinator(cfg, cfg.n_edges, lr=lr)
-        self.global_params = init_params
-        self.metric_name = metric_name
-        self.n_samples = (np.ones(cfg.n_edges) if n_samples is None
-                          else np.asarray(n_samples, np.float64))
-        self.utility = UtilityEstimator(cfg.utility)
-        self.async_alpha = async_alpha
-        self.rng = np.random.default_rng(cfg.seed + 17)
+        self.ex = executor
+        self.session = ELSession(
+            cfg, metric_name=metric_name, lr=lr, async_alpha=async_alpha
+        ).with_executor(executor, init_params=init_params,
+                        n_samples=n_samples)
 
-    # -- shared helpers -------------------------------------------------------
-
-    def _snapshot(self, params: Params, want_metric: bool) -> Dict[str, Any]:
-        snap: Dict[str, Any] = {"params": params}
-        if want_metric or self.utility.kind == "eval_gain":
-            m = self.ex.evaluate(params)
-            snap["metric"] = m[self.metric_name]
-        else:
-            snap["metric"] = float("nan")
-        snap["loss"] = snap.get("loss", 0.0)
-        return snap
-
-    # -- synchronous ----------------------------------------------------------
+    @property
+    def coord(self):
+        # eager like the old simulator: the coordinator (budgets, costs,
+        # bandits) is inspectable/adjustable before run(), and the next
+        # run consumes exactly this instance
+        return self.session.coordinator()
 
     def run_sync(self, max_rounds: int = 10_000,
                  eval_every: int = 1) -> SimResult:
-        cfg = self.cfg
-        records: List[RoundRecord] = []
-        wall = 0.0
-        n_agg = 0
-        prev = self._snapshot(self.global_params, want_metric=True)
-        reason = "max_rounds"
-        for rnd in range(max_rounds):
-            interval = self.coord.decide()
-            if interval < 0 or self.coord.all_exhausted():
-                reason = "budget_exhausted"
-                break
-            edge_params: List[Params] = []
-            round_costs = np.zeros(cfg.n_edges)
-            for e in range(cfg.n_edges):
-                p_e, _ = self.ex.local_train(
-                    self.global_params, e, interval,
-                    self.rng.integers(1 << 31))
-                edge_params.append(p_e)
-                round_costs[e] = self.coord.realized_cost(e, interval)
-            # Time-budget semantics (paper §V.A: budget = remaining battery/
-            # service time): synchronous edges BLOCK on the slowest edge, so
-            # every edge's clock — and therefore its budget — advances by
-            # the straggler's round time.  This is the straggler penalty
-            # async avoids.
-            slot = float(round_costs.max())
-            for e in range(cfg.n_edges):
-                self.coord.charge(e, slot)
-            wall += slot
-            self.global_params = weighted_average(edge_params,
-                                                  self.n_samples)
-            n_agg += 1
-            new = self._snapshot(self.global_params,
-                                 want_metric=(n_agg % eval_every == 0))
-            u = self.utility(prev, new)
-            # sync: ONE bandit fed the worst-case (binding) cost
-            self.coord.observe(0, interval, u, float(round_costs.max()))
-            if self.ac_update_needed():
-                self._update_ac(edge_params, prev["params"], interval)
-            prev = new
-            records.append(RoundRecord(
-                wall, self.coord.total_consumed(), new["metric"], u,
-                interval, -1, n_agg))
-        return self._result(records, reason)
-
-    # -- asynchronous -----------------------------------------------------------
+        return self.session.run_sync(max_rounds=max_rounds,
+                                     eval_every=eval_every)
 
     def run_async(self, max_events: int = 50_000,
                   eval_every: int = 1) -> SimResult:
-        cfg = self.cfg
-        records: List[RoundRecord] = []
-        n_agg = 0
-        prev = self._snapshot(self.global_params, want_metric=True)
-        # per-edge in-flight state: (finish_time, edge, interval, params_at_fetch)
-        heap: List[Tuple[float, int, int]] = []
-        fetch_version = np.zeros(cfg.n_edges)     # global version when fetched
-        version = 0
-        edge_params: List[Params] = [self.global_params] * cfg.n_edges
-        active = np.ones(cfg.n_edges, bool)
-        for e in range(cfg.n_edges):
-            i = self.coord.decide(e)
-            if i < 0:
-                active[e] = False
-                continue
-            cost = self.coord.realized_cost(e, i)
-            heapq.heappush(heap, (cost, e, i))
-            fetch_version[e] = version
-        wall = 0.0
-        reason = "max_events"
-        for _ in range(max_events):
-            if not heap:
-                reason = "budget_exhausted"
-                break
-            wall, e, interval = heapq.heappop(heap)
-            # edge e finishes `interval` local iterations and uploads
-            p_e, _ = self.ex.local_train(edge_params[e], e, interval,
-                                         self.rng.integers(1 << 31))
-            cost = self.coord.realized_cost(e, interval)
-            self.coord.charge(e, cost)
-            # staleness in *epochs*: with E concurrent contributors the
-            # expected raw staleness is ~E versions, so normalize by E —
-            # otherwise the mixing rate vanishes as the fleet grows and
-            # scaling with edge count (paper Fig. 5) is destroyed.
-            staleness = (version - fetch_version[e]) / max(cfg.n_edges, 1)
-            alpha = staleness_alpha(self.async_alpha, staleness)
-            self.global_params = staleness_mix(self.global_params, p_e,
-                                               alpha)
-            version += 1
-            n_agg += 1
-            new = self._snapshot(self.global_params,
-                                 want_metric=(n_agg % eval_every == 0))
-            u = self.utility(prev, new)
-            self.coord.observe(e, interval, u, cost)
-            prev = new
-            records.append(RoundRecord(
-                wall, self.coord.total_consumed(), new["metric"], u,
-                float(interval), e, n_agg))
-            # edge fetches the fresh global model, schedules its next block
-            edge_params[e] = self.global_params
-            fetch_version[e] = version
-            nxt = self.coord.decide(e)
-            if nxt > 0 and not self.coord.exhausted(e):
-                next_cost = self.coord.expected_cost(e, nxt)
-                heapq.heappush(heap, (wall + next_cost, e, nxt))
-            else:
-                active[e] = False
-        return self._result(records, reason)
+        return self.session.run_async(max_events=max_events,
+                                      eval_every=eval_every)
 
     def run(self, **kw) -> SimResult:
-        if self.cfg.mode == "sync":
-            return self.run_sync(**kw)
-        return self.run_async(**kw)
-
-    # -- AC-sync estimator plumbing ----------------------------------------------
-
-    def ac_update_needed(self) -> bool:
-        return self.coord.ac is not None
-
-    def _update_ac(self, edge_params: List[Params], prev_global: Params,
-                   tau: int) -> None:
-        local_deltas = np.array([param_l2_delta(prev_global, p)
-                                 for p in edge_params])
-        global_delta = param_l2_delta(prev_global, self.global_params)
-        self.coord.ac.update_estimates(local_deltas, global_delta, tau)
-
-    # -- results ----------------------------------------------------------------
-
-    def _result(self, records: List[RoundRecord], reason: str) -> SimResult:
-        final = self.ex.evaluate(self.global_params)[self.metric_name]
-        return SimResult(
-            records=records,
-            final_metric=float(final),
-            n_aggregations=len(records),
-            total_consumed=self.coord.total_consumed(),
-            wall_time=records[-1].wall_time if records else 0.0,
-            terminated_reason=reason,
-        )
+        return self.session.run(**kw)

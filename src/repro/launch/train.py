@@ -2,10 +2,10 @@
 
 Two execution modes:
   * ``--mode standard`` — plain synchronous training (train_step loop).
-  * ``--mode ol4el``    — the paper's edge-cloud collaborative loop: E
-    simulated edges, per-round intervals chosen by the budget-limited MAB,
-    masked local steps + weighted aggregation (``el_round``), budgets
-    charged per the heterogeneous cost model.
+  * ``--mode ol4el``    — the paper's edge-cloud collaborative loop via
+    the ``repro.el.ELSession`` façade: E simulated edges, per-block
+    intervals chosen by the budget-limited MAB, local-SGD blocks +
+    aggregation, budgets charged per the heterogeneous cost model.
 
 On a real TPU cluster the same code runs under the production mesh (see
 ``repro.launch.mesh``); on this CPU host it runs on the default device
@@ -19,13 +19,11 @@ import dataclasses
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.config import get_config, get_smoke_config
-from repro.core.coordinator import CloudCoordinator
 from repro.data import SyntheticLMData
-from repro.federated import init_el_state, make_el_round
+from repro.el import ELSession
+from repro.federated import LMExecutor
 from repro.models import build_model
 from repro.train import (checkpoint, init_train_state, make_train_step)
 
@@ -52,52 +50,32 @@ def train_ol4el(exp, args) -> None:
     model = build_model(exp.model)
     ol = dataclasses.replace(exp.ol4el, n_edges=args.edges,
                              heterogeneity=args.heterogeneity,
-                             budget=args.budget, mode=args.el_mode)
-    coord = CloudCoordinator(ol, args.edges, lr=exp.train.peak_lr)
-    h_max = ol.max_interval
-    state = init_el_state(model, exp.train, args.edges,
-                          jax.random.key(exp.train.seed))
-    data = SyntheticLMData.for_model(exp.model, args.batch, args.seq)
-    el_round = jax.jit(make_el_round(model, exp.train, h_max=h_max,
-                                     mode="sync" if ol.mode == "sync"
-                                     else "async"))
-    prev_loss = None
-    rnd = 0
-    step_counter = np.zeros(args.edges, np.int64)
-    while rnd < args.steps:
-        intervals = []
-        for e in range(args.edges):
-            i = coord.decide(0 if ol.mode == "sync" else e)
-            if i < 0:
-                print(f"round {rnd}: edge {e} budget exhausted -> stop")
-                return
-            intervals.append(i)
-        if ol.mode == "sync":
-            intervals = [intervals[0]] * args.edges
-        batches = {"tokens": jnp.stack([
-            jnp.stack([data.batch(e, int(step_counter[e]) + s)["tokens"]
-                       for s in range(h_max)])
-            for e in range(args.edges)])}
-        ivec = jnp.asarray(intervals, jnp.int32)
-        state, metrics = el_round(state, batches, ivec,
-                                  jnp.ones(args.edges, jnp.float32))
-        loss = float(metrics["mean_loss"])
-        for e in range(args.edges):
-            step_counter[e] += intervals[e]
-            cost = coord.realized_cost(e, intervals[e])
-            coord.charge(e, cost)
-            utility = 0.0 if prev_loss is None else max(prev_loss - loss, 0.0)
-            coord.observe(0 if ol.mode == "sync" else e, intervals[e],
-                          utility, cost)
-        prev_loss = loss
-        rnd += 1
-        if rnd % args.log_every == 0:
-            cons = coord.total_consumed()
-            print(f"round {rnd:4d} loss={loss:.4f} "
-                  f"intervals={intervals} consumed={cons:.0f}/"
+                             budget=args.budget, mode=args.el_mode,
+                             utility="loss_delta")
+    ex = LMExecutor(model, exp.model, exp.train, batch=args.batch,
+                    seq_len=args.seq, seed=exp.train.seed)
+
+    def progress(rec):
+        if rec.n_aggregations % args.log_every == 0:
+            print(f"agg {rec.n_aggregations:4d} loss={rec.metric:.4f} "
+                  f"interval={rec.interval:.0f} edge={rec.edge} "
+                  f"consumed={rec.total_consumed:.0f}/"
                   f"{args.edges * args.budget:.0f}", flush=True)
+
+    session = (ELSession(ol, metric_name="loss", lr=exp.train.peak_lr)
+               .with_executor(ex)
+               .on_round(progress))
+    if ol.mode == "sync":
+        report = session.run_sync(max_rounds=args.steps)
+    else:
+        report = session.run_async(max_events=args.steps * args.edges)
+    print(f"done: {report.n_aggregations} aggregations, "
+          f"final loss {report.final_metric:.4f}, "
+          f"consumed {report.total_consumed:.0f} "
+          f"({report.terminated_reason}); arm pulls {report.arm_pulls}")
     if args.ckpt:
-        checkpoint.save(args.ckpt, state, step=rnd)
+        checkpoint.save(args.ckpt, report.final_params,
+                        step=report.n_aggregations)
         print(f"saved EL checkpoint to {args.ckpt}")
 
 

@@ -17,7 +17,7 @@ plane); the only jitted device functions are the model's ``prefill`` and
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -70,12 +70,23 @@ class ServingEngine:
 
     # -- internals ------------------------------------------------------------
 
-    def _sample(self, logits, temperature: float) -> jax.Array:
-        lg = logits[..., -1, :]
-        if temperature <= 0:
-            return jnp.argmax(lg, axis=-1)
+    def _slot_temperatures(self) -> np.ndarray:
+        """Each slot samples with its own request's temperature (empty
+        slots decode greedily — their tokens are discarded anyway)."""
+        return np.array([r.temperature if r is not None else 0.0
+                         for r in self.slot_req], np.float32)
+
+    def _sample(self, logits, temperatures: np.ndarray) -> jax.Array:
+        lg = logits[..., -1, :]                    # [B, V] or [B, CB, V]
+        greedy = jnp.argmax(lg, axis=-1)
+        t = jnp.asarray(temperatures).reshape(
+            (-1,) + (1,) * (lg.ndim - 2))          # broadcast over CB dims
+        if not np.any(temperatures > 0):
+            return greedy
         self.rng, sub = jax.random.split(self.rng)
-        return jax.random.categorical(sub, lg / temperature, axis=-1)
+        sampled = jax.random.categorical(
+            sub, lg / jnp.maximum(t, 1e-6)[..., None], axis=-1)
+        return jnp.where(t <= 0, greedy, sampled)
 
     # -- main loop -------------------------------------------------------------
 
@@ -111,7 +122,7 @@ class ServingEngine:
                 batch[i] = p
             logits, self.cache = self.model.prefill(
                 self.params, jnp.asarray(batch), self.cache)
-            tok = self._sample(logits, wave[0].temperature)
+            tok = self._sample(logits, self._slot_temperatures())
             self._last_tok = tok
             flat = np.asarray(tok).reshape(self.n_slots, -1)
             for slot, req in enumerate(self.slot_req):
@@ -132,9 +143,7 @@ class ServingEngine:
         logits, self.cache = self._decode(self.params,
                                           jnp.asarray(inp, jnp.int32),
                                           self.cache)
-        temperature = next(r.temperature for r in self.slot_req
-                           if r is not None)
-        tok = self._sample(logits, temperature)
+        tok = self._sample(logits, self._slot_temperatures())
         self._last_tok = tok
         flat = np.asarray(tok).reshape(self.n_slots, -1)
         for slot, req in enumerate(self.slot_req):

@@ -1,0 +1,293 @@
+"""The unified repro.el runtime API: policy registry, ELSession façade,
+in-graph fast path equivalence, async cost-accounting regression."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.config import OL4ELConfig, get_config
+from repro.core.bandit import BanditState, arm_costs, select_arm
+from repro.core.strategies import POLICIES
+from repro.data import (make_traffic_dataset, make_wafer_dataset,
+                        partition_edges)
+from repro.el import (ELReport, ELSession, EdgeExecutor, RoundRecord,
+                      policies, validate_executor)
+from repro.federated import ClassicExecutor
+from repro.models import build_model
+
+
+# ---------------------------------------------------------------------------
+# policy registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_covers_all_paper_policies():
+    assert policies.available() == tuple(sorted(POLICIES))
+
+
+@pytest.mark.parametrize("name", sorted(POLICIES))
+def test_registry_round_trip(name):
+    p = policies.get(name, ucb_c=1.5, eps=0.2, fixed_arm=2, eta=0.05,
+                     max_interval=6)
+    assert isinstance(p, policies.Policy)
+    assert p.name == name
+    # a fresh bandit over affordable arms must select something valid
+    st = BanditState.create(6)
+    costs = arm_costs(6, 10.0, 50.0)
+    arm = p.select(st, 1e4, costs, np.random.default_rng(0))
+    assert 0 <= arm < 6
+    # and -1 when broke
+    assert p.select(st, 1.0, costs, np.random.default_rng(0)) == -1
+
+
+def test_registry_unknown_name_lists_alternatives():
+    with pytest.raises(KeyError, match="ol4el"):
+        policies.get("nope")
+
+
+@pytest.mark.parametrize("name", ["ol4el", "ucb_bv", "greedy", "freq_only",
+                                  "eps_greedy", "uniform", "fixed_i"])
+def test_select_arm_shim_matches_policy_objects(name):
+    """The legacy select_arm() and the policy object must make identical
+    decisions from identical RNG streams (bit-for-bit repro guarantee)."""
+    costs = arm_costs(6, 8.0, 40.0)
+    st1, st2 = BanditState.create(6), BanditState.create(6)
+    r1, r2 = np.random.default_rng(7), np.random.default_rng(7)
+    pol = policies.get(name, ucb_c=2.0, eps=0.1, fixed_arm=3)
+    for _ in range(40):
+        a1 = select_arm(st1, 900.0, costs, policy=name, rng=r1)
+        a2 = pol.select(st2, 900.0, costs, r2)
+        assert a1 == a2
+        if a1 >= 0:
+            u = 0.3 + 0.1 * a1
+            st1.update(a1, u, costs[a1])
+            st2.update(a2, u, costs[a2])
+
+
+# ---------------------------------------------------------------------------
+# executor protocol
+# ---------------------------------------------------------------------------
+
+
+def test_executor_protocol_accepts_classic_and_rejects_junk():
+    train, test = make_wafer_dataset(n=400, seed=0)
+    exp = get_config("svm-wafer")
+    model = build_model(exp.model)
+    ex = ClassicExecutor(model, partition_edges(train, 2, alpha=1.0),
+                         test, batch=32, lr=0.05)
+    assert isinstance(ex, EdgeExecutor)
+    validate_executor(ex)           # no raise
+
+    class Junk:
+        pass
+
+    assert not isinstance(Junk(), EdgeExecutor)
+    with pytest.raises(TypeError, match="local_train"):
+        validate_executor(Junk())
+
+
+# ---------------------------------------------------------------------------
+# ELSession smoke (the paper's workloads through the façade)
+# ---------------------------------------------------------------------------
+
+
+def _svm_session(mode="sync", policy="ol4el", budget=1200.0, n=1200,
+                 seed=0, **cfg_kw):
+    train, test = make_wafer_dataset(n=n, seed=seed)
+    exp = get_config("svm-wafer")
+    model = build_model(exp.model)
+    ol = dataclasses.replace(
+        exp.ol4el, mode=mode, policy=policy, n_edges=3, budget=budget,
+        heterogeneity=4.0, utility="eval_gain", seed=seed, **cfg_kw)
+    edges = partition_edges(train, 3, alpha=1.0, seed=seed)
+    ex = ClassicExecutor(model, edges, test, batch=64, lr=0.05)
+    return (ELSession(ol, metric_name="accuracy", lr=0.05)
+            .with_executor(ex, init_params=model.init(jax.random.key(seed)),
+                           n_samples=[len(e["y"]) for e in edges]))
+
+
+def test_session_sync_svm_learns_and_reports():
+    rounds = []
+    rep = _svm_session("sync").on_round(rounds.append).run()
+    assert isinstance(rep, ELReport)
+    assert rep.final_metric > 0.5
+    assert rep.mode == "sync" and rep.policy == "ol4el"
+    assert rep.terminated_reason == "budget_exhausted"
+    # streaming callbacks saw every aggregation, in order
+    assert [r.n_aggregations for r in rounds] == \
+        list(range(1, rep.n_aggregations + 1))
+    assert all(isinstance(r, RoundRecord) for r in rounds)
+    assert sum(rep.arm_pulls) == rep.n_aggregations
+    assert rep.final_params is not None
+
+
+def test_session_async_kmeans_smoke():
+    train, test = make_traffic_dataset(n=900)
+    exp = get_config("kmeans-traffic")
+    model = build_model(exp.model)
+    ol = dataclasses.replace(exp.ol4el, mode="async", policy="ol4el",
+                             n_edges=3, budget=700.0, heterogeneity=4.0,
+                             utility="param_delta")
+    edges = partition_edges(train, 3, alpha=2.0)
+    ex = ClassicExecutor(model, edges, test, batch=128, lr=1.0)
+    rep = (ELSession(ol, metric_name="f1", lr=1.0)
+           .with_executor(ex, init_params=model.init(jax.random.key(1)))
+           .run())
+    assert rep.final_metric > 0.5
+    assert rep.n_aggregations >= 2
+
+
+def test_session_with_policy_object():
+    pol = policies.get("fixed_i", fixed_arm=1)
+    rep = _svm_session("sync").with_policy(pol).run()
+    assert rep.policy == "fixed_i"
+    # fixed-I pulls exactly one arm (interval 2) once past feasibility
+    pulls = np.asarray(rep.arm_pulls)
+    assert pulls[1] == pulls.sum()
+
+
+def test_session_requires_executor():
+    with pytest.raises(RuntimeError, match="with_executor"):
+        ELSession(OL4ELConfig()).run()
+
+
+# ---------------------------------------------------------------------------
+# in-graph fast path: equivalence + guards
+# ---------------------------------------------------------------------------
+
+
+def test_ingraph_matches_host_sync_on_svm_wafer():
+    """Acceptance: the compiled lax.while_loop program and the host-driven
+    loop agree on the final metric and total consumption within tolerance
+    (their RNG streams differ, so trajectories differ round-to-round)."""
+    host = _svm_session("sync", budget=1500.0, n=1500).run_sync()
+    ing = _svm_session("sync", budget=1500.0, n=1500).run_sync_ingraph()
+    assert host.terminated_reason == ing.terminated_reason == \
+        "budget_exhausted"
+    assert host.final_metric > 0.5 and ing.final_metric > 0.5
+    assert abs(host.final_metric - ing.final_metric) <= 0.08
+    assert ing.total_consumed == pytest.approx(host.total_consumed,
+                                               rel=0.15)
+    # both respect every edge's budget (+ at most one final block)
+    assert ing.total_consumed <= 3 * 1500.0 + 3 * 150.0
+    assert ing.n_aggregations == len(ing.records) > 0
+    ivals = [r.interval for r in ing.records]
+    assert all(1 <= i <= 10 for i in ivals)
+
+
+def test_ingraph_rejects_unsupported_configs():
+    s = _svm_session("sync", policy="greedy")
+    with pytest.raises(ValueError, match="ol4el"):
+        s.run_sync_ingraph()
+    s = _svm_session("sync", cost_model="variable", cost_noise=0.2)
+    with pytest.raises(ValueError, match="variable"):
+        s.run_sync_ingraph()
+
+    class NotInGraph:
+        def local_train(self, params, edge, n_iters, seed):
+            return params, {}
+
+        def evaluate(self, params):
+            return {"accuracy": 0.0}
+
+    s = ELSession(OL4ELConfig(mode="sync")).with_executor(
+        NotInGraph(), init_params={})
+    with pytest.raises(TypeError, match="in-graph"):
+        s.run_sync_ingraph()
+
+
+def test_ingraph_async_cfg_is_coerced_to_sync():
+    rep = _svm_session("async", budget=900.0, n=800).run_sync_ingraph()
+    assert rep.mode == "sync"
+    assert rep.n_aggregations > 0
+
+
+# ---------------------------------------------------------------------------
+# async cost accounting: charged == scheduled (regression)
+# ---------------------------------------------------------------------------
+
+
+def test_async_charged_cost_equals_scheduled_cost():
+    """With one edge, simulated wall-clock is exactly the sum of scheduled
+    block durations — and the budget must be charged those same draws.
+    (Regression: variable-cost mode used to charge a second independent
+    realized_cost draw at completion.)"""
+    train, test = make_wafer_dataset(n=600, seed=3)
+    exp = get_config("svm-wafer")
+    model = build_model(exp.model)
+    ol = dataclasses.replace(
+        exp.ol4el, mode="async", policy="ol4el", n_edges=1, budget=1200.0,
+        heterogeneity=1.0, utility="eval_gain", seed=3,
+        cost_model="variable", cost_noise=0.3)
+    ex = ClassicExecutor(model, [train], test, batch=32, lr=0.05)
+    rep = (ELSession(ol, metric_name="accuracy", lr=0.05)
+           .with_executor(ex, init_params=model.init(jax.random.key(3)))
+           .run_async())
+    assert rep.n_aggregations >= 3
+    assert rep.total_consumed == pytest.approx(rep.wall_time, abs=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# review regressions: coordinator pre-run access, fast-path cache, policy
+# objects in-graph, ingraph+async benchmark guard
+# ---------------------------------------------------------------------------
+
+
+def test_coordinator_inspectable_and_adjustable_before_run():
+    """Legacy ELSimulator exposed .coord at construction; the session (and
+    shim) must keep pre-run coordinator access working, and mutations must
+    carry into the run that follows."""
+    s = _svm_session("sync", budget=1200.0, n=800)
+    coord = s.coordinator()
+    assert coord.accounts[0].budget == 1200.0
+    coord.charge(0, 1150.0)              # nearly exhaust one edge pre-run
+    rep = s.run_sync()
+    assert s.coord is coord              # the run consumed that instance
+    assert rep.n_aggregations <= 2       # feasibility respected the charge
+    # and the next run starts from a FRESH coordinator (budgets reset)
+    rep2 = s.run_sync()
+    assert s.coord is not coord
+    assert rep2.n_aggregations > rep.n_aggregations
+
+
+def test_simulator_shim_coord_available_pre_run():
+    import warnings
+    train, test = make_wafer_dataset(n=400, seed=0)
+    exp = get_config("svm-wafer")
+    model = build_model(exp.model)
+    ex = ClassicExecutor(model, [train], test, batch=32, lr=0.05)
+    ol = dataclasses.replace(exp.ol4el, mode="sync", n_edges=1,
+                             budget=500.0)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        from repro.federated import ELSimulator
+        sim = ELSimulator(ex, ol, model.init(jax.random.key(0)))
+    assert sim.coord.accounts[0].budget == 500.0
+
+
+def test_ingraph_recompiles_when_session_reconfigured():
+    """The cached compiled program must not survive a weight change."""
+    s = _svm_session("sync", budget=900.0, n=800)
+    s.run_sync_ingraph()
+    prog1 = s._fastpath
+    # skew the aggregation weights -> different program required
+    s._n_samples = np.asarray([10.0, 1.0, 1.0])
+    s.run_sync_ingraph()
+    assert s._fastpath is not prog1
+
+
+def test_ingraph_honors_injected_ol4el_policy_ucb_c():
+    pol = policies.get("ol4el", ucb_c=0.25)
+    s = _svm_session("sync", budget=900.0, n=800).with_policy(pol)
+    rep = s.run_sync_ingraph()
+    assert rep.n_aggregations > 0
+    assert s._fastpath_key[1].ucb_c == 0.25
+
+
+def test_run_el_rejects_ingraph_async():
+    from benchmarks.common import run_el
+    with pytest.raises(ValueError, match="sync-only"):
+        run_el("svm", "ol4el", "async", 3.0, budget=500.0, n_data=400,
+               ingraph=True)

@@ -69,3 +69,23 @@ def test_engine_matches_single_request_decode():
             max_new_tokens=4))
     batched = [r for r in eng3.run() if r.uid == 0][0].output
     assert solo == batched
+
+
+def test_engine_per_slot_temperature():
+    """Each slot samples with its own request's temperature (regression:
+    the whole batch used to inherit the first slot's temperature, so a
+    greedy request admitted after a hot one decoded stochastically)."""
+    cfg, eng1 = _engine(n_slots=1)
+    prompt = np.arange(2, 10, dtype=np.int32)
+    eng1.submit(Request(uid=0, prompt=prompt, max_new_tokens=4,
+                        temperature=0.0))
+    greedy_solo = eng1.run()[0].output
+
+    cfg, eng2 = _engine(n_slots=2)
+    # slot 0 = hot sampler, slot 1 = the greedy request under test
+    eng2.submit(Request(uid=1, prompt=np.arange(5, 13, dtype=np.int32),
+                        max_new_tokens=4, temperature=5.0))
+    eng2.submit(Request(uid=0, prompt=prompt, max_new_tokens=4,
+                        temperature=0.0))
+    batched = [r for r in eng2.run() if r.uid == 0][0].output
+    assert batched == greedy_solo
