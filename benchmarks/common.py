@@ -34,20 +34,21 @@ class ELRun:
     records: list
 
 
-def run_el(workload: str, policy: str, mode: str, heterogeneity: float,
-           n_edges: int = 3, budget: float = 5000.0, seed: int = 0,
-           n_data: int = 20000, cost_noise: float = 0.0,
-           cost_model: str = "fixed", max_interval: int = 10,
-           alpha: float = 100.0, async_alpha: float = 0.5,
-           lr: float | None = None, batch: int | None = None,
-           ingraph: bool = False) -> ELRun:
-    """One EL experiment mirroring the paper's §V setup, through the
-    ``repro.el.ELSession`` façade.
+def make_el_session(workload: str, policy: str, mode: str,
+                    heterogeneity: float, n_edges: int = 3,
+                    budget: float = 5000.0, seed: int = 0,
+                    n_data: int = 20000, cost_noise: float = 0.0,
+                    cost_model: str = "fixed", max_interval: int = 10,
+                    alpha: float = 100.0, async_alpha: float = 0.5,
+                    lr: float | None = None,
+                    batch: int | None = None) -> ELSession:
+    """Build a configured ``ELSession`` mirroring the paper's §V setup
+    (dataset, config, executor, init params) — shared by the single-run
+    and sweep harnesses.
 
     ``alpha`` is the Dirichlet concentration of the per-edge data split:
     the paper partitions data without skew, so the default is IID-like
     (alpha=100); pass alpha<=1 for the non-IID extension experiments.
-    ``ingraph=True`` routes sync runs through the compiled fast path.
     """
     if workload == "svm":
         train, test = make_wafer_dataset(n=n_data, seed=seed)
@@ -67,19 +68,52 @@ def run_el(workload: str, policy: str, mode: str, heterogeneity: float,
         heterogeneity=heterogeneity, utility=utility, seed=seed,
         cost_noise=cost_noise, cost_model=cost_model,
         max_interval=max_interval)
+    edges = partition_edges(train, n_edges, alpha=alpha, seed=seed)
+    ex = ClassicExecutor(model, edges, test, batch=batch, lr=lr)
+    return ELSession(ol, metric_name=metric, lr=lr,
+                     async_alpha=async_alpha).with_executor(
+        ex, init_params=model.init(jax.random.key(seed)),
+        n_samples=[len(e["y"]) for e in edges])
+
+
+def run_el(workload: str, policy: str, mode: str, heterogeneity: float,
+           n_edges: int = 3, budget: float = 5000.0, seed: int = 0,
+           n_data: int = 20000, cost_noise: float = 0.0,
+           cost_model: str = "fixed", max_interval: int = 10,
+           alpha: float = 100.0, async_alpha: float = 0.5,
+           lr: float | None = None, batch: int | None = None,
+           ingraph: bool = False) -> ELRun:
+    """One EL experiment through the ``repro.el.ELSession`` façade.
+    ``ingraph=True`` routes sync runs through the compiled fast path.
+    """
     if ingraph and mode != "sync":
         raise ValueError("ingraph=True is sync-only; an async run cannot be "
                          "routed through the compiled sync fast path")
-    edges = partition_edges(train, n_edges, alpha=alpha, seed=seed)
-    ex = ClassicExecutor(model, edges, test, batch=batch, lr=lr)
-    session = ELSession(ol, metric_name=metric, lr=lr,
-                        async_alpha=async_alpha).with_executor(
-        ex, init_params=model.init(jax.random.key(seed)),
-        n_samples=[len(e["y"]) for e in edges])
+    session = make_el_session(
+        workload, policy, mode, heterogeneity, n_edges=n_edges,
+        budget=budget, seed=seed, n_data=n_data, cost_noise=cost_noise,
+        cost_model=cost_model, max_interval=max_interval, alpha=alpha,
+        async_alpha=async_alpha, lr=lr, batch=batch)
     res = session.run_sync_ingraph() if ingraph else session.run()
     return ELRun(workload, policy, mode, heterogeneity, n_edges, budget,
                  res.final_metric, res.n_aggregations, res.total_consumed,
                  res.records)
+
+
+def run_el_sweep(workload: str, spec, heterogeneity: float = 6.0,
+                 n_edges: int = 3, budget: float = 5000.0, seed: int = 0,
+                 n_data: int = 20000, alpha: float = 100.0,
+                 lr: float | None = None, batch: int | None = None,
+                 mesh=None):
+    """A whole (ucb_c × budget × heterogeneity × seeds) ablation grid as
+    ONE compiled vmapped program (``repro.el.sweep``).  The base session
+    is the same §V setup ``run_el`` uses with (ol4el, sync); returns the
+    ``SweepReport``."""
+    session = make_el_session(
+        workload, "ol4el", "sync", heterogeneity, n_edges=n_edges,
+        budget=budget, seed=seed, n_data=n_data, alpha=alpha, lr=lr,
+        batch=batch)
+    return session.sweep(spec, mesh=mesh)
 
 
 def mean_over_seeds(fn, seeds=(0, 1, 2)) -> Dict[str, float]:

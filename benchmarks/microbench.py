@@ -123,6 +123,28 @@ def run(quiet: bool = False) -> List[Dict]:
         derived=f"acc={ing.final_metric:.3f},"
                 f"speedup={host_us / max(ing_us, 1e-9):.1f}x_vs_host"))
 
+    # ablation sweep: 4 (ucb_c × seed) cells as ONE vmapped compiled
+    # program vs the sequential host-loop equivalent (the pre-sweep way
+    # benchmarks ran grids); per-grid wall-clock, warm in both cases
+    from repro.el.sweep import SweepSpec
+    spec = SweepSpec(ucb_c=(1.0, 2.0), budget=(3000.0,), seeds=(0, 1),
+                     max_rounds=128)
+    t0 = time.perf_counter()
+    for ccfg in spec.cell_cfgs(ol):
+        ELSession(ccfg, metric_name="accuracy", lr=0.05) \
+            .with_executor(ex, n_samples=ns).run_sync()
+    seq_host_us = (time.perf_counter() - t0) * 1e6
+    sw = session()
+    sw.sweep(spec)                              # compile the sweep
+    t0 = time.perf_counter()
+    rep_sw = sw.sweep(spec)
+    sweep_us = (time.perf_counter() - t0) * 1e6
+    rows.append(dict(
+        name="el_sweep_vmapped_4cells", us_per_call=sweep_us,
+        derived=f"acc={float(np.nanmean(rep_sw.final_metrics())):.3f},"
+                f"speedup={seq_host_us / max(sweep_us, 1e-9):.1f}"
+                "x_vs_seq_host"))
+
     if not quiet:
         for row in rows:
             print(f"micro {row['name']:40s} {row['us_per_call']:12.1f} us  "

@@ -13,11 +13,19 @@ never uses utility in the selection step.  This benchmark compares:
 on (a) a controlled bandit instance with a known best arm, and (b) the
 paper's SVM testbed.  Findings are recorded in EXPERIMENTS.md §Repro
 note 5.
+
+The ol4el hyperparameter frontier (``ucb_sweep``) runs through the
+compiled sweep engine: the whole ucb_c × seed grid is ONE vmapped XLA
+program (``repro.el.sweep``) instead of a sequential host loop.
+``--smoke`` runs a tiny 2×2 grid — the CI proof that the compiled sweep
+path works on CPU.
 """
 
 from __future__ import annotations
 
-from typing import Dict, List
+import argparse
+import sys
+from typing import Dict, List, Sequence
 
 import numpy as np
 
@@ -55,6 +63,41 @@ def el_testbed(policy: str, seed: int) -> float:
                   n_data=4000, seed=seed, lr=0.01, batch=32).final_metric
 
 
+def ucb_sweep(seeds: Sequence[int] = (0, 1),
+              ucb_grid: Sequence[float] = (0.5, 2.0, 8.0),
+              budget: float = 1200.0, n_data: int = 4000,
+              heterogeneity: float = 6.0, max_rounds: int = 256,
+              quiet: bool = False) -> List[Dict]:
+    """The ol4el exploration-constant frontier: every (ucb_c, seed) cell
+    of the grid runs inside ONE compiled vmapped program.
+
+    Seeds here vary only the in-program bandit/minibatch RNG streams —
+    the dataset/partition/init are fixed at the base seed (program
+    constants), which isolates selection-rule stochasticity per ucb_c
+    point.  The ``el_testbed`` rows above resample data per seed, so the
+    two sections measure deliberately different randomness sources."""
+    from benchmarks.common import run_el_sweep
+    from repro.el.sweep import SweepSpec
+    spec = SweepSpec(ucb_c=tuple(float(c) for c in ucb_grid),
+                     seeds=tuple(int(s) for s in seeds),
+                     max_rounds=max_rounds)
+    rep = run_el_sweep("svm", spec, heterogeneity, budget=budget,
+                       n_data=n_data, lr=0.01, batch=32)
+    rows = []
+    for g in rep.grouped_rows():
+        rows.append(dict(figure="policy_ablation",
+                         policy=f"ol4el[c={g['ucb_c']:g}]",
+                         svm_acc=round(g["final_metric"], 4),
+                         consumed=round(g["total_consumed"], 1)))
+        if not quiet:
+            print(f"policy ol4el[c={g['ucb_c']:g}] "
+                  f"svm_acc={g['final_metric']:.4f} "
+                  f"(sweep, {g['n_seeds']} seeds)", flush=True)
+    if not quiet:
+        print(f"ucb sweep: {rep.summary()}", flush=True)
+    return rows
+
+
 def run(seeds=(0, 1, 2, 3, 4), with_testbed: bool = True,
         quiet: bool = False) -> List[Dict]:
     rows = []
@@ -71,8 +114,29 @@ def run(seeds=(0, 1, 2, 3, 4), with_testbed: bool = True,
                    + (f" svm_acc={row['svm_acc']:.4f}"
                       if with_testbed else ""))
             print(msg, flush=True)
+    if with_testbed:
+        rows += ucb_sweep(seeds=seeds[:2], quiet=quiet)
     return rows
 
 
-if __name__ == "__main__":
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny 2×2 (ucb_c × seed) compiled-sweep grid "
+                         "only — the CI fast path (~30s on CPU)")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        rows = ucb_sweep(seeds=(0, 1), ucb_grid=(1.0, 4.0), budget=800.0,
+                         n_data=1000, max_rounds=64)
+        assert len(rows) == 2, rows
+        if not all(np.isfinite(r["svm_acc"]) and r["svm_acc"] > 0.5
+                   for r in rows):
+            print("SMOKE FAILED:", rows, file=sys.stderr)
+            sys.exit(1)
+        print("sweep smoke OK")
+        return
     run()
+
+
+if __name__ == "__main__":
+    main()

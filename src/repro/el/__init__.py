@@ -8,7 +8,10 @@ The public surface of the OL4EL reproduction:
   * :mod:`repro.el.policies` — first-class collaboration strategies behind
     a registry (``policies.get("ol4el")``);
   * :class:`EdgeExecutor` — the typed data-plane Protocol executors
-    implement (``ClassicExecutor`` / ``LMExecutor`` satisfy it).
+    implement (``ClassicExecutor`` / ``LMExecutor`` satisfy it);
+  * :mod:`repro.el.sweep` — declarative ablation grids
+    (:class:`SweepSpec`) run as ONE vmapped, mesh-shardable compiled
+    program via ``ELSession.sweep(spec)`` → :class:`SweepReport`.
 """
 
 from repro.el import policies
@@ -16,8 +19,10 @@ from repro.el.executor import (EdgeExecutor, InGraphExecutor,
                                validate_executor)
 from repro.el.report import ELReport, RoundRecord
 from repro.el.session import ELSession
+from repro.el.sweep import SweepReport, SweepSpec
 
 __all__ = [
     "ELSession", "ELReport", "RoundRecord", "EdgeExecutor",
     "InGraphExecutor", "validate_executor", "policies",
+    "SweepSpec", "SweepReport",
 ]

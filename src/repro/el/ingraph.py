@@ -14,10 +14,32 @@ charges the budgets.  This module stages the *entire* budgeted sync loop —
 is ONE compiled program with zero host synchronization.  This is what the
 previously-dormant ``jax_bandit_*`` functions exist for.
 
-Restrictions (asserted by the builder): sync mode, the ``ol4el`` policy,
-the fixed cost model, and a jax-pure executor (``InGraphExecutor`` — i.e.
-``ClassicExecutor``-shaped: raw per-edge arrays + a jittable
-``model.local_step``).  Everything else stays on the host path.
+The control-plane knobs (exploration constant, per-edge budget, cost
+arrays) are *inputs* of the compiled program, not trace-time constants —
+``make_sync_program`` returns ``program(init_params, rng, knobs)`` and
+``sync_knobs(cfg)`` derives the knob arrays on the host.  That is what
+lets ``repro.el.sweep`` vmap the very same program over a flattened
+``[n_cells]`` ablation grid (ucb_c × budget × heterogeneity × seed) and
+run a whole sweep as one XLA program.
+
+Supported configuration matrix (see ``check_ingraph_support``):
+
+  ==============  =======================================================
+  dimension        supported in-graph
+  ==============  =======================================================
+  mode             ``sync`` only (async needs the host event queue)
+  policy           ``ol4el`` only (the compiled 3-step KUBE bandit)
+  cost_model       ``fixed`` and ``variable`` (i.i.d. cost noise drawn
+                   via ``jax.random``, clipped at the host path's 0.1
+                   multiplier floor)
+  utility          ``eval_gain`` (needs a jittable metric) and
+                   ``param_delta``
+  executor         ``InGraphExecutor`` shape — raw per-edge arrays + a
+                   jittable ``model.local_step`` (``ClassicExecutor``)
+  ==============  =======================================================
+
+Everything else stays on the host path (``ELSession.run_sync`` /
+``run_async``).
 """
 
 from __future__ import annotations
@@ -35,6 +57,89 @@ from repro.core.bandit import (jax_bandit_init, jax_bandit_update,
 from repro.core.coordinator import edge_speed_factors
 
 Params = Any
+
+#: Names (and shapes) of the per-run control-plane inputs of the compiled
+#: program: scalars ``ucb_c`` / ``budget``, per-edge ``comp`` / ``comm`` /
+#: ``min_edge_cost`` ``[E]``, and the binding-edge arm costs ``costs_k``
+#: ``[K]``.  The sweep engine stacks each along a leading ``[n_cells]``
+#: axis and vmaps.
+KNOB_NAMES = ("ucb_c", "budget", "comp", "comm", "costs_k", "min_edge_cost")
+
+_INGRAPH_UTILITIES = ("eval_gain", "param_delta")
+_INGRAPH_COST_MODELS = ("fixed", "variable")
+
+#: Attributes an executor must expose to be in-graph capable
+#: (the ``InGraphExecutor`` Protocol, satisfied by ``ClassicExecutor``).
+INGRAPH_EXECUTOR_ATTRS = ("model", "edge_data", "eval_set", "batch", "lr")
+
+
+def _combo(cfg: OL4ELConfig, executor: Any) -> str:
+    ex_name = type(executor).__name__ if executor is not None else "<unset>"
+    return (f"(policy={cfg.policy!r}, cost_model={cfg.cost_model!r}, "
+            f"executor={ex_name})")
+
+
+def check_ingraph_support(cfg: OL4ELConfig, executor: Any = None, *,
+                          caller: str = "the in-graph sync fast path"
+                          ) -> None:
+    """Validate a config/executor combination against the supported matrix.
+
+    Raises ``ValueError`` naming the unsupported (policy, cost_model,
+    executor) combination — see the module docstring for the matrix —
+    or ``TypeError`` when the executor is not in-graph capable.
+    """
+    if cfg.mode != "sync":
+        raise ValueError(
+            f"{caller} is sync-only (cfg.mode={cfg.mode!r}); the async "
+            "event queue runs on the host — use ELSession.run_async()")
+    if cfg.policy != "ol4el":
+        raise ValueError(
+            f"{caller} does not support {_combo(cfg, executor)}: the "
+            "compiled bandit implements the 'ol4el' selection rule only; "
+            "run other policies through the host path ELSession.run()")
+    if cfg.cost_model not in _INGRAPH_COST_MODELS:
+        raise ValueError(
+            f"{caller} does not support {_combo(cfg, executor)}: "
+            f"cost_model must be one of {_INGRAPH_COST_MODELS}")
+    if cfg.utility not in _INGRAPH_UTILITIES:
+        raise ValueError(
+            f"{caller} does not support utility={cfg.utility!r} with "
+            f"{_combo(cfg, executor)}: in-graph utilities are "
+            f"{_INGRAPH_UTILITIES}")
+    if executor is not None:
+        missing = [a for a in INGRAPH_EXECUTOR_ATTRS
+                   if not hasattr(executor, a)]
+        if missing:
+            raise TypeError(
+                f"{type(executor).__name__} is not in-graph capable "
+                f"(missing .{missing[0]}); {caller} with "
+                f"{_combo(cfg, executor)} needs an InGraphExecutor such "
+                "as ClassicExecutor (raw per-edge arrays + a jittable "
+                "model.local_step)")
+
+
+def sync_knobs(cfg: OL4ELConfig) -> Dict[str, np.ndarray]:
+    """Host-side control-plane inputs of the compiled sync program.
+
+    All float32, computed with the exact numpy arithmetic the scalar fast
+    path used to bake in as constants, so passing them as traced inputs
+    reproduces the same program bit-for-bit.  The sweep engine calls this
+    once per cell and stacks along a leading ``[n_cells]`` axis.
+    """
+    speed = edge_speed_factors(cfg.n_edges, cfg.heterogeneity)
+    comp = np.asarray(cfg.comp_cost * speed, np.float32)            # [E]
+    comm = np.full((cfg.n_edges,), cfg.comm_cost, np.float32)       # [E]
+    intervals_f = np.arange(1, cfg.max_interval + 1, dtype=np.float32)
+    # sync feasibility is scored against the binding (slowest) edge
+    worst = int(np.argmax(comp))
+    return {
+        "ucb_c": np.float32(cfg.ucb_c),
+        "budget": np.float32(cfg.budget),
+        "comp": comp,
+        "comm": comm,
+        "costs_k": intervals_f * comp[worst] + comm[worst],         # [K]
+        "min_edge_cost": comp + comm,                               # [E]
+    }
 
 
 def _pad_edge_data(edge_data: List[Dict[str, np.ndarray]]
@@ -76,41 +181,28 @@ def _tree_l2(a: Params, b: Params) -> jax.Array:
     return jnp.sqrt(total)
 
 
-def make_sync_fastpath(model, edge_data, eval_set, cfg: OL4ELConfig, *,
-                       lr: float, batch: int,
-                       n_samples: Optional[np.ndarray] = None,
-                       metric_fn: Optional[Callable] = None,
-                       metric_name: str = "accuracy",
-                       max_rounds: int = 512):
-    """Build ``program(init_params, rng) -> (params, out)`` — the whole
-    budgeted sync run as one jitted ``lax.while_loop``.
+def make_sync_program(model, edge_data, eval_set, cfg: OL4ELConfig, *,
+                      lr: float, batch: int,
+                      n_samples: Optional[np.ndarray] = None,
+                      metric_fn: Optional[Callable] = None,
+                      metric_name: str = "accuracy",
+                      max_rounds: int = 512):
+    """Build ``program(init_params, rng, knobs) -> (params, out)`` — the
+    whole budgeted sync run as one ``lax.while_loop``, with the
+    control-plane knobs (see ``KNOB_NAMES`` / ``sync_knobs``) as traced
+    inputs so one compiled program serves any (ucb_c, budget, cost) point
+    — and so ``repro.el.sweep`` can vmap it over a whole ablation grid.
 
     ``out`` is a dict of device arrays: per-round ``metric``, ``utility``,
     ``interval``, ``consumed`` (cumulative total across edges), ``wall``
     (cumulative straggler time), plus scalars ``n_rounds`` and the final
     per-edge ``budgets_left``.
     """
-    if cfg.mode != "sync":
-        raise ValueError("the in-graph fast path is sync-only "
-                         f"(cfg.mode={cfg.mode!r})")
-    if cfg.policy != "ol4el":
-        raise ValueError("the in-graph fast path implements the ol4el "
-                         f"selection rule only (cfg.policy={cfg.policy!r})")
-    if cfg.cost_model != "fixed":
-        raise ValueError("variable-cost mode draws host-side noise; use the "
-                         "host path (cfg.cost_model must be 'fixed')")
-    if cfg.utility not in ("eval_gain", "param_delta"):
-        raise ValueError(f"unsupported in-graph utility {cfg.utility!r}")
+    check_ingraph_support(cfg, caller="make_sync_program")
 
     n_edges, k = cfg.n_edges, cfg.max_interval
-    speed = edge_speed_factors(n_edges, cfg.heterogeneity)
-    comp = jnp.asarray(cfg.comp_cost * speed, jnp.float32)          # [E]
-    comm = jnp.full((n_edges,), cfg.comm_cost, jnp.float32)         # [E]
-    intervals_f = jnp.arange(1, k + 1, dtype=jnp.float32)
-    # sync feasibility is scored against the binding (slowest) edge
-    worst = int(np.argmax(np.asarray(comp)))
-    costs_k = intervals_f * comp[worst] + comm[worst]               # [K]
-    min_edge_cost = comp + comm                                     # [E]
+    variable_cost = (cfg.cost_model == "variable")
+    cost_noise = float(cfg.cost_noise)
 
     xs, ys, n_per_edge = _pad_edge_data(edge_data)
     w_agg = (np.ones(n_edges) if n_samples is None
@@ -146,59 +238,80 @@ def make_sync_fastpath(model, edge_data, eval_set, cfg: OL4ELConfig, *,
                 "e...,e->...", leaf.astype(jnp.float32), w_agg
             ).astype(leaf.dtype), trees)
 
-    def cond(carry):
-        (_, _, consumed, t, _, _, _, _) = carry
-        resid = cfg.budget - consumed                                # [E]
-        affordable = jnp.min(resid) >= jnp.min(costs_k) - 1e-12
-        exhausted = jnp.any(resid < min_edge_cost)
-        return (t < max_rounds) & affordable & ~exhausted
+    def program(init_params: Params, rng: jax.Array,
+                knobs: Dict[str, jax.Array]):
+        ucb_c = knobs["ucb_c"]
+        budget = knobs["budget"]
+        comp, comm = knobs["comp"], knobs["comm"]
+        costs_k = knobs["costs_k"]
+        min_edge_cost = knobs["min_edge_cost"]
 
-    def body(carry):
-        (params, bstate, consumed, t, rng, prev_metric, wall, hist) = carry
-        rng, k_sel, k_data = jax.random.split(rng, 3)
-        resid = jnp.min(cfg.budget - consumed)
-        w = jax_selection_weights(bstate, resid, costs_k, cfg.ucb_c)
-        logits = jnp.where(w > 0, jnp.log(jnp.maximum(w, 1e-30)), -jnp.inf)
-        arm = jax.random.categorical(k_sel, logits)
-        interval = arm + 1
+        def cond(carry):
+            (_, _, consumed, t, _, _, _, _) = carry
+            resid = budget - consumed                                # [E]
+            affordable = jnp.min(resid) >= jnp.min(costs_k) - 1e-12
+            exhausted = jnp.any(resid < min_edge_cost)
+            return (t < max_rounds) & affordable & ~exhausted
 
-        edge_ids = jnp.arange(n_edges)
-        keys = jax.vmap(lambda e: jax.random.fold_in(k_data, e))(edge_ids)
-        bcast = jax.tree.map(
-            lambda x: jnp.broadcast_to(x, (n_edges,) + x.shape), params)
-        edge_params = jax.vmap(local_block, in_axes=(0, 0, None, 0))(
-            bcast, edge_ids, interval, keys)
-        new_params = weighted_mean(edge_params)
+        def body(carry):
+            (params, bstate, consumed, t, rng, prev_metric, wall,
+             hist) = carry
+            rng, k_sel, k_data = jax.random.split(rng, 3)
+            resid = jnp.min(budget - consumed)
+            w = jax_selection_weights(bstate, resid, costs_k, ucb_c)
+            logits = jnp.where(w > 0, jnp.log(jnp.maximum(w, 1e-30)),
+                               -jnp.inf)
+            arm = jax.random.categorical(k_sel, logits)
+            interval = arm + 1
 
-        # straggler semantics: every edge's clock advances by the slowest
-        # edge's round time (matches CloudCoordinator.charge in run_sync)
-        round_costs = interval.astype(jnp.float32) * comp + comm     # [E]
-        slot = jnp.max(round_costs)
-        consumed = consumed + slot
+            edge_ids = jnp.arange(n_edges)
+            keys = jax.vmap(lambda e: jax.random.fold_in(k_data, e))(edge_ids)
+            bcast = jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (n_edges,) + x.shape), params)
+            edge_params = jax.vmap(local_block, in_axes=(0, 0, None, 0))(
+                bcast, edge_ids, interval, keys)
+            new_params = weighted_mean(edge_params)
 
-        if metric_fn is not None:
-            metric = metric_fn(new_params)
-        else:
-            metric = jnp.float32(jnp.nan)
-        if cfg.utility == "eval_gain":
-            utility = metric - prev_metric
-        else:                                  # param_delta (§III.A)
-            utility = 1.0 / (1.0 + _tree_l2(params, new_params))
+            # straggler semantics: every edge's clock advances by the
+            # slowest edge's round time (matches CloudCoordinator.charge
+            # in run_sync)
+            round_costs = interval.astype(jnp.float32) * comp + comm  # [E]
+            if variable_cost:
+                # host semantics (CloudCoordinator.realized_cost): each
+                # edge's realized cost is the expected cost times an
+                # i.i.d. multiplier max(0.1, 1 + noise·N(0,1)).  The key
+                # is derived from k_data OUTSIDE the per-edge fold range
+                # [0, n_edges), so the fixed-cost RNG streams are
+                # untouched (noise=0 reproduces fixed bit-for-bit).
+                k_cost = jax.random.fold_in(k_data, n_edges)
+                eps = jax.random.normal(k_cost, (n_edges,))
+                mult = jnp.maximum(0.1, 1.0 + cost_noise * eps)
+                round_costs = round_costs * mult
+            slot = jnp.max(round_costs)
+            consumed = consumed + slot
 
-        bstate = jax_bandit_update(bstate, arm, utility, slot)
-        wall = wall + slot
-        hist = {
-            "metric": hist["metric"].at[t].set(metric),
-            "utility": hist["utility"].at[t].set(utility),
-            "interval": hist["interval"].at[t].set(interval),
-            "consumed": hist["consumed"].at[t].set(
-                jnp.sum(consumed)),
-            "wall": hist["wall"].at[t].set(wall),
-        }
-        return (new_params, bstate, consumed, t + 1, rng, metric, wall,
-                hist)
+            if metric_fn is not None:
+                metric = metric_fn(new_params)
+            else:
+                metric = jnp.float32(jnp.nan)
+            if cfg.utility == "eval_gain":
+                utility = metric - prev_metric
+            else:                              # param_delta (§III.A)
+                utility = 1.0 / (1.0 + _tree_l2(params, new_params))
 
-    def program(init_params: Params, rng: jax.Array):
+            bstate = jax_bandit_update(bstate, arm, utility, slot)
+            wall = wall + slot
+            hist = {
+                "metric": hist["metric"].at[t].set(metric),
+                "utility": hist["utility"].at[t].set(utility),
+                "interval": hist["interval"].at[t].set(interval),
+                "consumed": hist["consumed"].at[t].set(
+                    jnp.sum(consumed)),
+                "wall": hist["wall"].at[t].set(wall),
+            }
+            return (new_params, bstate, consumed, t + 1, rng, metric, wall,
+                    hist)
+
         bstate = jax_bandit_init(k)
         consumed = jnp.zeros((n_edges,), jnp.float32)
         if metric_fn is not None:
@@ -218,9 +331,10 @@ def make_sync_fastpath(model, edge_data, eval_set, cfg: OL4ELConfig, *,
             lax.while_loop(cond, body, carry)
         out = dict(hist)
         out["n_rounds"] = t
-        out["budgets_left"] = cfg.budget - consumed
+        out["budgets_left"] = budget - consumed
         out["arm_pulls"] = bstate["counts"]
         out["wall_time"] = wall
         return params, out
 
     return program
+

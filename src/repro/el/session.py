@@ -60,6 +60,8 @@ class ELSession:
         self._coord_consumed = False
         self._fastpath = None                           # compiled program
         self._fastpath_key = None
+        self._sweep_program = None                      # compiled sweep
+        self._sweep_key = None
 
     # -- builder API ---------------------------------------------------------
 
@@ -289,36 +291,58 @@ class ELSession:
 
     # -- compiled fast path ---------------------------------------------------
 
-    def run_sync_ingraph(self, max_rounds: int = 512,
-                         metric_fn: Optional[Callable] = None) -> ELReport:
-        """Run the whole budgeted sync loop as ONE compiled XLA program.
+    @staticmethod
+    def _structural_cfg(cfg: OL4ELConfig) -> OL4ELConfig:
+        """The config with the knob fields normalized away: ucb_c, budget,
+        heterogeneity and seed enter the compiled program as traced inputs
+        (``sync_knobs`` / the rng key), so cache keys built from this reuse
+        one program across any knob point."""
+        return dataclasses.replace(cfg, ucb_c=0.0, budget=0.0,
+                                   heterogeneity=1.0, seed=0)
 
-        Numerically equivalent (up to RNG streams) to ``run_sync`` under
-        the fast path's contract: sync mode, ``ol4el`` policy, fixed
-        costs, and an ``InGraphExecutor`` (e.g. ``ClassicExecutor``).
-        Callbacks still fire, streamed after the device loop finishes.
-        """
-        from repro.el.ingraph import make_sync_fastpath
-        ex = self._require_executor()
-        for attr in ("model", "edge_data", "eval_set", "batch", "lr"):
-            if not hasattr(ex, attr):
-                raise TypeError(
-                    f"{type(ex).__name__} is not in-graph capable (missing "
-                    f".{attr}); run_sync_ingraph needs an InGraphExecutor "
-                    "such as ClassicExecutor")
+    def _ingraph_cfg(self, caller: str) -> OL4ELConfig:
+        """The effective (sync-coerced, support-checked) fast-path config."""
+        from repro.el.ingraph import check_ingraph_support
         cfg = self.cfg
         if cfg.mode != "sync":
             cfg = dataclasses.replace(cfg, mode="sync")
         # an injected ol4el Policy object carries its own exploration
         # constant; honor it like the host path does (other policy objects
-        # are already rejected by the fast path's cfg.policy guard)
+        # are rejected by the support check below)
         if self._policy is not None and self._policy.name == "ol4el":
             cfg = dataclasses.replace(cfg, ucb_c=self._policy.ucb_c)
+        check_ingraph_support(cfg, self._require_executor(), caller=caller)
+        return cfg
+
+    def run_sync_ingraph(self, max_rounds: int = 512,
+                         metric_fn: Optional[Callable] = None) -> ELReport:
+        """Run the whole budgeted sync loop as ONE compiled XLA program.
+
+        Numerically equivalent (up to RNG streams) to ``run_sync`` under
+        the fast path's contract — the supported matrix (see
+        ``repro.el.ingraph``) is:
+
+        ============  =====================================================
+        mode           ``sync`` only (async runs need the host event queue)
+        policy         ``ol4el`` only (the compiled 3-step KUBE bandit)
+        cost_model     ``fixed`` or ``variable`` (in-graph cost noise)
+        utility        ``eval_gain`` (jittable metric) or ``param_delta``
+        executor       ``InGraphExecutor`` (e.g. ``ClassicExecutor``)
+        ============  =====================================================
+
+        Unsupported (policy, cost_model, executor) combinations raise an
+        informative ``ValueError``/``TypeError`` naming the combination.
+        Callbacks still fire, streamed after the device loop finishes.
+        """
+        from repro.el.ingraph import make_sync_program, sync_knobs
+        ex = self._require_executor()
+        cfg = self._ingraph_cfg("run_sync_ingraph")
         t0 = time.perf_counter()
-        key = (ex, cfg, max_rounds, metric_fn, self.metric_name,
+        key = (ex, self._structural_cfg(cfg), max_rounds, metric_fn,
+               self.metric_name,
                None if self._n_samples is None else tuple(self._n_samples))
         if self._fastpath is None or self._fastpath_key != key:
-            self._fastpath = jax.jit(make_sync_fastpath(
+            self._fastpath = jax.jit(make_sync_program(
                 ex.model, ex.edge_data, ex.eval_set, cfg,
                 lr=ex.lr, batch=ex.batch, n_samples=self._n_samples,
                 metric_fn=metric_fn, metric_name=self.metric_name,
@@ -327,7 +351,8 @@ class ELSession:
         program = self._fastpath
         params = self._initial_params()
         params, out = jax.block_until_ready(
-            program(params, jax.random.key(cfg.seed + 17)))
+            program(params, jax.random.key(cfg.seed + 17),
+                    sync_knobs(cfg)))
         n = int(out["n_rounds"])
         records: List[RoundRecord] = []
         for t in range(n):
@@ -350,6 +375,56 @@ class ELSession:
             elapsed_s=time.perf_counter() - t0,
             final_params=params,
         )
+
+    # -- compiled ablation sweeps ---------------------------------------------
+
+    def sweep(self, spec, *, mesh=None,
+              metric_fn: Optional[Callable] = None):
+        """Run a whole ablation grid as ONE compiled, vmapped program.
+
+        ``spec`` is a :class:`repro.el.sweep.SweepSpec` — grids over
+        ``ucb_c`` / ``budget`` / ``heterogeneity`` / ``seeds``; empty axes
+        inherit this session's config.  Every cell is bit-identical to an
+        independent ``run_sync_ingraph`` with that cell's config (same
+        RNG streams), and the same support matrix applies.  With
+        ``mesh=`` the sweep dim shards over the mesh's (``pod``,
+        ``data``) axes.  Returns a :class:`repro.el.sweep.SweepReport`.
+        """
+        from repro.el.sweep.engine import (make_sweep_program,
+                                           run_sweep_program)
+        from repro.el.sweep.report import SweepReport
+        ex = self._require_executor()
+        cfg = self._ingraph_cfg("ELSession.sweep")
+        t0 = time.perf_counter()
+        # the jitted vmapped program only depends on the structural config,
+        # the grid SHAPE (axis lengths fix the [n_cells] dim and, with a
+        # mesh, the input shardings) and max_rounds — not the knob values
+        axes = spec.axes(cfg)
+        spec_shape = (tuple(len(v) for v in axes.values()),
+                      spec.max_rounds)
+        key = (ex, self._structural_cfg(cfg), spec_shape, metric_fn,
+               self.metric_name, mesh,
+               None if self._n_samples is None else tuple(self._n_samples))
+        if self._sweep_program is None or self._sweep_key != key:
+            self._sweep_program = make_sweep_program(
+                ex.model, ex.edge_data, ex.eval_set, cfg, spec,
+                lr=ex.lr, batch=ex.batch, n_samples=self._n_samples,
+                metric_fn=metric_fn, metric_name=self.metric_name,
+                mesh=mesh)
+            self._sweep_key = key
+        params, out = run_sweep_program(
+            self._sweep_program, self._initial_params(),
+            spec.cell_cfgs(cfg))
+        report = SweepReport(
+            spec=spec, axes=spec.axes(cfg), cells=spec.cells(cfg),
+            out=out, policy=cfg.policy,
+            elapsed_s=time.perf_counter() - t0, final_params=params)
+        # workloads without a jittable metric (e.g. K-means F1) run the
+        # program with NaN metric history; score the final params host-side
+        # so the report's frontier still has an accuracy axis
+        report.score_final_params(
+            lambda p: ex.evaluate(p)[self.metric_name])
+        return report
 
     # -- AC-sync estimator plumbing -------------------------------------------
 

@@ -1,0 +1,146 @@
+"""The sweep engine: one vmapped, optionally mesh-sharded XLA program.
+
+``make_sync_program`` (repro.el.ingraph) already takes the control-plane
+knobs as traced inputs; this module stacks per-cell knob arrays along a
+leading ``[n_cells]`` axis, vmaps the program over that axis, and jits —
+so a whole ablation grid (every cell bit-identical to an independent
+``run_sync_ingraph`` with that cell's config) is ONE compiled program.
+
+On a multi-device mesh the sweep dim shards over the mesh's edge axes
+(``pod``, ``data``) and the per-edge knob dim over ``model`` when
+divisible — the same placement the fleet data plane uses
+(``el_state_specs`` in ``repro.federated.local_sgd``), so large grids
+scale across the production mesh.  Output shardings are left to GSPMD
+propagation from the inputs.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import OL4ELConfig
+from repro.el.ingraph import KNOB_NAMES, make_sync_program, sync_knobs
+from repro.el.sweep.spec import SweepSpec
+
+Params = Any
+
+#: Knobs with a trailing per-edge dim [n_cells, E] (shardable over model).
+_EDGE_KNOBS = ("comp", "comm", "min_edge_cost")
+
+
+def stack_knobs(cell_cfgs: Sequence[OL4ELConfig]) -> Dict[str, np.ndarray]:
+    """Per-cell ``sync_knobs`` stacked along a leading [n_cells] axis."""
+    per_cell = [sync_knobs(c) for c in cell_cfgs]
+    return {k: np.stack([knobs[k] for knobs in per_cell])
+            for k in KNOB_NAMES}
+
+
+def cell_keys(cell_cfgs: Sequence[OL4ELConfig]) -> jax.Array:
+    """Stacked per-cell PRNG keys — the exact stream ``run_sync_ingraph``
+    seeds for that cell's config (``jax.random.key(seed + 17)``)."""
+    # int32 matches the scalar path's x64-disabled seed canonicalization
+    # (negative seeds wrap identically; >= 2**31 overflows on both paths)
+    seeds = jnp.asarray([c.seed + 17 for c in cell_cfgs], jnp.int32)
+    return jax.vmap(jax.random.key)(seeds)
+
+
+# ---------------------------------------------------------------------------
+# Mesh placement (el_state_specs pattern: lead dim over pod/data, inner
+# parallel dim over model when divisible)
+# ---------------------------------------------------------------------------
+
+
+def _axis_sizes(mesh) -> Dict[str, int]:
+    return dict(zip(mesh.axis_names, np.shape(mesh.devices)))
+
+
+def sweep_partition_specs(axis_names: Sequence[str],
+                          axis_sizes: Dict[str, int],
+                          n_cells: int, n_edges: int
+                          ) -> Tuple[P, Dict[str, P]]:
+    """PartitionSpecs for (keys, knobs): sweep dim over the edge axes,
+    per-edge knob dim over ``model`` when divisible.  Pure (no devices) so
+    placement policy is unit-testable; raises ``ValueError`` when the grid
+    does not tile the mesh."""
+    sweep_axes = tuple(a for a in ("pod", "data") if a in axis_names)
+    if not sweep_axes:
+        raise ValueError(
+            f"mesh axes {tuple(axis_names)} have no edge axes "
+            "('pod'/'data') to shard the sweep dim over")
+    n_shards = math.prod(axis_sizes[a] for a in sweep_axes)
+    if n_cells % n_shards != 0:
+        raise ValueError(
+            f"sweep of {n_cells} cells does not tile the mesh's "
+            f"{sweep_axes} axes ({n_shards} shards); pad the grid (e.g. "
+            f"add seeds) to a multiple of {n_shards} or run without a "
+            "mesh")
+    model_size = axis_sizes.get("model", 1)
+    edge_ax = "model" if (model_size > 1
+                          and n_edges % model_size == 0) else None
+    key_spec = P(sweep_axes)
+    knob_specs = {
+        name: (P(sweep_axes, edge_ax) if name in _EDGE_KNOBS
+               else P(sweep_axes) if name in ("ucb_c", "budget")
+               else P(sweep_axes, None))            # costs_k [C, K]
+        for name in KNOB_NAMES
+    }
+    return key_spec, knob_specs
+
+
+def sweep_input_shardings(mesh, n_cells: int, n_edges: int):
+    """NamedShardings for the vmapped program's (init_params, keys,
+    knobs) arguments: params replicated, sweep dim over the edge axes."""
+    key_spec, knob_specs = sweep_partition_specs(
+        mesh.axis_names, _axis_sizes(mesh), n_cells, n_edges)
+    return (NamedSharding(mesh, P()),
+            NamedSharding(mesh, key_spec),
+            {k: NamedSharding(mesh, s) for k, s in knob_specs.items()})
+
+
+# ---------------------------------------------------------------------------
+# Program construction
+# ---------------------------------------------------------------------------
+
+
+def make_sweep_program(model, edge_data, eval_set, cfg: OL4ELConfig,
+                       spec: SweepSpec, *, lr: float, batch: int,
+                       n_samples: Optional[np.ndarray] = None,
+                       metric_fn: Optional[Callable] = None,
+                       metric_name: str = "accuracy",
+                       mesh=None):
+    """Compile the sweep: ``program(init_params, keys, knobs)`` →
+    ``(params_stacked, out_stacked)`` with every output carrying a
+    leading ``[n_cells]`` axis.
+
+    The per-cell computation is ``jax.vmap`` of the very same
+    ``make_sync_program`` program ``run_sync_ingraph`` drives, so each
+    cell is bit-identical to an independent run with that cell's config.
+    """
+    cfgs = spec.cell_cfgs(cfg)
+    # structural fields (n_edges, utility, cost_model, ...) are identical
+    # across cells by SweepSpec construction — any cell builds the program
+    core = make_sync_program(
+        model, edge_data, eval_set, cfgs[0], lr=lr, batch=batch,
+        n_samples=n_samples, metric_fn=metric_fn, metric_name=metric_name,
+        max_rounds=spec.max_rounds)
+    vmapped = jax.vmap(core, in_axes=(None, 0, 0))
+    if mesh is None:
+        return jax.jit(vmapped)
+    return jax.jit(vmapped, in_shardings=sweep_input_shardings(
+        mesh, spec.n_cells, cfg.n_edges))
+
+
+def run_sweep_program(program, init_params: Params,
+                      cell_cfgs: List[OL4ELConfig]
+                      ) -> Tuple[Params, Dict[str, np.ndarray]]:
+    """Execute a compiled sweep program and pull the outputs to host."""
+    knobs = stack_knobs(cell_cfgs)
+    keys = cell_keys(cell_cfgs)
+    params, out = jax.block_until_ready(program(init_params, keys, knobs))
+    return params, {k: np.asarray(v) for k, v in out.items()}

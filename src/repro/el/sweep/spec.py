@@ -1,0 +1,122 @@
+"""``SweepSpec`` — a declarative ablation grid over the EL control plane.
+
+The paper's headline results are exactly these grids: policy
+hyperparameters × budgets × heterogeneity, repeated over seeds (Figs.
+3–5).  A ``SweepSpec`` names the axes; the engine flattens them
+row-major into ``[n_cells]`` (seed fastest, so seed-replicates of one
+hyperparameter point are contiguous) and runs every cell inside one
+compiled, vmapped XLA program.
+
+Only knobs that enter the compiled sync program as *traced inputs* are
+sweepable (``repro.el.ingraph.KNOB_NAMES`` territory): the ``ol4el``
+exploration constant ``ucb_c``, the per-edge ``budget``, the fleet
+``heterogeneity`` (it only moves the cost arrays), and the bandit/data
+``seed``.  Structural knobs (n_edges, max_interval, utility, policy,
+cost_model) change the program itself and stay fixed across a sweep —
+run several sweeps to compare those.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Sequence, Tuple
+
+from repro.config import OL4ELConfig
+
+#: Sweep-axis order; the flattened cell index is row-major over these,
+#: so ``seed`` varies fastest.
+AXIS_ORDER = ("ucb_c", "budget", "heterogeneity", "seed")
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepSpec:
+    """Grids over the sweepable control-plane knobs.
+
+    An empty axis (the default) means "inherit the session config's
+    value" — a one-point axis.  ``seeds`` must name at least one seed.
+
+    Seed semantics: a sweep seed varies the *in-program* RNG streams
+    (bandit selection, minibatch sampling, cost noise) — the dataset,
+    edge partition and init params are program constants shared by every
+    cell.  To resample those too, run one sweep per data seed.
+    """
+
+    ucb_c: Tuple[float, ...] = ()
+    budget: Tuple[float, ...] = ()
+    heterogeneity: Tuple[float, ...] = ()
+    seeds: Tuple[int, ...] = (0,)
+    max_rounds: int = 256
+
+    def __post_init__(self):
+        for name in ("ucb_c", "budget", "heterogeneity", "seeds"):
+            vals = getattr(self, name)
+            if not isinstance(vals, tuple):
+                object.__setattr__(self, name, tuple(vals))
+        if not self.seeds:
+            raise ValueError("SweepSpec.seeds must name at least one seed")
+        if self.max_rounds <= 0:
+            raise ValueError(
+                f"SweepSpec.max_rounds must be positive, got "
+                f"{self.max_rounds}")
+        if any(b <= 0 for b in self.budget):
+            raise ValueError(f"SweepSpec.budget values must be positive, "
+                             f"got {self.budget}")
+        if any(h < 1.0 for h in self.heterogeneity):
+            raise ValueError("SweepSpec.heterogeneity values are "
+                             "fastest/slowest ratios and must be >= 1, "
+                             f"got {self.heterogeneity}")
+
+    # -- flattening ----------------------------------------------------------
+
+    def axes(self, cfg: OL4ELConfig) -> Dict[str, Tuple]:
+        """Axis name -> values, empty axes defaulted from ``cfg``."""
+        return {
+            "ucb_c": self.ucb_c or (cfg.ucb_c,),
+            "budget": self.budget or (cfg.budget,),
+            "heterogeneity": self.heterogeneity or (cfg.heterogeneity,),
+            "seed": self.seeds,
+        }
+
+    @property
+    def n_cells(self) -> int:
+        n = 1
+        for vals in (self.ucb_c or (None,), self.budget or (None,),
+                     self.heterogeneity or (None,), self.seeds):
+            n *= len(vals)
+        return n
+
+    def cells(self, cfg: OL4ELConfig) -> List[Dict[str, float]]:
+        """The flattened ``[n_cells]`` grid, row-major (seed fastest)."""
+        axes = self.axes(cfg)
+        return [dict(zip(AXIS_ORDER, combo))
+                for combo in itertools.product(*(axes[a]
+                                                 for a in AXIS_ORDER))]
+
+    def cell_cfgs(self, cfg: OL4ELConfig) -> List[OL4ELConfig]:
+        """One per-cell config per flattened cell — exactly what an
+        independent ``run_sync_ingraph`` of that cell would use (the
+        sweep-vs-independent equivalence tests lean on this)."""
+        return [dataclasses.replace(
+            cfg, mode="sync", ucb_c=float(c["ucb_c"]),
+            budget=float(c["budget"]),
+            heterogeneity=float(c["heterogeneity"]), seed=int(c["seed"]))
+            for c in self.cells(cfg)]
+
+    def describe(self, cfg: OL4ELConfig) -> str:
+        axes = self.axes(cfg)
+        dims = " × ".join(f"{len(v)} {k}" for k, v in axes.items())
+        return f"{self.n_cells} cells ({dims}), max_rounds={self.max_rounds}"
+
+
+def spec_from_sequences(ucb_c: Sequence[float] = (),
+                        budget: Sequence[float] = (),
+                        heterogeneity: Sequence[float] = (),
+                        seeds: Sequence[int] = (0,),
+                        max_rounds: int = 256) -> SweepSpec:
+    """CLI-friendly constructor (lists in, validated tuples out)."""
+    return SweepSpec(ucb_c=tuple(float(x) for x in ucb_c),
+                     budget=tuple(float(x) for x in budget),
+                     heterogeneity=tuple(float(x) for x in heterogeneity),
+                     seeds=tuple(int(s) for s in seeds),
+                     max_rounds=int(max_rounds))

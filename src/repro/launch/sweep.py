@@ -1,0 +1,143 @@
+"""Ablation-sweep launcher: a whole hyperparameter grid as ONE program.
+
+    PYTHONPATH=src python -m repro.launch.sweep --arch svm-wafer \
+        --ucb-c 1.0 2.0 --budget 2000 4000 --seeds 0 1 2
+
+Flattens the grid (ucb_c × budget × heterogeneity × seeds) into
+``[n_cells]``, vmaps the compiled in-graph EL program over it
+(``repro.el.sweep``), and prints per-cell rows, seed-mean curves and the
+accuracy-vs-resource Pareto frontier.
+
+``--mesh debug`` runs the sharded path on forced host devices (the sweep
+dim over the mesh's ``data`` axis, the knob edge dim over ``model``) —
+the same placement a TPU fleet uses via ``repro.launch.mesh``.
+``REPRO_SWEEP_DEVICES`` sets the forced device count (default 4); the
+debug mesh takes shape ``(count//2, 2)``, so 8 devices give a 4-wide
+sweep (``data``) axis.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+
+def _force_host_devices() -> None:
+    """Must run before jax initializes: emulate a small device fleet when
+    a mesh is requested (mirrors repro.launch.dryrun)."""
+    mode = None
+    for i, arg in enumerate(sys.argv):
+        if arg == "--mesh" and i + 1 < len(sys.argv):
+            mode = sys.argv[i + 1]
+        elif arg.startswith("--mesh="):
+            mode = arg.split("=", 1)[1]
+    if mode not in (None, "none"):
+        n = os.environ.get("REPRO_SWEEP_DEVICES", "4")
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + " --xla_force_host_platform_device_count=" + n)
+
+
+_force_host_devices()
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.config import CLASSIC_IDS, get_config
+from repro.data import (make_traffic_dataset, make_wafer_dataset,
+                        partition_edges)
+from repro.el import ELSession
+from repro.el.sweep import spec_from_sequences
+from repro.federated import ClassicExecutor
+from repro.launch.mesh import make_debug_mesh
+from repro.models import build_model
+
+
+def build_session(args) -> ELSession:
+    if args.arch == "svm-wafer":
+        train, test = make_wafer_dataset(n=args.samples, seed=args.data_seed)
+        metric, lr, batch, utility = "accuracy", 0.05, 64, "eval_gain"
+    else:
+        train, test = make_traffic_dataset(n=args.samples,
+                                           seed=args.data_seed)
+        metric, lr, batch, utility = "f1", 1.0, 128, "param_delta"
+    exp = get_config(args.arch)
+    model = build_model(exp.model)
+    ol = dataclasses.replace(
+        exp.ol4el, mode="sync", policy="ol4el", n_edges=args.edges,
+        utility=utility, cost_model=args.cost_model,
+        cost_noise=args.cost_noise, max_interval=args.max_interval)
+    edges = partition_edges(train, args.edges, alpha=args.alpha,
+                            seed=args.data_seed)
+    ex = ClassicExecutor(model, edges, test, batch=batch, lr=lr)
+    return (ELSession(ol, metric_name=metric, lr=lr)
+            .with_executor(ex,
+                           init_params=model.init(
+                               jax.random.key(args.data_seed)),
+                           n_samples=[len(e["y"]) for e in edges]))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="run an OL4EL ablation grid as one compiled program")
+    ap.add_argument("--arch", default="svm-wafer", choices=CLASSIC_IDS)
+    ap.add_argument("--ucb-c", type=float, nargs="*", default=[],
+                    help="ol4el exploration-constant grid")
+    ap.add_argument("--budget", type=float, nargs="*", default=[],
+                    help="per-edge budget grid")
+    ap.add_argument("--heterogeneity", type=float, nargs="*", default=[],
+                    help="fleet heterogeneity (H) grid")
+    ap.add_argument("--seeds", type=int, nargs="*", default=[0, 1])
+    ap.add_argument("--max-rounds", type=int, default=256)
+    ap.add_argument("--edges", type=int, default=3)
+    ap.add_argument("--samples", type=int, default=4000)
+    ap.add_argument("--alpha", type=float, default=100.0,
+                    help="Dirichlet concentration of the edge data split")
+    ap.add_argument("--cost-model", default="fixed",
+                    choices=["fixed", "variable"])
+    ap.add_argument("--cost-noise", type=float, default=0.0)
+    ap.add_argument("--max-interval", type=int, default=10)
+    ap.add_argument("--data-seed", type=int, default=0)
+    ap.add_argument("--mesh", default="none", choices=["none", "debug"],
+                    help="'debug': shard the sweep over a 2x2 host-device "
+                         "mesh (the production placement, CPU-emulated)")
+    args = ap.parse_args()
+
+    spec = spec_from_sequences(
+        ucb_c=args.ucb_c, budget=args.budget,
+        heterogeneity=args.heterogeneity, seeds=args.seeds,
+        max_rounds=args.max_rounds)
+    mesh = None
+    if args.mesh == "debug":
+        # mesh shape follows the forced device count: (count//2, 2) —
+        # REPRO_SWEEP_DEVICES=8 gives a (4, 2) mesh, 4 (default) a (2, 2)
+        n_dev = jax.device_count()
+        d = max(n_dev // 2, 1)
+        mesh = make_debug_mesh(d, n_dev // d)
+    session = build_session(args)
+    print(f"sweep {args.arch}: {spec.describe(session.cfg)}"
+          + (f" on mesh {tuple(mesh.shape.items())}" if mesh else ""),
+          flush=True)
+
+    report = session.sweep(spec, mesh=mesh)
+
+    print(f"\n{'ucb_c':>6s} {'budget':>8s} {'H':>5s} {'seed':>5s} "
+          f"{'rounds':>6s} {'metric':>8s} {'consumed':>9s}")
+    for row in report.to_rows():
+        print(f"{row['ucb_c']:6.2f} {row['budget']:8.0f} "
+              f"{row['heterogeneity']:5.1f} {row['seed']:5.0f} "
+              f"{row['n_rounds']:6d} {row['final_metric']:8.4f} "
+              f"{row['total_consumed']:9.0f}")
+
+    print("\nPareto frontier (consumed ↑ ⇒ metric ↑, seed-means):")
+    for p in report.pareto_frontier():
+        print(f"  ucb_c={p['ucb_c']:.2f} budget={p['budget']:.0f} "
+              f"H={p['heterogeneity']:.1f}: metric={p['final_metric']:.4f} "
+              f"@ consumed={p['total_consumed']:.0f}")
+    print("\n" + report.summary())
+
+
+if __name__ == "__main__":
+    main()

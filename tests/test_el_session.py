@@ -179,10 +179,11 @@ def test_ingraph_matches_host_sync_on_svm_wafer():
 
 def test_ingraph_rejects_unsupported_configs():
     s = _svm_session("sync", policy="greedy")
-    with pytest.raises(ValueError, match="ol4el"):
+    # the ValueError names the unsupported (policy, ...) combination
+    with pytest.raises(ValueError, match="policy='greedy'"):
         s.run_sync_ingraph()
-    s = _svm_session("sync", cost_model="variable", cost_noise=0.2)
-    with pytest.raises(ValueError, match="variable"):
+    s = _svm_session("sync", cost_model="bogus")
+    with pytest.raises(ValueError, match="cost_model"):
         s.run_sync_ingraph()
 
     class NotInGraph:
@@ -202,6 +203,15 @@ def test_ingraph_async_cfg_is_coerced_to_sync():
     rep = _svm_session("async", budget=900.0, n=800).run_sync_ingraph()
     assert rep.mode == "sync"
     assert rep.n_aggregations > 0
+
+
+def test_ingraph_variable_cost_now_supported():
+    """cost_model='variable' compiles (the cost-noise draws moved into
+    the program via jax.random) — it used to raise ValueError."""
+    rep = _svm_session("sync", budget=900.0, n=800, cost_model="variable",
+                       cost_noise=0.2).run_sync_ingraph()
+    assert rep.n_aggregations > 0
+    assert rep.terminated_reason == "budget_exhausted"
 
 
 # ---------------------------------------------------------------------------
@@ -281,9 +291,25 @@ def test_ingraph_recompiles_when_session_reconfigured():
 def test_ingraph_honors_injected_ol4el_policy_ucb_c():
     pol = policies.get("ol4el", ucb_c=0.25)
     s = _svm_session("sync", budget=900.0, n=800).with_policy(pol)
+    # the effective fast-path config carries the policy object's constant
+    assert s._ingraph_cfg("test").ucb_c == 0.25
     rep = s.run_sync_ingraph()
     assert rep.n_aggregations > 0
-    assert s._fastpath_key[1].ucb_c == 0.25
+
+
+def test_ingraph_program_reused_across_knob_changes():
+    """ucb_c/budget/heterogeneity/seed are traced inputs of the compiled
+    program — changing them must NOT rebuild or retrace it."""
+    s = _svm_session("sync", budget=900.0, n=800)
+    r1 = s.run_sync_ingraph()
+    prog = s._fastpath
+    s.cfg = dataclasses.replace(s.cfg, ucb_c=0.5, budget=1300.0, seed=5)
+    r2 = s.run_sync_ingraph()
+    assert s._fastpath is prog
+    assert prog._cache_size() == 1
+    # the new knob values actually reached the (reused) program
+    assert r2.n_aggregations > 0
+    assert r2.total_consumed != r1.total_consumed
 
 
 def test_run_el_rejects_ingraph_async():
