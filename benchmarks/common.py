@@ -84,17 +84,21 @@ def run_el(workload: str, policy: str, mode: str, heterogeneity: float,
            lr: float | None = None, batch: int | None = None,
            ingraph: bool = False) -> ELRun:
     """One EL experiment through the ``repro.el.ELSession`` façade.
-    ``ingraph=True`` routes sync runs through the compiled fast path.
+    ``ingraph=True`` routes the run through the compiled fast path for
+    its mode: ``run_sync_ingraph`` (sync) or ``run_async_ingraph`` (the
+    ``repro.el.events`` event-horizon program, async).
     """
-    if ingraph and mode != "sync":
-        raise ValueError("ingraph=True is sync-only; an async run cannot be "
-                         "routed through the compiled sync fast path")
     session = make_el_session(
         workload, policy, mode, heterogeneity, n_edges=n_edges,
         budget=budget, seed=seed, n_data=n_data, cost_noise=cost_noise,
         cost_model=cost_model, max_interval=max_interval, alpha=alpha,
         async_alpha=async_alpha, lr=lr, batch=batch)
-    res = session.run_sync_ingraph() if ingraph else session.run()
+    if not ingraph:
+        res = session.run()
+    elif mode == "sync":
+        res = session.run_sync_ingraph()
+    else:
+        res = session.run_async_ingraph()
     return ELRun(workload, policy, mode, heterogeneity, n_edges, budget,
                  res.final_metric, res.n_aggregations, res.total_consumed,
                  res.records)

@@ -7,9 +7,11 @@ consumption level and OL4EL-async reaching the highest final accuracy.
 The (ol4el, sync) rows run through the compiled sweep engine
 (``repro.el.sweep``), one sweep per seed (a fig4 seed resamples the
 dataset/partition/init, which are program constants), with the
-consumption curves reduced from the per-cell round records.  The other
-algorithms (async mode, non-ol4el policies) stay on the host paths, and
-so does the K-means workload (its F1 metric is host-side).
+consumption curves reduced from the per-cell round records.  The
+(ol4el, async) SVM rows run through the compiled event-horizon program
+(``run_async_ingraph``, ``repro.el.events``).  The other algorithms
+(non-ol4el policies) stay on the host paths, and so does the K-means
+workload (its F1 metric is host-side).
 """
 
 from __future__ import annotations
@@ -64,10 +66,15 @@ def run(budget: float = 5000.0, n_data: int = 20000, heterogeneity: float = 6.0,
                         rep.out["metric"][0][:n],
                         rep.out["consumed"][0][:n]))
             else:
+                # the (ol4el, async) SVM rows get the compiled
+                # event-horizon fast path; everything else is host-driven
+                fast = ((policy, mode) == ("ol4el", "async")
+                        and workload == "svm")
                 curves = []
                 for seed in seeds:
                     r = run_el(workload, policy, mode, heterogeneity,
-                               budget=budget, n_data=n_data, seed=seed)
+                               budget=budget, n_data=n_data, seed=seed,
+                               ingraph=fast)
                     curves.append(_best_at_fractions(
                         [rec.metric for rec in r.records],
                         [rec.total_consumed for rec in r.records]))

@@ -123,6 +123,33 @@ def run(quiet: bool = False) -> List[Dict]:
         derived=f"acc={ing.final_metric:.3f},"
                 f"speedup={host_us / max(ing_us, 1e-9):.1f}x_vs_host"))
 
+    # host-driven async event queue vs the fully in-graph event-horizon
+    # program (repro.el.events: argmin finish-times + masked merges, no
+    # host priority queue): per-event cost, warm in both cases
+    ol_async = _dc.replace(ol, mode="async")
+
+    def async_session():
+        return ELSession(ol_async, metric_name="accuracy", lr=0.05) \
+            .with_executor(ex, n_samples=ns)
+
+    async_session().run_async()                 # warm the executor jits
+    t0 = time.perf_counter()
+    ahost = async_session().run_async()
+    ahost_us = (time.perf_counter() - t0) * 1e6 / max(ahost.n_aggregations,
+                                                      1)
+    rows.append(dict(name="el_async_host_per_event", us_per_call=ahost_us,
+                     derived=f"acc={ahost.final_metric:.3f}"))
+
+    asess = async_session()
+    asess.run_async_ingraph()                   # compile the program
+    t0 = time.perf_counter()
+    aing = asess.run_async_ingraph()
+    aing_us = (time.perf_counter() - t0) * 1e6 / max(aing.n_aggregations, 1)
+    rows.append(dict(
+        name="el_async_ingraph_per_event", us_per_call=aing_us,
+        derived=f"acc={aing.final_metric:.3f},"
+                f"speedup={ahost_us / max(aing_us, 1e-9):.1f}x_vs_host"))
+
     # ablation sweep: 4 (ucb_c × seed) cells as ONE vmapped compiled
     # program vs the sequential host-loop equivalent (the pre-sweep way
     # benchmarks ran grids); per-grid wall-clock, warm in both cases

@@ -236,6 +236,7 @@ class OL4ELConfig:
     heterogeneity: float = 1.0           # H = fastest/slowest speed ratio
     cost_noise: float = 0.0              # rel. std for variable-cost mode
     utility: str = "param_delta"         # param_delta | eval_gain | loss_delta
+    async_alpha: float = 0.5             # async staleness-mix base rate
     ucb_c: float = 2.0                   # exploration constant (sqrt(c ln t / n))
     eps: float = 0.1                     # for eps_greedy ablation
     n_edges: int = 4

@@ -3,7 +3,11 @@
 The public surface of the OL4EL reproduction:
 
   * :class:`ELSession` — configure-then-run façade (host sync/async loops
-    plus the compiled ``run_sync_ingraph`` fast path);
+    plus the compiled ``run_sync_ingraph`` / ``run_async_ingraph`` fast
+    paths);
+  * :mod:`repro.el.events` — the compiled async event-horizon engine
+    (argmin finish-times + staleness-weighted masked merges, no host
+    priority queue);
   * :class:`ELReport` / :class:`RoundRecord` — run artifacts;
   * :mod:`repro.el.policies` — first-class collaboration strategies behind
     a registry (``policies.get("ol4el")``);

@@ -1,0 +1,40 @@
+"""``repro.el.events`` — the compiled asynchronous EL engine.
+
+Reformulates the paper's async event loop as a single XLA program with
+no host priority queue: edge finish times live in an ``[n_edges]``
+array, each ``lax.while_loop`` step pops the ``argmin`` finish time (the
+event horizon), applies a staleness-weighted masked merge, updates that
+edge's bandit and budget, and schedules the edge's next block — until
+budget exhaustion or the fixed event horizon.
+
+  * :func:`make_async_program` — ``program(init_params, rng, knobs)``,
+    the knob-parameterized compiled run (vmapped by ``repro.el.sweep``);
+  * :func:`async_knobs` / :data:`ASYNC_KNOB_NAMES` — the traced
+    control-plane inputs (incl. ``async_alpha`` and ``cost_noise``);
+  * :func:`default_event_horizon` — a budget/cost-derived horizon bound
+    (no silent truncation);
+  * :func:`run_async_reference` — the host event-queue twin on the same
+    jax RNG streams (``ELSession.run_async(rng_streams="jax")``),
+    bit-identical in fixed-cost mode.
+
+Front doors: ``ELSession.run_async_ingraph()`` and async
+``ELSession.sweep(spec)`` grids.
+"""
+
+from repro.el.events.knobs import (ASYNC_KNOB_NAMES, async_knobs,
+                                   default_event_horizon)
+from repro.el.events.program import make_async_kernels, make_async_program
+from repro.el.events.reference import run_async_reference
+from repro.el.events.scheduler import (schedule_block, split_event_keys,
+                                       split_init_keys, staleness_alpha,
+                                       staleness_merge)
+from repro.el.events.state import (bandit_fleet_init, bandit_place,
+                                   bandit_slice)
+
+__all__ = [
+    "ASYNC_KNOB_NAMES", "async_knobs", "default_event_horizon",
+    "make_async_program", "make_async_kernels", "run_async_reference",
+    "schedule_block", "split_event_keys", "split_init_keys",
+    "staleness_alpha", "staleness_merge",
+    "bandit_fleet_init", "bandit_place", "bandit_slice",
+]

@@ -1,0 +1,66 @@
+"""Control-plane inputs of the compiled async event-horizon program.
+
+Mirrors ``repro.el.ingraph.sync_knobs``: everything a run's *values* can
+change — exploration constant, budgets, cost arrays, cost-noise scale,
+staleness-mix base rate — enters the compiled program as traced inputs,
+so one program serves any knob point and ``repro.el.sweep`` can stack
+the arrays along a leading ``[n_cells]`` axis and vmap.
+
+The async program keeps one bandit PER EDGE (the paper's async §IV
+formulation), so arm costs are the full per-edge matrix ``costs_ek``
+``[E, K]`` rather than the sync path's binding-edge vector ``[K]``.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from repro.config import OL4ELConfig
+from repro.core.coordinator import edge_speed_factors
+from repro.el.ingraph import base_cost_knobs
+
+#: Traced inputs of ``make_async_program`` (the async analogue of
+#: ``repro.el.ingraph.KNOB_NAMES``): scalars ``ucb_c`` / ``budget`` /
+#: ``cost_noise`` / ``async_alpha``, per-edge ``comp`` / ``comm`` /
+#: ``min_edge_cost`` ``[E]``, and the per-edge arm costs ``costs_ek``
+#: ``[E, K]``.
+ASYNC_KNOB_NAMES = ("ucb_c", "budget", "comp", "comm", "costs_ek",
+                    "min_edge_cost", "cost_noise", "async_alpha")
+
+
+def async_knobs(cfg: OL4ELConfig) -> Dict[str, np.ndarray]:
+    """Host-side control-plane inputs of the compiled async program.
+
+    All float32, shared with the sync path via ``base_cost_knobs`` so
+    feasibility/termination arithmetic agrees with the host coordinator
+    and the sync program.  The sweep engine calls this once per cell and
+    stacks along ``[n_cells]``.
+    """
+    knobs = base_cost_knobs(cfg)
+    intervals_f = np.arange(1, cfg.max_interval + 1, dtype=np.float32)
+    # async bandits are per-edge: every edge scores its own arm costs
+    knobs["costs_ek"] = (intervals_f[None, :] * knobs["comp"][:, None]
+                         + knobs["comm"][:, None])                  # [E, K]
+    knobs["async_alpha"] = np.float32(cfg.async_alpha)
+    return knobs
+
+
+def default_event_horizon(cfg: OL4ELConfig) -> int:
+    """An event horizon guaranteed to exceed any run's event count.
+
+    Every completed block charges its edge at least ``comp_e + comm_e``
+    (times the 0.1 multiplier floor in variable-cost mode), and an
+    edge only schedules while its residual covers that minimum — so
+    per-edge completions are bounded by ``budget / min_cost`` plus the
+    one block in flight at the first infeasibility.  Unlike a fixed
+    ``max_events`` cap this scales with budget/cost, so long runs are
+    never silently truncated.
+    """
+    speed = edge_speed_factors(cfg.n_edges, cfg.heterogeneity)
+    min_cost = cfg.comp_cost * speed + cfg.comm_cost                # [E]
+    floor = 0.1 if (cfg.cost_model == "variable"
+                    and cfg.cost_noise > 0) else 1.0
+    per_edge = np.floor(cfg.budget / (floor * min_cost)) + 1.0
+    return int(per_edge.sum())

@@ -1,0 +1,264 @@
+"""The compiled asynchronous EL engine: one XLA program per async run.
+
+The host ``ELSession.run_async`` drives a Python priority queue: pop the
+next finishing edge, train its block, staleness-merge it into the global
+model, update that edge's bandit, schedule its next block.  This module
+reformulates that event loop with **no host priority queue** (à la
+Mohammad & Sorour's asynchronous mobile edge learning): edge finish
+times live in an ``[n_edges]`` array, and each ``lax.while_loop`` step
+
+    argmin finish-time  (the next event)
+      → masked local block on the event edge (shared ``make_local_block``)
+      → staleness-weighted masked merge (``jnp.where``-free tree mix,
+        scatter into the per-edge fetched-params stack)
+      → in-graph utility → per-edge ``jax_bandit_update`` + budget charge
+      → schedule the edge's next block (``schedule_block``), advancing
+        its finish time — or ``+inf`` when its budget affords no arm
+
+until budget exhaustion silences every edge or the fixed event horizon
+is reached.  An entire async run — hundreds of events — is ONE compiled
+program with zero host synchronization, the async half of the paper's
+headline claim joining the fast path.
+
+Like the sync program, the control-plane knobs (``ASYNC_KNOB_NAMES``)
+are traced inputs — ``make_async_program`` returns
+``program(init_params, rng, knobs)`` — so ``repro.el.sweep`` vmaps one
+program over a flattened ablation grid (now including ``async_alpha``
+and ``cost_noise`` axes) and shards it over the mesh like sync cells.
+
+``make_async_kernels`` jits the *same* sub-computations individually for
+the host reference event queue (``repro.el.events.reference``); in
+fixed-cost mode the two paths are bit-identical (tested).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.config import OL4ELConfig
+from repro.core.bandit import jax_bandit_update
+from repro.el.events.knobs import ASYNC_KNOB_NAMES  # noqa: F401 (re-export)
+from repro.el.events.scheduler import (schedule_block, split_event_keys,
+                                       split_init_keys, staleness_alpha,
+                                       staleness_merge)
+from repro.el.events.state import (bandit_fleet_init, bandit_place,
+                                   bandit_slice)
+from repro.el.ingraph import (_pad_edge_data, _tree_l2,
+                              check_ingraph_support, default_metric_fn,
+                              make_local_block)
+
+Params = Any
+
+
+def _build_parts(model, edge_data, eval_set, cfg: OL4ELConfig, *,
+                 lr: float, batch: int, metric_fn: Optional[Callable],
+                 metric_name: str):
+    """The data-plane pieces both async paths share: the masked local
+    block (identical minibatch streams to the sync program's) and the
+    jittable eval metric."""
+    xs, ys, n_per_edge = _pad_edge_data(edge_data)
+    local_block = make_local_block(model, xs, ys, n_per_edge, batch, lr,
+                                   cfg.max_interval)
+    if metric_fn is None:
+        metric_fn = default_metric_fn(model, eval_set, metric_name)
+    if cfg.utility == "eval_gain" and metric_fn is None:
+        raise ValueError(
+            "utility='eval_gain' needs a jittable metric; pass metric_fn= "
+            "or use utility='param_delta'")
+
+    # ONE closure computes (metric, utility) for both async paths: XLA
+    # may fuse the metric's final multiply into the gain subtraction as
+    # an FMA (skipping the intermediate rounding), so the compiled
+    # program and the reference kernels must present it the identical
+    # expression to round identically.
+    def eval_step(params, prev_params, prev_metric):
+        if metric_fn is not None:
+            metric = metric_fn(params)
+        else:
+            metric = jnp.float32(jnp.nan)
+        if cfg.utility == "eval_gain":
+            utility = metric - prev_metric
+        else:                              # param_delta (§III.A)
+            utility = 1.0 / (1.0 + _tree_l2(prev_params, params))
+        return metric, utility
+
+    return local_block, metric_fn, eval_step
+
+
+def make_async_program(model, edge_data, eval_set, cfg: OL4ELConfig, *,
+                       lr: float, batch: int,
+                       n_samples: Optional[np.ndarray] = None,
+                       metric_fn: Optional[Callable] = None,
+                       metric_name: str = "accuracy",
+                       max_events: int = 256):
+    """Build ``program(init_params, rng, knobs) -> (params, out)`` — the
+    whole budgeted async run as one ``lax.while_loop`` over events, with
+    the control-plane knobs (``ASYNC_KNOB_NAMES`` / ``async_knobs``) as
+    traced inputs.
+
+    ``n_samples`` is accepted for signature parity with the sync program
+    and ignored: the async global update is the staleness mix, not a
+    weighted average.
+
+    ``out`` is a dict of device arrays: per-event ``metric``,
+    ``utility``, ``interval``, ``edge``, ``cost`` (the charge),
+    ``consumed`` (cumulative total across edges) and ``wall`` (the event
+    time), plus scalars ``n_rounds`` (events completed), ``wall_time``,
+    the final per-edge ``budgets_left`` and the per-edge bandit
+    ``arm_pulls`` ``[E, K]``.
+    """
+    del n_samples
+    check_ingraph_support(cfg, caller="make_async_program")
+
+    n_edges, k = cfg.n_edges, cfg.max_interval
+    local_block, metric_fn, eval_step = _build_parts(
+        model, edge_data, eval_set, cfg, lr=lr, batch=batch,
+        metric_fn=metric_fn, metric_name=metric_name)
+
+    def program(init_params: Params, rng: jax.Array,
+                knobs: Dict[str, jax.Array]):
+        ucb_c, budget = knobs["ucb_c"], knobs["budget"]
+        comp, comm = knobs["comp"], knobs["comm"]
+        costs_ek = knobs["costs_ek"]                            # [E, K]
+        min_edge_cost = knobs["min_edge_cost"]                  # [E]
+        cost_noise = knobs["cost_noise"]
+        alpha0 = knobs["async_alpha"]
+
+        fleet = bandit_fleet_init(n_edges, k)
+        # initial scheduling: every edge selects its first block, in edge
+        # order (host loop's pre-event decide/realized_cost round)
+        rng, k_sel0, k_cost0 = split_init_keys(rng)
+
+        def init_edge(e):
+            return schedule_block(
+                bandit_slice(fleet, e), budget, costs_ek[e], ucb_c,
+                min_edge_cost[e], cost_noise, comp[e], comm[e],
+                jnp.float32(0.0), jax.random.fold_in(k_sel0, e),
+                jax.random.fold_in(k_cost0, e))
+
+        _, interval0, cost0, finish0 = jax.vmap(init_edge)(
+            jnp.arange(n_edges))
+
+        edge_params = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_edges,) + x.shape),
+            init_params)
+        if metric_fn is not None:
+            prev_metric = metric_fn(init_params)
+        else:
+            prev_metric = jnp.float32(jnp.nan)
+        hist = {
+            "metric": jnp.full((max_events,), jnp.nan, jnp.float32),
+            "utility": jnp.zeros((max_events,), jnp.float32),
+            "interval": jnp.zeros((max_events,), jnp.int32),
+            "edge": jnp.full((max_events,), -1, jnp.int32),
+            "cost": jnp.zeros((max_events,), jnp.float32),
+            "consumed": jnp.zeros((max_events,), jnp.float32),
+            "wall": jnp.zeros((max_events,), jnp.float32),
+        }
+        carry = (init_params, edge_params, fleet,
+                 jnp.zeros((n_edges,), jnp.float32),            # consumed
+                 finish0, interval0, cost0,
+                 jnp.zeros((n_edges,), jnp.int32),              # fetch ver
+                 jnp.int32(0),                                  # version
+                 jnp.int32(0),                                  # t
+                 rng, prev_metric, jnp.float32(0.0), hist)
+
+        def cond(carry):
+            (_, _, _, _, finish, _, _, _, _, t, _, _, _, _) = carry
+            return (t < max_events) & jnp.any(jnp.isfinite(finish))
+
+        def body(carry):
+            (gparams, edge_params, fleet, consumed, finish, infl_i, infl_c,
+             fetch_ver, version, t, rng, prev_metric, _, hist) = carry
+            rng, k_sel, k_data, k_cost = split_event_keys(rng)
+            # the event horizon: the earliest-finishing in-flight block
+            e = jnp.argmin(finish)
+            wall = finish[e]
+            interval, cost = infl_i[e], infl_c[e]
+            # edge e finishes `interval` local iterations and uploads
+            p_e = jax.tree.map(lambda a: a[e], edge_params)
+            p_new = local_block(p_e, e, interval,
+                                jax.random.fold_in(k_data, e))
+            # the SAME realized-cost draw set the finish time and is
+            # charged at completion (charged == scheduled)
+            consumed = consumed.at[e].add(cost)
+            alpha = staleness_alpha(alpha0, version, fetch_ver[e], n_edges)
+            new_global = staleness_merge(gparams, p_new, alpha)
+            version = version + 1
+            metric, utility = eval_step(new_global, gparams, prev_metric)
+            bstate_e = jax_bandit_update(bandit_slice(fleet, e),
+                                         interval - 1, utility, cost)
+            fleet = bandit_place(fleet, e, bstate_e)
+            # edge fetches the fresh global model, schedules next block
+            edge_params = jax.tree.map(
+                lambda a, g: a.at[e].set(g), edge_params, new_global)
+            fetch_ver = fetch_ver.at[e].set(version)
+            resid = budget - consumed[e]
+            _, nxt_i, nxt_c, fin = schedule_block(
+                bstate_e, resid, costs_ek[e], ucb_c, min_edge_cost[e],
+                cost_noise, comp[e], comm[e], wall,
+                jax.random.fold_in(k_sel, e),
+                jax.random.fold_in(k_cost, e))
+            finish = finish.at[e].set(fin)
+            infl_i = infl_i.at[e].set(nxt_i)
+            infl_c = infl_c.at[e].set(nxt_c)
+            hist = {
+                "metric": hist["metric"].at[t].set(metric),
+                "utility": hist["utility"].at[t].set(utility),
+                "interval": hist["interval"].at[t].set(interval),
+                "edge": hist["edge"].at[t].set(e.astype(jnp.int32)),
+                "cost": hist["cost"].at[t].set(cost),
+                "consumed": hist["consumed"].at[t].set(jnp.sum(consumed)),
+                "wall": hist["wall"].at[t].set(wall),
+            }
+            return (new_global, edge_params, fleet, consumed, finish,
+                    infl_i, infl_c, fetch_ver, version, t + 1, rng,
+                    metric, wall, hist)
+
+        (params, _, fleet, consumed, finish, _, _, _, _, t, _, _, wall,
+         hist) = lax.while_loop(cond, body, carry)
+        out = dict(hist)
+        out["n_rounds"] = t
+        out["budgets_left"] = budget - consumed
+        out["arm_pulls"] = fleet["counts"]                      # [E, K]
+        out["wall_time"] = wall
+        # blocks still in flight at exit: 0 means the budgets silenced
+        # every edge (terminated_reason="budget_exhausted"), >0 means
+        # the event horizon cut the run short ("max_events")
+        out["n_active"] = jnp.sum(jnp.isfinite(finish).astype(jnp.int32))
+        return params, out
+
+    return program
+
+
+def make_async_kernels(model, edge_data, eval_set, cfg: OL4ELConfig, *,
+                       lr: float, batch: int,
+                       metric_fn: Optional[Callable] = None,
+                       metric_name: str = "accuracy") -> Dict[str, Any]:
+    """The per-event sub-computations of ``make_async_program``, jitted
+    individually for the host reference event queue — same closures,
+    same ops, same key contracts, so the reference reproduces the
+    compiled program's arithmetic exactly."""
+    check_ingraph_support(cfg, caller="make_async_kernels")
+    local_block, metric_fn, eval_step = _build_parts(
+        model, edge_data, eval_set, cfg, lr=lr, batch=batch,
+        metric_fn=metric_fn, metric_name=metric_name)
+    n_edges = cfg.n_edges
+
+    def merge(gparams, p_new, alpha0, version, fetch_ver):
+        alpha = staleness_alpha(alpha0, version, fetch_ver, n_edges)
+        return staleness_merge(gparams, p_new, alpha)
+
+    return {
+        "local_train": jax.jit(local_block),
+        "schedule": jax.jit(schedule_block),
+        "merge": jax.jit(merge),
+        "metric": None if metric_fn is None else jax.jit(metric_fn),
+        "eval_step": jax.jit(eval_step),
+        "bandit_update": jax.jit(jax_bandit_update),
+    }

@@ -1,0 +1,147 @@
+"""The host reference event queue — ``run_async`` on jax RNG streams.
+
+``ELSession.run_async(rng_streams="jax")`` lands here: the SAME
+priority-queue event loop as the legacy numpy-RNG host path (heap of
+``(finish_time, edge, interval, cost)`` blocks, staleness merges,
+per-edge bandits, charge-at-completion budgets), but every random draw —
+arm selection, minibatch sampling, cost noise — comes from the
+``jax.random`` chain the compiled event-horizon program uses
+(``scheduler.split_init_keys`` / ``split_event_keys``), and every piece
+of arithmetic runs through the very kernels the program inlines
+(``make_async_kernels``), in float32.
+
+That makes this loop the *transparent* twin of the compiled scheduler:
+in fixed-cost mode, ``run_async(rng_streams="jax")`` and
+``run_async_ingraph()`` agree bit-for-bit on event order, merge values
+and charged costs (the acceptance test in ``tests/test_el_events.py``) —
+any divergence is a scheduler-compilation bug, never RNG noise.
+"""
+
+from __future__ import annotations
+
+import heapq
+import time
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import OL4ELConfig
+from repro.core.bandit import jax_bandit_init
+from repro.el.events.knobs import async_knobs, default_event_horizon
+from repro.el.events.program import make_async_kernels
+from repro.el.events.scheduler import split_event_keys, split_init_keys
+from repro.el.report import ELReport, RoundRecord
+
+Params = Any
+
+
+def run_async_reference(executor, cfg: OL4ELConfig, init_params: Params, *,
+                        metric_name: str = "accuracy",
+                        metric_fn: Optional[Callable] = None,
+                        max_events: Optional[int] = None,
+                        callbacks: Sequence[Callable] = ()) -> ELReport:
+    """Run the async event queue on the host with the compiled program's
+    jax RNG streams and f32 arithmetic; returns an ``ELReport``.
+
+    The metric is evaluated at every event (the utility stream feeds the
+    bandits, so it cannot be thinned the way the numpy path's
+    ``eval_every`` does).
+    """
+    t0 = time.perf_counter()
+    horizon = (default_event_horizon(cfg) if max_events is None
+               else int(max_events))
+    kernels = make_async_kernels(
+        executor.model, executor.edge_data, executor.eval_set, cfg,
+        lr=executor.lr, batch=executor.batch, metric_fn=metric_fn,
+        metric_name=metric_name)
+    knobs = {k: jnp.asarray(v) for k, v in async_knobs(cfg).items()}
+    n_edges, k_arms = cfg.n_edges, cfg.max_interval
+
+    def schedule(edge: int, bstate, resid, wall, k_sel, k_cost):
+        return kernels["schedule"](
+            bstate, resid, knobs["costs_ek"][edge], knobs["ucb_c"],
+            knobs["min_edge_cost"][edge], knobs["cost_noise"],
+            knobs["comp"][edge], knobs["comm"][edge], wall,
+            jax.random.fold_in(k_sel, edge),
+            jax.random.fold_in(k_cost, edge))
+
+    rng = jax.random.key(cfg.seed + 17)
+    rng, k_sel0, k_cost0 = split_init_keys(rng)
+    bandits = [jax_bandit_init(k_arms) for _ in range(n_edges)]
+    # in-flight blocks: (finish_time, edge, interval, cost) — the same
+    # realized-cost draw sets the finish time AND is charged at
+    # completion (charged == scheduled)
+    heap: List[Tuple[float, int, int, float]] = []
+    for e in range(n_edges):
+        active, interval, cost, finish = schedule(
+            e, bandits[e], knobs["budget"], jnp.float32(0.0),
+            k_sel0, k_cost0)
+        if bool(active):
+            heapq.heappush(heap, (float(finish), e, int(interval),
+                                  float(cost)))
+
+    global_params = init_params
+    edge_params: List[Params] = [init_params] * n_edges
+    consumed = jnp.zeros((n_edges,), jnp.float32)
+    fetch_version = np.zeros(n_edges, np.int64)
+    version = 0
+    if kernels["metric"] is not None:
+        prev_metric = kernels["metric"](init_params)
+    else:
+        prev_metric = jnp.float32(jnp.nan)
+    records: List[RoundRecord] = []
+    wall, t = 0.0, 0
+    while heap and t < horizon:
+        wall, e, interval, cost = heapq.heappop(heap)
+        rng, k_sel, k_data, k_cost = split_event_keys(rng)
+        # edge e finishes `interval` local iterations and uploads
+        p_new = kernels["local_train"](edge_params[e], e, interval,
+                                       jax.random.fold_in(k_data, e))
+        consumed = consumed.at[e].add(jnp.float32(cost))
+        new_global = kernels["merge"](global_params, p_new,
+                                      knobs["async_alpha"], version,
+                                      int(fetch_version[e]))
+        version += 1
+        # ONE kernel yields (metric, utility) — the same fused expression
+        # the compiled program rounds through (see make_async_kernels)
+        metric, utility = kernels["eval_step"](new_global, global_params,
+                                               prev_metric)
+        bandits[e] = kernels["bandit_update"](bandits[e], interval - 1,
+                                              utility, jnp.float32(cost))
+        t += 1
+        rec = RoundRecord(wall, float(jnp.sum(consumed)), float(metric),
+                          float(utility), float(interval), e, t)
+        records.append(rec)
+        for cb in callbacks:
+            cb(rec)
+        # edge fetches the fresh global model, schedules its next block
+        edge_params[e] = new_global
+        fetch_version[e] = version
+        resid = knobs["budget"] - consumed[e]
+        active, nxt_i, nxt_c, finish = schedule(
+            e, bandits[e], resid, jnp.float32(wall), k_sel, k_cost)
+        if bool(active):
+            heapq.heappush(heap, (float(finish), e, int(nxt_i),
+                                  float(nxt_c)))
+        prev_metric = metric
+        global_params = new_global
+
+    pulls = np.zeros(k_arms, np.int64)
+    for b in bandits:
+        pulls += np.asarray(b["counts"], np.int64)
+    final = executor.evaluate(global_params)[metric_name]
+    return ELReport(
+        records=records,
+        final_metric=float(final),
+        n_aggregations=t,
+        total_consumed=float(jnp.sum(consumed)),
+        wall_time=wall,
+        terminated_reason="max_events" if heap else "budget_exhausted",
+        policy=cfg.policy,
+        mode="async",
+        arm_pulls=[int(c) for c in pulls],
+        elapsed_s=time.perf_counter() - t0,
+        final_params=global_params,
+    )

@@ -1,0 +1,97 @@
+"""The event-horizon scheduling math — pure jnp, shared verbatim by the
+compiled program (``repro.el.events.program``) and the host reference
+event queue (``repro.el.events.reference``).
+
+Sharing these functions is what makes the two paths bit-comparable: the
+reference loop calls them as tiny jitted kernels in the exact order the
+``lax.while_loop`` body inlines them, with identical key derivations, so
+in fixed-cost mode every selection, realized cost, merge coefficient and
+budget charge agrees bit-for-bit.
+
+Key schedule (one ``jax.random`` chain per run, seeded like the sync
+program with ``jax.random.key(cfg.seed + 17)``):
+
+  * init:       ``rng -> (rng, k_sel, k_cost)``; per-edge keys are
+                ``fold_in(k_sel, e)`` / ``fold_in(k_cost, e)``.
+  * per event:  ``rng -> (rng, k_sel, k_data, k_cost)``; the event
+                edge's keys are ``fold_in(k_*, e)`` (``k_data`` feeds
+                the shared minibatch sampler ``make_local_block``).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bandit import jax_select_arm
+
+
+def split_init_keys(rng: jax.Array) -> Tuple[jax.Array, ...]:
+    """Keys for the initial round of per-edge scheduling."""
+    rng, k_sel, k_cost = jax.random.split(rng, 3)
+    return rng, k_sel, k_cost
+
+
+def split_event_keys(rng: jax.Array) -> Tuple[jax.Array, ...]:
+    """Keys for one event: selection, minibatch data, cost noise."""
+    rng, k_sel, k_data, k_cost = jax.random.split(rng, 4)
+    return rng, k_sel, k_data, k_cost
+
+
+def schedule_block(bstate_e, resid, costs_e, ucb_c, min_cost_e, cost_noise,
+                   comp_e, comm_e, wall, k_sel_e, k_cost_e):
+    """Select edge ``e``'s next interval and realize its block cost.
+
+    Mirrors the host loop's ``coord.decide(e)`` →
+    ``coord.realized_cost(e, i)`` → schedule-if-affordable sequence:
+    the arm is the in-graph ol4el draw (``jax_select_arm``), the cost is
+    ``interval·comp_e + comm_e`` times the variable-cost multiplier
+    ``max(0.1, 1 + noise·N(0,1))`` (a 0.0 noise knob multiplies by
+    exactly 1.0), and the block is scheduled only when an arm was
+    affordable and the residual still covers the cheapest block
+    (``not coord.exhausted(e)``).
+
+    Returns ``(active, interval, cost, finish)`` with ``finish`` =
+    ``wall + cost`` for scheduled blocks and ``+inf`` for stopped edges.
+    """
+    arm = jax_select_arm(k_sel_e, bstate_e, resid, costs_e, ucb_c)
+    interval = arm + 1
+    eps = jax.random.normal(k_cost_e, ())
+    mult = jnp.maximum(0.1, 1.0 + cost_noise * eps)
+    # the maximum() pins the charged cost to its f32 rounding (costs are
+    # strictly positive, so it never changes the value): without it XLA
+    # may contract `wall + expr·mult` into an FMA in one compilation
+    # context but not another, and the compiled program and the host
+    # reference would disagree by an ulp in variable-cost mode
+    cost = jnp.maximum((interval.astype(jnp.float32) * comp_e + comm_e)
+                       * mult, 0.0)
+    active = (arm >= 0) & (resid >= min_cost_e)
+    finish = jnp.where(active, wall + cost, jnp.inf)
+    return active, interval, cost, finish
+
+
+def staleness_alpha(base, version, fetch_version, n_edges: int):
+    """The staleness-discounted mixing rate in float32.
+
+    Same math as the host loop: raw version staleness normalized by the
+    fleet size (staleness in *epochs*), then the polynomial discount
+    ``base / (1 + s)`` — all in f32 so the compiled and reference paths
+    round identically.
+    """
+    s = (version - fetch_version).astype(jnp.float32) \
+        / jnp.float32(max(n_edges, 1))
+    return base / (1.0 + s)
+
+
+def staleness_merge(global_params, edge_params, alpha):
+    """Masked asynchronous global update ``G <- (1-a)·G + a·θ_e`` (f32
+    accumulation, cast back to the leaf dtype) — the jnp twin of
+    ``repro.federated.aggregation.staleness_mix`` with a traced alpha."""
+    def mix(g, e):
+        out = (1.0 - alpha) * g.astype(jnp.float32) \
+            + alpha * e.astype(jnp.float32)
+        return out.astype(g.dtype)
+
+    return jax.tree.map(mix, global_params, edge_params)

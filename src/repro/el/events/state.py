@@ -1,0 +1,36 @@
+"""State containers for the async event engine: the per-edge bandit
+fleet and slice/place helpers shared by the compiled program and the
+host reference loop.
+
+The fleet is the stacked form of ``jax_bandit_init`` — a dict of arrays
+with a leading ``[E]`` edge dim — so one ``lax.while_loop`` carry holds
+every edge's sufficient statistics and a single dynamic index selects
+the event edge's bandit.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bandit import jax_bandit_init
+
+BanditFleet = Dict[str, jax.Array]
+
+
+def bandit_fleet_init(n_edges: int, n_arms: int) -> BanditFleet:
+    """One fresh bandit per edge, stacked along a leading [E] dim."""
+    return jax.vmap(lambda _: jax_bandit_init(n_arms))(jnp.arange(n_edges))
+
+
+def bandit_slice(fleet: BanditFleet, edge: jax.Array) -> BanditFleet:
+    """Edge ``edge``'s bandit state (the unstacked jax_bandit_* shape)."""
+    return {k: v[edge] for k, v in fleet.items()}
+
+
+def bandit_place(fleet: BanditFleet, edge: jax.Array,
+                 state: BanditFleet) -> BanditFleet:
+    """Write one edge's (updated) bandit state back into the fleet."""
+    return {k: fleet[k].at[edge].set(state[k]) for k in fleet}

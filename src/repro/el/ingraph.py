@@ -22,23 +22,30 @@ lets ``repro.el.sweep`` vmap the very same program over a flattened
 ``[n_cells]`` ablation grid (ucb_c × budget × heterogeneity × seed) and
 run a whole sweep as one XLA program.
 
-Supported configuration matrix (see ``check_ingraph_support``):
+Supported configuration matrix (see ``check_ingraph_support``) — shared
+with the async event-horizon program in ``repro.el.events``:
 
   ==============  =======================================================
   dimension        supported in-graph
   ==============  =======================================================
-  mode             ``sync`` only (async needs the host event queue)
-  policy           ``ol4el`` only (the compiled 3-step KUBE bandit)
-  cost_model       ``fixed`` and ``variable`` (i.i.d. cost noise drawn
+  mode             ``sync`` (this module) and ``async`` (the
+                   ``repro.el.events`` event-horizon program)
+  policy           ``ol4el`` only (the compiled 3-step KUBE bandit; one
+                   shared bandit in sync, one bandit per edge in async —
+                   the policy registry records this as
+                   ``Policy.ingraph_modes``)
+  cost_model       ``fixed`` and ``variable`` (the noise scale is the
+                   traced ``cost_noise`` knob: i.i.d. multipliers drawn
                    via ``jax.random``, clipped at the host path's 0.1
-                   multiplier floor)
+                   floor; ``cost_noise=0`` multiplies by exactly 1.0, so
+                   the fixed program is the noise-0 program bit-for-bit)
   utility          ``eval_gain`` (needs a jittable metric) and
                    ``param_delta``
   executor         ``InGraphExecutor`` shape — raw per-edge arrays + a
                    jittable ``model.local_step`` (``ClassicExecutor``)
   ==============  =======================================================
 
-Everything else stays on the host path (``ELSession.run_sync`` /
+Everything else stays on the host paths (``ELSession.run_sync`` /
 ``run_async``).
 """
 
@@ -59,11 +66,12 @@ from repro.core.coordinator import edge_speed_factors
 Params = Any
 
 #: Names (and shapes) of the per-run control-plane inputs of the compiled
-#: program: scalars ``ucb_c`` / ``budget``, per-edge ``comp`` / ``comm`` /
-#: ``min_edge_cost`` ``[E]``, and the binding-edge arm costs ``costs_k``
-#: ``[K]``.  The sweep engine stacks each along a leading ``[n_cells]``
-#: axis and vmaps.
-KNOB_NAMES = ("ucb_c", "budget", "comp", "comm", "costs_k", "min_edge_cost")
+#: program: scalars ``ucb_c`` / ``budget`` / ``cost_noise``, per-edge
+#: ``comp`` / ``comm`` / ``min_edge_cost`` ``[E]``, and the binding-edge
+#: arm costs ``costs_k`` ``[K]``.  The sweep engine stacks each along a
+#: leading ``[n_cells]`` axis and vmaps.
+KNOB_NAMES = ("ucb_c", "budget", "comp", "comm", "costs_k", "min_edge_cost",
+              "cost_noise")
 
 _INGRAPH_UTILITIES = ("eval_gain", "param_delta")
 _INGRAPH_COST_MODELS = ("fixed", "variable")
@@ -80,23 +88,29 @@ def _combo(cfg: OL4ELConfig, executor: Any) -> str:
 
 
 def check_ingraph_support(cfg: OL4ELConfig, executor: Any = None, *,
-                          caller: str = "the in-graph sync fast path"
+                          caller: str = "the in-graph fast path"
                           ) -> None:
     """Validate a config/executor combination against the supported matrix.
 
     Raises ``ValueError`` naming the unsupported (policy, cost_model,
     executor) combination — see the module docstring for the matrix —
-    or ``TypeError`` when the executor is not in-graph capable.
+    or ``TypeError`` when the executor is not in-graph capable.  The
+    per-policy mode support lives in the policy registry
+    (``Policy.ingraph_modes``): ``ol4el`` compiles in both modes — one
+    shared bandit in sync, per-edge bandits in async.
     """
-    if cfg.mode != "sync":
+    from repro.el import policies as el_policies
+    if cfg.mode not in ("sync", "async"):
         raise ValueError(
-            f"{caller} is sync-only (cfg.mode={cfg.mode!r}); the async "
-            "event queue runs on the host — use ELSession.run_async()")
-    if cfg.policy != "ol4el":
+            f"{caller} does not support mode={cfg.mode!r}; in-graph modes "
+            "are 'sync' (repro.el.ingraph) and 'async' (repro.el.events)")
+    if cfg.mode not in el_policies.ingraph_modes(cfg.policy):
         raise ValueError(
-            f"{caller} does not support {_combo(cfg, executor)}: the "
-            "compiled bandit implements the 'ol4el' selection rule only; "
-            "run other policies through the host path ELSession.run()")
+            f"{caller} does not support {_combo(cfg, executor)} in "
+            f"mode={cfg.mode!r}: the compiled bandits implement the "
+            "'ol4el' selection rule only (shared bandit in sync, one "
+            "bandit per edge in async); run other policies through the "
+            "host paths ELSession.run_sync()/run_async()")
     if cfg.cost_model not in _INGRAPH_COST_MODELS:
         raise ValueError(
             f"{caller} does not support {_combo(cfg, executor)}: "
@@ -118,6 +132,29 @@ def check_ingraph_support(cfg: OL4ELConfig, executor: Any = None, *,
                 "model.local_step)")
 
 
+def base_cost_knobs(cfg: OL4ELConfig) -> Dict[str, np.ndarray]:
+    """The mode-independent control-plane knobs both compiled programs
+    share: scalars ``ucb_c`` / ``budget`` / ``cost_noise`` and the
+    per-edge cost arrays.  One derivation keeps the sync round and the
+    async event-horizon program (``repro.el.events``) in lockstep with
+    the host coordinator's feasibility/termination arithmetic."""
+    speed = edge_speed_factors(cfg.n_edges, cfg.heterogeneity)
+    comp = np.asarray(cfg.comp_cost * speed, np.float32)            # [E]
+    comm = np.full((cfg.n_edges,), cfg.comm_cost, np.float32)       # [E]
+    return {
+        "ucb_c": np.float32(cfg.ucb_c),
+        "budget": np.float32(cfg.budget),
+        "comp": comp,
+        "comm": comm,
+        "min_edge_cost": comp + comm,                               # [E]
+        # noise applies only in variable-cost mode (host realized_cost
+        # semantics); the programs always trace the noise path — a 0.0
+        # knob multiplies costs by exactly 1.0, bit-for-bit fixed.
+        "cost_noise": np.float32(cfg.cost_noise
+                                 if cfg.cost_model == "variable" else 0.0),
+    }
+
+
 def sync_knobs(cfg: OL4ELConfig) -> Dict[str, np.ndarray]:
     """Host-side control-plane inputs of the compiled sync program.
 
@@ -126,20 +163,13 @@ def sync_knobs(cfg: OL4ELConfig) -> Dict[str, np.ndarray]:
     reproduces the same program bit-for-bit.  The sweep engine calls this
     once per cell and stacks along a leading ``[n_cells]`` axis.
     """
-    speed = edge_speed_factors(cfg.n_edges, cfg.heterogeneity)
-    comp = np.asarray(cfg.comp_cost * speed, np.float32)            # [E]
-    comm = np.full((cfg.n_edges,), cfg.comm_cost, np.float32)       # [E]
+    knobs = base_cost_knobs(cfg)
     intervals_f = np.arange(1, cfg.max_interval + 1, dtype=np.float32)
     # sync feasibility is scored against the binding (slowest) edge
-    worst = int(np.argmax(comp))
-    return {
-        "ucb_c": np.float32(cfg.ucb_c),
-        "budget": np.float32(cfg.budget),
-        "comp": comp,
-        "comm": comm,
-        "costs_k": intervals_f * comp[worst] + comm[worst],         # [K]
-        "min_edge_cost": comp + comm,                               # [E]
-    }
+    worst = int(np.argmax(knobs["comp"]))
+    knobs["costs_k"] = (intervals_f * knobs["comp"][worst]
+                        + knobs["comm"][worst])                     # [K]
+    return knobs
 
 
 def _pad_edge_data(edge_data: List[Dict[str, np.ndarray]]
@@ -181,6 +211,33 @@ def _tree_l2(a: Params, b: Params) -> jax.Array:
     return jnp.sqrt(total)
 
 
+def make_local_block(model, xs: jax.Array, ys: jax.Array,
+                     n_per_edge: jax.Array, batch: int, lr: float,
+                     k: int) -> Callable:
+    """``local_block(params, edge, interval, key)`` — ``interval`` masked
+    local iterations on one edge's shard (a fixed-length ``lax.scan`` of
+    ``k`` steps, steps past ``interval`` masked out).  Shared by the sync
+    round body, the async event body (``repro.el.events``) and its host
+    reference loop, so all three sample identical minibatch streams from
+    identical keys."""
+
+    def local_block(params: Params, edge: jax.Array, interval: jax.Array,
+                    key: jax.Array) -> Params:
+        def body(p, step):
+            u = jax.random.uniform(jax.random.fold_in(key, step), (batch,))
+            idx = (u * n_per_edge[edge].astype(jnp.float32)).astype(jnp.int32)
+            b = {"x": xs[edge][idx], "y": ys[edge][idx]}
+            p2, _ = model.local_step(p, b, lr)
+            take = step < interval
+            return jax.tree.map(
+                lambda a, c: jnp.where(take, c, a), p, p2), None
+
+        params, _ = lax.scan(body, params, jnp.arange(k))
+        return params
+
+    return local_block
+
+
 def make_sync_program(model, edge_data, eval_set, cfg: OL4ELConfig, *,
                       lr: float, batch: int,
                       n_samples: Optional[np.ndarray] = None,
@@ -201,8 +258,6 @@ def make_sync_program(model, edge_data, eval_set, cfg: OL4ELConfig, *,
     check_ingraph_support(cfg, caller="make_sync_program")
 
     n_edges, k = cfg.n_edges, cfg.max_interval
-    variable_cost = (cfg.cost_model == "variable")
-    cost_noise = float(cfg.cost_noise)
 
     xs, ys, n_per_edge = _pad_edge_data(edge_data)
     w_agg = (np.ones(n_edges) if n_samples is None
@@ -216,21 +271,7 @@ def make_sync_program(model, edge_data, eval_set, cfg: OL4ELConfig, *,
             "utility='eval_gain' needs a jittable metric; pass metric_fn= "
             "or use utility='param_delta'")
 
-    def local_block(params: Params, edge: jax.Array, interval: jax.Array,
-                    key: jax.Array) -> Params:
-        """`interval` masked local iterations on one edge's shard."""
-
-        def body(p, step):
-            u = jax.random.uniform(jax.random.fold_in(key, step), (batch,))
-            idx = (u * n_per_edge[edge].astype(jnp.float32)).astype(jnp.int32)
-            b = {"x": xs[edge][idx], "y": ys[edge][idx]}
-            p2, _ = model.local_step(p, b, lr)
-            take = step < interval
-            return jax.tree.map(
-                lambda a, c: jnp.where(take, c, a), p, p2), None
-
-        params, _ = lax.scan(body, params, jnp.arange(k))
-        return params
+    local_block = make_local_block(model, xs, ys, n_per_edge, batch, lr, k)
 
     def weighted_mean(trees: Params) -> Params:
         return jax.tree.map(
@@ -245,6 +286,7 @@ def make_sync_program(model, edge_data, eval_set, cfg: OL4ELConfig, *,
         comp, comm = knobs["comp"], knobs["comm"]
         costs_k = knobs["costs_k"]
         min_edge_cost = knobs["min_edge_cost"]
+        cost_noise = knobs["cost_noise"]
 
         def cond(carry):
             (_, _, consumed, t, _, _, _, _) = carry
@@ -276,17 +318,18 @@ def make_sync_program(model, edge_data, eval_set, cfg: OL4ELConfig, *,
             # slowest edge's round time (matches CloudCoordinator.charge
             # in run_sync)
             round_costs = interval.astype(jnp.float32) * comp + comm  # [E]
-            if variable_cost:
-                # host semantics (CloudCoordinator.realized_cost): each
-                # edge's realized cost is the expected cost times an
-                # i.i.d. multiplier max(0.1, 1 + noise·N(0,1)).  The key
-                # is derived from k_data OUTSIDE the per-edge fold range
-                # [0, n_edges), so the fixed-cost RNG streams are
-                # untouched (noise=0 reproduces fixed bit-for-bit).
-                k_cost = jax.random.fold_in(k_data, n_edges)
-                eps = jax.random.normal(k_cost, (n_edges,))
-                mult = jnp.maximum(0.1, 1.0 + cost_noise * eps)
-                round_costs = round_costs * mult
+            # host semantics (CloudCoordinator.realized_cost): each
+            # edge's realized cost is the expected cost times an
+            # i.i.d. multiplier max(0.1, 1 + noise·N(0,1)).  The key
+            # is derived from k_data OUTSIDE the per-edge fold range
+            # [0, n_edges), so the fixed-cost RNG streams are
+            # untouched.  ``cost_noise`` is a TRACED knob (sweepable):
+            # a 0.0 knob multiplies by exactly 1.0, so fixed-cost runs
+            # are the noise-0 program bit-for-bit.
+            k_cost = jax.random.fold_in(k_data, n_edges)
+            eps = jax.random.normal(k_cost, (n_edges,))
+            mult = jnp.maximum(0.1, 1.0 + cost_noise * eps)
+            round_costs = round_costs * mult
             slot = jnp.max(round_costs)
             consumed = consumed + slot
 

@@ -37,6 +37,10 @@ class Policy:
 
     name: str = ""
     init_phase: bool = True        # paper §IV.B: try every feasible arm once
+    #: Modes the compiled in-graph programs implement for this policy
+    #: (``repro.el.ingraph`` sync round / ``repro.el.events`` async
+    #: event-horizon).  Empty = host paths only.
+    ingraph_modes: Tuple[str, ...] = ()
 
     def __init__(self, ucb_c: float = 2.0, eps: float = 0.1,
                  fixed_arm: int = 3, **_: object):
@@ -101,6 +105,15 @@ def available() -> Tuple[str, ...]:
     return tuple(sorted(_REGISTRY))
 
 
+def ingraph_modes(name: str) -> Tuple[str, ...]:
+    """Modes (``sync``/``async``) the compiled in-graph programs support
+    for the named policy; ``()`` for host-only or unknown policies.  The
+    sync program compiles ol4el's shared bandit, the async event-horizon
+    program its per-edge bandit fleet."""
+    cls = _REGISTRY.get(name)
+    return getattr(cls, "ingraph_modes", ()) if cls is not None else ()
+
+
 # ---------------------------------------------------------------------------
 # The paper's procedure and its ablations
 # ---------------------------------------------------------------------------
@@ -111,6 +124,7 @@ class OL4ELPolicy(Policy):
     """§IV.B.1 3-step procedure: P(i) ∝ UCB-density_i × frequency_i."""
 
     name = "ol4el"
+    ingraph_modes = ("sync", "async")   # shared / per-edge compiled bandits
 
     def _select(self, state, residual_budget, costs, feasible, rng):
         density = self._density(state, costs, feasible)

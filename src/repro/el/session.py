@@ -44,13 +44,14 @@ class ELSession:
 
     def __init__(self, cfg: Union[OL4ELConfig, ExperimentConfig], *,
                  metric_name: str = "accuracy", lr: float = 0.1,
-                 async_alpha: float = 0.5):
+                 async_alpha: Optional[float] = None):
         if isinstance(cfg, ExperimentConfig):
             cfg = cfg.ol4el
+        if async_alpha is not None:        # override the config's knob
+            cfg = dataclasses.replace(cfg, async_alpha=float(async_alpha))
         self.cfg = cfg
         self.metric_name = metric_name
         self.lr = lr
-        self.async_alpha = async_alpha
         self._executor: Optional[EdgeExecutor] = None
         self._init_params: Optional[Params] = None
         self._n_samples: Optional[np.ndarray] = None
@@ -60,8 +61,16 @@ class ELSession:
         self._coord_consumed = False
         self._fastpath = None                           # compiled program
         self._fastpath_key = None
+        self._async_fastpath = None                     # compiled async
+        self._async_key = None
         self._sweep_program = None                      # compiled sweep
         self._sweep_key = None
+
+    @property
+    def async_alpha(self) -> float:
+        """The async staleness-mix base rate (a config knob since it is
+        sweepable/traced; kept as an attribute for back-compat)."""
+        return self.cfg.async_alpha
 
     # -- builder API ---------------------------------------------------------
 
@@ -222,10 +231,40 @@ class ELSession:
 
     # -- host-driven asynchronous (event-driven) loop ------------------------
 
-    def run_async(self, max_events: int = 50_000,
-                  eval_every: int = 1) -> ELReport:
+    def run_async(self, max_events: Optional[int] = None,
+                  eval_every: int = 1,
+                  rng_streams: str = "numpy") -> ELReport:
+        """The host-driven event-queue loop (paper §V.A async semantics).
+
+        ``max_events=None`` derives the horizon from budget/cost
+        (``repro.el.events.default_event_horizon``), so long runs are
+        never silently truncated.
+
+        ``rng_streams`` picks the randomness source: ``"numpy"`` (the
+        legacy host streams) or ``"jax"`` — the same priority-queue loop
+        driven by the compiled async program's ``jax.random`` chain and
+        f32 kernels (``repro.el.events.reference``; needs the in-graph
+        support matrix).  In fixed-cost mode the ``"jax"`` loop is
+        bit-identical to ``run_async_ingraph()``; ``eval_every`` is
+        ignored there (the bandits consume the utility every event).
+        """
         cfg = self.cfg
         ex = self._require_executor()
+        if rng_streams == "jax":
+            from repro.el.events.reference import run_async_reference
+            acfg = self._ingraph_cfg("run_async(rng_streams='jax')",
+                                     mode="async")
+            return run_async_reference(
+                ex, acfg, self._initial_params(),
+                metric_name=self.metric_name, max_events=max_events,
+                callbacks=self._callbacks)
+        if rng_streams != "numpy":
+            raise ValueError(
+                f"unknown rng_streams={rng_streams!r}; expected 'numpy' "
+                "or 'jax'")
+        if max_events is None:
+            from repro.el.events.knobs import default_event_horizon
+            max_events = default_event_horizon(cfg)
         coord, utility, rng = self._build()
         t0 = time.perf_counter()
         global_params = self._initial_params()
@@ -294,18 +333,23 @@ class ELSession:
     @staticmethod
     def _structural_cfg(cfg: OL4ELConfig) -> OL4ELConfig:
         """The config with the knob fields normalized away: ucb_c, budget,
-        heterogeneity and seed enter the compiled program as traced inputs
-        (``sync_knobs`` / the rng key), so cache keys built from this reuse
-        one program across any knob point."""
+        heterogeneity, cost noise, the async mixing rate and seed enter
+        the compiled programs as traced inputs (``sync_knobs`` /
+        ``async_knobs`` / the rng key), so cache keys built from this
+        reuse one program across any knob point.  ``mode`` stays — it
+        selects the sync round vs the async event-horizon program."""
         return dataclasses.replace(cfg, ucb_c=0.0, budget=0.0,
-                                   heterogeneity=1.0, seed=0)
+                                   heterogeneity=1.0, seed=0,
+                                   cost_noise=0.0, cost_model="fixed",
+                                   async_alpha=0.5)
 
-    def _ingraph_cfg(self, caller: str) -> OL4ELConfig:
-        """The effective (sync-coerced, support-checked) fast-path config."""
+    def _ingraph_cfg(self, caller: str,
+                     mode: Optional[str] = None) -> OL4ELConfig:
+        """The effective (mode-coerced, support-checked) fast-path config."""
         from repro.el.ingraph import check_ingraph_support
         cfg = self.cfg
-        if cfg.mode != "sync":
-            cfg = dataclasses.replace(cfg, mode="sync")
+        if mode is not None and cfg.mode != mode:
+            cfg = dataclasses.replace(cfg, mode=mode)
         # an injected ol4el Policy object carries its own exploration
         # constant; honor it like the host path does (other policy objects
         # are rejected by the support check below)
@@ -320,11 +364,14 @@ class ELSession:
 
         Numerically equivalent (up to RNG streams) to ``run_sync`` under
         the fast path's contract — the supported matrix (see
-        ``repro.el.ingraph``) is:
+        ``repro.el.ingraph``; shared with ``run_async_ingraph``) is:
 
         ============  =====================================================
-        mode           ``sync`` only (async runs need the host event queue)
-        policy         ``ol4el`` only (the compiled 3-step KUBE bandit)
+        mode           ``sync`` (this method) or ``async``
+                       (``run_async_ingraph``, the ``repro.el.events``
+                       event-horizon program)
+        policy         ``ol4el`` only (the compiled 3-step KUBE bandit;
+                       shared in sync, per-edge in async)
         cost_model     ``fixed`` or ``variable`` (in-graph cost noise)
         utility        ``eval_gain`` (jittable metric) or ``param_delta``
         executor       ``InGraphExecutor`` (e.g. ``ClassicExecutor``)
@@ -336,7 +383,7 @@ class ELSession:
         """
         from repro.el.ingraph import make_sync_program, sync_knobs
         ex = self._require_executor()
-        cfg = self._ingraph_cfg("run_sync_ingraph")
+        cfg = self._ingraph_cfg("run_sync_ingraph", mode="sync")
         t0 = time.perf_counter()
         key = (ex, self._structural_cfg(cfg), max_rounds, metric_fn,
                self.metric_name,
@@ -376,6 +423,74 @@ class ELSession:
             final_params=params,
         )
 
+    def run_async_ingraph(self, max_events: Optional[int] = None,
+                          metric_fn: Optional[Callable] = None) -> ELReport:
+        """Run the whole budgeted async event loop as ONE compiled XLA
+        program (``repro.el.events``): no host priority queue — finish
+        times live in an ``[n_edges]`` array and each ``lax.while_loop``
+        step pops the argmin finish time, staleness-merges that edge's
+        block and schedules its next one.
+
+        Same supported matrix as ``run_sync_ingraph`` (policy ``ol4el``
+        with per-edge bandits).  ``max_events=None`` derives the event
+        horizon from budget/cost (``default_event_horizon``), so runs
+        terminate on budget exhaustion, never silent truncation.  In
+        fixed-cost mode the result is bit-identical to the host event
+        queue on the same streams, ``run_async(rng_streams="jax")``.
+        """
+        from repro.el.events import (async_knobs, default_event_horizon,
+                                     make_async_program)
+        ex = self._require_executor()
+        cfg = self._ingraph_cfg("run_async_ingraph", mode="async")
+        t0 = time.perf_counter()
+        if max_events is None:
+            # round the derived bound up to a power of two: the horizon
+            # is part of the compile cache key (it sizes the history
+            # arrays), so keying the exact budget/cost-dependent value
+            # would recompile on every knob change the traced inputs
+            # exist to absorb
+            horizon = max(64, 1 << (default_event_horizon(cfg) - 1)
+                          .bit_length())
+        else:
+            horizon = int(max_events)
+        key = (ex, self._structural_cfg(cfg), horizon, metric_fn,
+               self.metric_name)
+        if self._async_fastpath is None or self._async_key != key:
+            self._async_fastpath = jax.jit(make_async_program(
+                ex.model, ex.edge_data, ex.eval_set, cfg,
+                lr=ex.lr, batch=ex.batch, metric_fn=metric_fn,
+                metric_name=self.metric_name, max_events=horizon))
+            self._async_key = key
+        program = self._async_fastpath
+        params = self._initial_params()
+        params, out = jax.block_until_ready(
+            program(params, jax.random.key(cfg.seed + 17),
+                    async_knobs(cfg)))
+        n = int(out["n_rounds"])
+        records: List[RoundRecord] = []
+        for t in range(n):
+            self._emit(records, RoundRecord(
+                float(out["wall"][t]), float(out["consumed"][t]),
+                float(out["metric"][t]), float(out["utility"][t]),
+                float(out["interval"][t]), int(out["edge"][t]), t + 1))
+        final = ex.evaluate(params)[self.metric_name]
+        pulls = np.asarray(out["arm_pulls"]).sum(axis=0)     # [E,K] -> [K]
+        return ELReport(
+            records=records,
+            final_metric=float(final),
+            n_aggregations=n,
+            total_consumed=float(out["consumed"][n - 1]) if n else 0.0,
+            wall_time=float(out["wall_time"]),
+            terminated_reason=("budget_exhausted"
+                               if int(out["n_active"]) == 0
+                               else "max_events"),
+            policy=cfg.policy,
+            mode="async",
+            arm_pulls=[int(c) for c in pulls],
+            elapsed_s=time.perf_counter() - t0,
+            final_params=params,
+        )
+
     # -- compiled ablation sweeps ---------------------------------------------
 
     def sweep(self, spec, *, mesh=None,
@@ -383,12 +498,16 @@ class ELSession:
         """Run a whole ablation grid as ONE compiled, vmapped program.
 
         ``spec`` is a :class:`repro.el.sweep.SweepSpec` — grids over
-        ``ucb_c`` / ``budget`` / ``heterogeneity`` / ``seeds``; empty axes
-        inherit this session's config.  Every cell is bit-identical to an
-        independent ``run_sync_ingraph`` with that cell's config (same
-        RNG streams), and the same support matrix applies.  With
-        ``mesh=`` the sweep dim shards over the mesh's (``pod``,
-        ``data``) axes.  Returns a :class:`repro.el.sweep.SweepReport`.
+        ``ucb_c`` / ``budget`` / ``heterogeneity`` / ``cost_noise`` /
+        ``async_alpha`` / ``seeds``; empty axes inherit this session's
+        config.  The session's ``cfg.mode`` picks the compiled program
+        the grid vmaps over: the sync round (``repro.el.ingraph``) or
+        the async event-horizon engine (``repro.el.events``).  Every
+        cell is bit-identical to an independent ``run_sync_ingraph`` /
+        ``run_async_ingraph`` with that cell's config (same RNG
+        streams), and the same support matrix applies.  With ``mesh=``
+        the sweep dim shards over the mesh's (``pod``, ``data``) axes.
+        Returns a :class:`repro.el.sweep.SweepReport`.
         """
         from repro.el.sweep.engine import (make_sweep_program,
                                            run_sweep_program)

@@ -1,16 +1,19 @@
 """``repro.el.sweep`` — vmapped, mesh-sharded ablation sweeps.
 
 Turns a declarative :class:`SweepSpec` (grids over ``ucb_c``, budgets,
-heterogeneity, seeds) into ONE compiled XLA program: the in-graph sync
-run (``repro.el.ingraph``) vmapped over a flattened ``[n_cells]`` axis,
-optionally sharded over the production mesh.  Each cell is bit-identical
-to an independent ``ELSession.run_sync_ingraph`` with that cell's
-config.  Front door: ``ELSession.sweep(spec)`` → :class:`SweepReport`.
+heterogeneity, cost noise, async mixing rate, seeds) into ONE compiled
+XLA program: the in-graph sync round (``repro.el.ingraph``) or async
+event-horizon run (``repro.el.events``) — picked by the session's
+``cfg.mode`` — vmapped over a flattened ``[n_cells]`` axis, optionally
+sharded over the production mesh.  Each cell is bit-identical to an
+independent ``ELSession.run_sync_ingraph`` / ``run_async_ingraph`` with
+that cell's config.  Front door: ``ELSession.sweep(spec)`` →
+:class:`SweepReport`.
 """
 
-from repro.el.sweep.engine import (cell_keys, make_sweep_program,
-                                   run_sweep_program, stack_knobs,
-                                   sweep_input_shardings,
+from repro.el.sweep.engine import (cell_keys, knob_names,
+                                   make_sweep_program, run_sweep_program,
+                                   stack_knobs, sweep_input_shardings,
                                    sweep_partition_specs)
 from repro.el.sweep.report import SweepReport
 from repro.el.sweep.spec import AXIS_ORDER, SweepSpec, spec_from_sequences
@@ -18,5 +21,5 @@ from repro.el.sweep.spec import AXIS_ORDER, SweepSpec, spec_from_sequences
 __all__ = [
     "SweepSpec", "SweepReport", "AXIS_ORDER", "spec_from_sequences",
     "make_sweep_program", "run_sweep_program", "stack_knobs", "cell_keys",
-    "sweep_partition_specs", "sweep_input_shardings",
+    "knob_names", "sweep_partition_specs", "sweep_input_shardings",
 ]

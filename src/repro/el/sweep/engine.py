@@ -1,10 +1,12 @@
 """The sweep engine: one vmapped, optionally mesh-sharded XLA program.
 
-``make_sync_program`` (repro.el.ingraph) already takes the control-plane
-knobs as traced inputs; this module stacks per-cell knob arrays along a
-leading ``[n_cells]`` axis, vmaps the program over that axis, and jits —
-so a whole ablation grid (every cell bit-identical to an independent
-``run_sync_ingraph`` with that cell's config) is ONE compiled program.
+``make_sync_program`` (repro.el.ingraph) and ``make_async_program``
+(repro.el.events) both take the control-plane knobs as traced inputs;
+this module stacks per-cell knob arrays along a leading ``[n_cells]``
+axis, vmaps the mode's program over that axis, and jits — so a whole
+ablation grid (every cell bit-identical to an independent
+``run_sync_ingraph`` / ``run_async_ingraph`` with that cell's config)
+is ONE compiled program.
 
 On a multi-device mesh the sweep dim shards over the mesh's edge axes
 (``pod``, ``data``) and the per-edge knob dim over ``model`` when
@@ -25,6 +27,8 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.config import OL4ELConfig
+from repro.el.events.knobs import ASYNC_KNOB_NAMES, async_knobs
+from repro.el.events.program import make_async_program
 from repro.el.ingraph import KNOB_NAMES, make_sync_program, sync_knobs
 from repro.el.sweep.spec import SweepSpec
 
@@ -32,18 +36,28 @@ Params = Any
 
 #: Knobs with a trailing per-edge dim [n_cells, E] (shardable over model).
 _EDGE_KNOBS = ("comp", "comm", "min_edge_cost")
+#: Scalar knobs [n_cells].
+_SCALAR_KNOBS = ("ucb_c", "budget", "cost_noise", "async_alpha")
+
+
+def knob_names(mode: str) -> Tuple[str, ...]:
+    """The traced knob set of the mode's compiled program."""
+    return ASYNC_KNOB_NAMES if mode == "async" else KNOB_NAMES
 
 
 def stack_knobs(cell_cfgs: Sequence[OL4ELConfig]) -> Dict[str, np.ndarray]:
-    """Per-cell ``sync_knobs`` stacked along a leading [n_cells] axis."""
-    per_cell = [sync_knobs(c) for c in cell_cfgs]
+    """Per-cell ``sync_knobs`` / ``async_knobs`` (by the cells' mode)
+    stacked along a leading [n_cells] axis."""
+    knobs_fn = async_knobs if cell_cfgs[0].mode == "async" else sync_knobs
+    per_cell = [knobs_fn(c) for c in cell_cfgs]
     return {k: np.stack([knobs[k] for knobs in per_cell])
-            for k in KNOB_NAMES}
+            for k in knob_names(cell_cfgs[0].mode)}
 
 
 def cell_keys(cell_cfgs: Sequence[OL4ELConfig]) -> jax.Array:
     """Stacked per-cell PRNG keys — the exact stream ``run_sync_ingraph``
-    seeds for that cell's config (``jax.random.key(seed + 17)``)."""
+    / ``run_async_ingraph`` seeds for that cell's config
+    (``jax.random.key(seed + 17)``)."""
     # int32 matches the scalar path's x64-disabled seed canonicalization
     # (negative seeds wrap identically; >= 2**31 overflows on both paths)
     seeds = jnp.asarray([c.seed + 17 for c in cell_cfgs], jnp.int32)
@@ -62,7 +76,8 @@ def _axis_sizes(mesh) -> Dict[str, int]:
 
 def sweep_partition_specs(axis_names: Sequence[str],
                           axis_sizes: Dict[str, int],
-                          n_cells: int, n_edges: int
+                          n_cells: int, n_edges: int,
+                          mode: str = "sync"
                           ) -> Tuple[P, Dict[str, P]]:
     """PartitionSpecs for (keys, knobs): sweep dim over the edge axes,
     per-edge knob dim over ``model`` when divisible.  Pure (no devices) so
@@ -84,20 +99,26 @@ def sweep_partition_specs(axis_names: Sequence[str],
     edge_ax = "model" if (model_size > 1
                           and n_edges % model_size == 0) else None
     key_spec = P(sweep_axes)
-    knob_specs = {
-        name: (P(sweep_axes, edge_ax) if name in _EDGE_KNOBS
-               else P(sweep_axes) if name in ("ucb_c", "budget")
-               else P(sweep_axes, None))            # costs_k [C, K]
-        for name in KNOB_NAMES
-    }
+
+    def spec_for(name: str) -> P:
+        if name in _EDGE_KNOBS:                       # [C, E]
+            return P(sweep_axes, edge_ax)
+        if name in _SCALAR_KNOBS:                     # [C]
+            return P(sweep_axes)
+        if name == "costs_ek":                        # [C, E, K] (async)
+            return P(sweep_axes, edge_ax, None)
+        return P(sweep_axes, None)                    # costs_k [C, K]
+
+    knob_specs = {name: spec_for(name) for name in knob_names(mode)}
     return key_spec, knob_specs
 
 
-def sweep_input_shardings(mesh, n_cells: int, n_edges: int):
+def sweep_input_shardings(mesh, n_cells: int, n_edges: int,
+                          mode: str = "sync"):
     """NamedShardings for the vmapped program's (init_params, keys,
     knobs) arguments: params replicated, sweep dim over the edge axes."""
     key_spec, knob_specs = sweep_partition_specs(
-        mesh.axis_names, _axis_sizes(mesh), n_cells, n_edges)
+        mesh.axis_names, _axis_sizes(mesh), n_cells, n_edges, mode)
     return (NamedSharding(mesh, P()),
             NamedSharding(mesh, key_spec),
             {k: NamedSharding(mesh, s) for k, s in knob_specs.items()})
@@ -118,22 +139,26 @@ def make_sweep_program(model, edge_data, eval_set, cfg: OL4ELConfig,
     ``(params_stacked, out_stacked)`` with every output carrying a
     leading ``[n_cells]`` axis.
 
-    The per-cell computation is ``jax.vmap`` of the very same
-    ``make_sync_program`` program ``run_sync_ingraph`` drives, so each
-    cell is bit-identical to an independent run with that cell's config.
+    The per-cell computation is ``jax.vmap`` of the very same program
+    ``run_sync_ingraph`` / ``run_async_ingraph`` drives (picked by
+    ``cfg.mode``), so each cell is bit-identical to an independent run
+    with that cell's config.
     """
     cfgs = spec.cell_cfgs(cfg)
-    # structural fields (n_edges, utility, cost_model, ...) are identical
+    # structural fields (n_edges, utility, mode, ...) are identical
     # across cells by SweepSpec construction — any cell builds the program
-    core = make_sync_program(
+    make_program = (make_async_program if cfg.mode == "async"
+                    else make_sync_program)
+    core = make_program(
         model, edge_data, eval_set, cfgs[0], lr=lr, batch=batch,
         n_samples=n_samples, metric_fn=metric_fn, metric_name=metric_name,
-        max_rounds=spec.max_rounds)
+        **({"max_events": spec.max_rounds} if cfg.mode == "async"
+           else {"max_rounds": spec.max_rounds}))
     vmapped = jax.vmap(core, in_axes=(None, 0, 0))
     if mesh is None:
         return jax.jit(vmapped)
     return jax.jit(vmapped, in_shardings=sweep_input_shardings(
-        mesh, spec.n_cells, cfg.n_edges))
+        mesh, spec.n_cells, cfg.n_edges, cfg.mode))
 
 
 def run_sweep_program(program, init_params: Params,

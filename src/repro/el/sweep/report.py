@@ -39,8 +39,10 @@ class SweepReport:
     ``metric`` / ``utility`` / ``interval`` / ``consumed`` / ``wall``
     ``[n_cells, max_rounds]`` and ``n_rounds`` ``[n_cells]``,
     ``budgets_left`` ``[n_cells, E]``, ``arm_pulls`` ``[n_cells, K]``,
-    ``wall_time`` ``[n_cells]``.  Rounds past a cell's termination hold
-    NaN metrics (never observed), which the reductions respect.
+    ``wall_time`` ``[n_cells]``.  Async grids add per-event ``edge`` /
+    ``cost`` histories and per-edge ``arm_pulls`` ``[n_cells, E, K]``
+    ("rounds" are merge events there).  Rounds past a cell's termination
+    hold NaN metrics (never observed), which the reductions respect.
     """
 
     spec: SweepSpec
@@ -96,6 +98,18 @@ class SweepReport:
         """Total resource consumed (summed over edges), [n_cells]."""
         cons = self._at_last_round("consumed")
         return np.where(np.isnan(cons), 0.0, cons)
+
+    def truncated(self) -> np.ndarray:
+        """Per-cell flag: the history cap (``spec.max_rounds``) cut the
+        run short of budget exhaustion, so that cell's final metric /
+        consumption are mid-run values.  Async cells report this exactly
+        (the program's ``n_active`` counts blocks still in flight at
+        exit); sync cells fall back to the round-cap heuristic.  Raise
+        ``max_rounds`` (async: toward
+        ``repro.el.events.default_event_horizon``) for full runs."""
+        if "n_active" in self.out:
+            return np.asarray(self.out["n_active"]) > 0
+        return self.n_rounds() >= self.spec.max_rounds
 
     # -- seed-axis reductions ------------------------------------------------
 
@@ -209,8 +223,11 @@ class SweepReport:
         ok = np.isfinite(finals)
         lo = float(np.nanmin(finals)) if ok.any() else float("nan")
         hi = float(np.nanmax(finals)) if ok.any() else float("nan")
+        trunc = int(self.truncated().sum())
         return (f"sweep[{self.policy}] {self.n_cells} cells "
                 f"({', '.join(f'{k}×{len(v)}' for k, v in self.axes.items())}"
                 f"): metric {lo:.4f}..{hi:.4f}, "
                 f"{len(self.pareto_frontier())} Pareto points, "
-                f"{self.elapsed_s:.1f}s")
+                f"{self.elapsed_s:.1f}s"
+                + (f" [{trunc} cells truncated at max_rounds="
+                   f"{self.spec.max_rounds}]" if trunc else ""))

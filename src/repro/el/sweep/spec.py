@@ -7,13 +7,17 @@ row-major into ``[n_cells]`` (seed fastest, so seed-replicates of one
 hyperparameter point are contiguous) and runs every cell inside one
 compiled, vmapped XLA program.
 
-Only knobs that enter the compiled sync program as *traced inputs* are
-sweepable (``repro.el.ingraph.KNOB_NAMES`` territory): the ``ol4el``
+Only knobs that enter the compiled programs as *traced inputs* are
+sweepable (``repro.el.ingraph.KNOB_NAMES`` /
+``repro.el.events.ASYNC_KNOB_NAMES`` territory): the ``ol4el``
 exploration constant ``ucb_c``, the per-edge ``budget``, the fleet
-``heterogeneity`` (it only moves the cost arrays), and the bandit/data
+``heterogeneity`` (it only moves the cost arrays), the variable-cost
+noise scale ``cost_noise``, the async staleness-mix base rate
+``async_alpha`` (a no-op axis for sync grids), and the bandit/data
 ``seed``.  Structural knobs (n_edges, max_interval, utility, policy,
-cost_model) change the program itself and stay fixed across a sweep —
-run several sweeps to compare those.
+mode) change the program itself and stay fixed across a sweep — run
+several sweeps to compare those (the session's ``cfg.mode`` picks the
+sync round vs the async event-horizon program for the whole grid).
 """
 
 from __future__ import annotations
@@ -26,7 +30,8 @@ from repro.config import OL4ELConfig
 
 #: Sweep-axis order; the flattened cell index is row-major over these,
 #: so ``seed`` varies fastest.
-AXIS_ORDER = ("ucb_c", "budget", "heterogeneity", "seed")
+AXIS_ORDER = ("ucb_c", "budget", "heterogeneity", "cost_noise",
+              "async_alpha", "seed")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -40,16 +45,23 @@ class SweepSpec:
     (bandit selection, minibatch sampling, cost noise) — the dataset,
     edge partition and init params are program constants shared by every
     cell.  To resample those too, run one sweep per data seed.
+
+    ``max_rounds`` bounds the per-cell history length: sync rounds for
+    sync grids, merge *events* for async grids (where a generous bound
+    is ``repro.el.events.default_event_horizon``).
     """
 
     ucb_c: Tuple[float, ...] = ()
     budget: Tuple[float, ...] = ()
     heterogeneity: Tuple[float, ...] = ()
+    cost_noise: Tuple[float, ...] = ()
+    async_alpha: Tuple[float, ...] = ()
     seeds: Tuple[int, ...] = (0,)
     max_rounds: int = 256
 
     def __post_init__(self):
-        for name in ("ucb_c", "budget", "heterogeneity", "seeds"):
+        for name in ("ucb_c", "budget", "heterogeneity", "cost_noise",
+                     "async_alpha", "seeds"):
             vals = getattr(self, name)
             if not isinstance(vals, tuple):
                 object.__setattr__(self, name, tuple(vals))
@@ -66,6 +78,14 @@ class SweepSpec:
             raise ValueError("SweepSpec.heterogeneity values are "
                              "fastest/slowest ratios and must be >= 1, "
                              f"got {self.heterogeneity}")
+        if any(n < 0 for n in self.cost_noise):
+            raise ValueError("SweepSpec.cost_noise values are relative "
+                             "noise scales and must be >= 0, got "
+                             f"{self.cost_noise}")
+        if any(not 0.0 < a <= 1.0 for a in self.async_alpha):
+            raise ValueError("SweepSpec.async_alpha values are mixing "
+                             "rates and must be in (0, 1], got "
+                             f"{self.async_alpha}")
 
     # -- flattening ----------------------------------------------------------
 
@@ -75,6 +95,8 @@ class SweepSpec:
             "ucb_c": self.ucb_c or (cfg.ucb_c,),
             "budget": self.budget or (cfg.budget,),
             "heterogeneity": self.heterogeneity or (cfg.heterogeneity,),
+            "cost_noise": self.cost_noise or (cfg.cost_noise,),
+            "async_alpha": self.async_alpha or (cfg.async_alpha,),
             "seed": self.seeds,
         }
 
@@ -82,7 +104,9 @@ class SweepSpec:
     def n_cells(self) -> int:
         n = 1
         for vals in (self.ucb_c or (None,), self.budget or (None,),
-                     self.heterogeneity or (None,), self.seeds):
+                     self.heterogeneity or (None,),
+                     self.cost_noise or (None,),
+                     self.async_alpha or (None,), self.seeds):
             n *= len(vals)
         return n
 
@@ -95,12 +119,24 @@ class SweepSpec:
 
     def cell_cfgs(self, cfg: OL4ELConfig) -> List[OL4ELConfig]:
         """One per-cell config per flattened cell — exactly what an
-        independent ``run_sync_ingraph`` of that cell would use (the
-        sweep-vs-independent equivalence tests lean on this)."""
+        independent ``run_sync_ingraph`` / ``run_async_ingraph`` of that
+        cell would use (the sweep-vs-independent equivalence tests lean
+        on this).  The session config's ``mode`` carries through to every
+        cell.  Only an EXPLICIT ``cost_noise`` axis flips nonzero-noise
+        cells to ``cost_model="variable"`` (the knob derivations gate
+        noise on it); an inherited one-point axis keeps the session's
+        cost model, so a fixed-cost session with a dormant
+        ``cfg.cost_noise`` sweeps exactly like its single runs."""
+        explicit_noise = bool(self.cost_noise)
         return [dataclasses.replace(
-            cfg, mode="sync", ucb_c=float(c["ucb_c"]),
+            cfg, ucb_c=float(c["ucb_c"]),
             budget=float(c["budget"]),
-            heterogeneity=float(c["heterogeneity"]), seed=int(c["seed"]))
+            heterogeneity=float(c["heterogeneity"]),
+            cost_noise=float(c["cost_noise"]),
+            cost_model=("variable"
+                        if explicit_noise and c["cost_noise"] > 0
+                        else cfg.cost_model),
+            async_alpha=float(c["async_alpha"]), seed=int(c["seed"]))
             for c in self.cells(cfg)]
 
     def describe(self, cfg: OL4ELConfig) -> str:
@@ -112,11 +148,15 @@ class SweepSpec:
 def spec_from_sequences(ucb_c: Sequence[float] = (),
                         budget: Sequence[float] = (),
                         heterogeneity: Sequence[float] = (),
+                        cost_noise: Sequence[float] = (),
+                        async_alpha: Sequence[float] = (),
                         seeds: Sequence[int] = (0,),
                         max_rounds: int = 256) -> SweepSpec:
     """CLI-friendly constructor (lists in, validated tuples out)."""
     return SweepSpec(ucb_c=tuple(float(x) for x in ucb_c),
                      budget=tuple(float(x) for x in budget),
                      heterogeneity=tuple(float(x) for x in heterogeneity),
+                     cost_noise=tuple(float(x) for x in cost_noise),
+                     async_alpha=tuple(float(x) for x in async_alpha),
                      seeds=tuple(int(s) for s in seeds),
                      max_rounds=int(max_rounds))

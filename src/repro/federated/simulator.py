@@ -50,7 +50,7 @@ class ELSimulator:
                  n_samples: Optional[np.ndarray] = None,
                  metric_name: str = "accuracy",
                  lr: float = 0.1,
-                 async_alpha: float = 0.5):
+                 async_alpha: Optional[float] = None):
         warnings.warn(
             "ELSimulator is deprecated; use repro.el.ELSession",
             DeprecationWarning, stacklevel=2)
@@ -74,8 +74,10 @@ class ELSimulator:
         return self.session.run_sync(max_rounds=max_rounds,
                                      eval_every=eval_every)
 
-    def run_async(self, max_events: int = 50_000,
+    def run_async(self, max_events: Optional[int] = None,
                   eval_every: int = 1) -> SimResult:
+        # None derives the event horizon from budget/cost (no silent
+        # truncation), matching ELSession.run_async
         return self.session.run_async(max_events=max_events,
                                       eval_every=eval_every)
 

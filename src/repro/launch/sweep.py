@@ -3,10 +3,12 @@
     PYTHONPATH=src python -m repro.launch.sweep --arch svm-wafer \
         --ucb-c 1.0 2.0 --budget 2000 4000 --seeds 0 1 2
 
-Flattens the grid (ucb_c × budget × heterogeneity × seeds) into
-``[n_cells]``, vmaps the compiled in-graph EL program over it
-(``repro.el.sweep``), and prints per-cell rows, seed-mean curves and the
-accuracy-vs-resource Pareto frontier.
+Flattens the grid (ucb_c × budget × heterogeneity × cost_noise ×
+async_alpha × seeds) into ``[n_cells]``, vmaps the compiled in-graph EL
+program over it (``repro.el.sweep``) — the sync round or, with
+``--el-mode async``, the event-horizon async engine
+(``repro.el.events``) — and prints per-cell rows, seed-mean curves and
+the accuracy-vs-resource Pareto frontier.
 
 ``--mesh debug`` runs the sharded path on forced host devices (the sweep
 dim over the mesh's ``data`` axis, the knob edge dim over ``model``) —
@@ -66,9 +68,9 @@ def build_session(args) -> ELSession:
     exp = get_config(args.arch)
     model = build_model(exp.model)
     ol = dataclasses.replace(
-        exp.ol4el, mode="sync", policy="ol4el", n_edges=args.edges,
+        exp.ol4el, mode=args.el_mode, policy="ol4el", n_edges=args.edges,
         utility=utility, cost_model=args.cost_model,
-        cost_noise=args.cost_noise, max_interval=args.max_interval)
+        max_interval=args.max_interval)
     edges = partition_edges(train, args.edges, alpha=args.alpha,
                             seed=args.data_seed)
     ex = ClassicExecutor(model, edges, test, batch=batch, lr=lr)
@@ -89,7 +91,17 @@ def main() -> None:
                     help="per-edge budget grid")
     ap.add_argument("--heterogeneity", type=float, nargs="*", default=[],
                     help="fleet heterogeneity (H) grid")
+    ap.add_argument("--cost-noise", type=float, nargs="*", default=[],
+                    help="variable-cost noise-scale grid (>0 implies "
+                         "cost_model=variable for that cell)")
+    ap.add_argument("--async-alpha", type=float, nargs="*", default=[],
+                    help="async staleness-mix base-rate grid "
+                         "(a no-op axis for sync grids)")
     ap.add_argument("--seeds", type=int, nargs="*", default=[0, 1])
+    ap.add_argument("--el-mode", default="sync", choices=["sync", "async"],
+                    help="'async': every cell runs the compiled "
+                         "event-horizon program (repro.el.events); "
+                         "max-rounds then bounds merge EVENTS")
     ap.add_argument("--max-rounds", type=int, default=256)
     ap.add_argument("--edges", type=int, default=3)
     ap.add_argument("--samples", type=int, default=4000)
@@ -97,7 +109,6 @@ def main() -> None:
                     help="Dirichlet concentration of the edge data split")
     ap.add_argument("--cost-model", default="fixed",
                     choices=["fixed", "variable"])
-    ap.add_argument("--cost-noise", type=float, default=0.0)
     ap.add_argument("--max-interval", type=int, default=10)
     ap.add_argument("--data-seed", type=int, default=0)
     ap.add_argument("--mesh", default="none", choices=["none", "debug"],
@@ -107,7 +118,8 @@ def main() -> None:
 
     spec = spec_from_sequences(
         ucb_c=args.ucb_c, budget=args.budget,
-        heterogeneity=args.heterogeneity, seeds=args.seeds,
+        heterogeneity=args.heterogeneity, cost_noise=args.cost_noise,
+        async_alpha=args.async_alpha, seeds=args.seeds,
         max_rounds=args.max_rounds)
     mesh = None
     if args.mesh == "debug":
@@ -123,13 +135,22 @@ def main() -> None:
 
     report = session.sweep(spec, mesh=mesh)
 
-    print(f"\n{'ucb_c':>6s} {'budget':>8s} {'H':>5s} {'seed':>5s} "
+    print(f"\n{'ucb_c':>6s} {'budget':>8s} {'H':>5s} {'noise':>6s} "
+          f"{'alpha':>6s} {'seed':>5s} "
           f"{'rounds':>6s} {'metric':>8s} {'consumed':>9s}")
     for row in report.to_rows():
         print(f"{row['ucb_c']:6.2f} {row['budget']:8.0f} "
-              f"{row['heterogeneity']:5.1f} {row['seed']:5.0f} "
+              f"{row['heterogeneity']:5.1f} {row['cost_noise']:6.2f} "
+              f"{row['async_alpha']:6.2f} {row['seed']:5.0f} "
               f"{row['n_rounds']:6d} {row['final_metric']:8.4f} "
               f"{row['total_consumed']:9.0f}")
+
+    trunc = report.truncated()
+    if trunc.any():
+        print(f"\nWARNING: {int(trunc.sum())}/{report.n_cells} cells hit "
+              f"the max-rounds cap ({spec.max_rounds}) before budget "
+              "exhaustion — metrics are mid-run; raise --max-rounds for "
+              "full runs")
 
     print("\nPareto frontier (consumed ↑ ⇒ metric ↑, seed-means):")
     for p in report.pareto_frontier():

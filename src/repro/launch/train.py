@@ -29,20 +29,21 @@ from repro.train import (checkpoint, init_train_state, make_train_step)
 
 
 def train_standard(exp, args) -> None:
+    n_steps = args.steps if args.steps is not None else 50
     model = build_model(exp.model)
     state = init_train_state(model, exp.train, jax.random.key(exp.train.seed))
     data = SyntheticLMData.for_model(exp.model, args.batch, args.seq)
     step = jax.jit(make_train_step(model, exp.train))
-    for i in range(args.steps):
+    for i in range(n_steps):
         t0 = time.time()
         state, metrics = step(state, data.batch(0, i))
-        if i % args.log_every == 0 or i == args.steps - 1:
+        if i % args.log_every == 0 or i == n_steps - 1:
             print(f"step {i:5d} loss={float(metrics['loss']):.4f} "
                   f"lr={float(metrics['lr']):.2e} "
                   f"gnorm={float(metrics['grad_norm']):.2f} "
                   f"dt={time.time() - t0:.2f}s", flush=True)
     if args.ckpt:
-        checkpoint.save(args.ckpt, state, step=args.steps)
+        checkpoint.save(args.ckpt, state, step=n_steps)
         print(f"saved checkpoint to {args.ckpt}")
 
 
@@ -51,6 +52,7 @@ def train_ol4el(exp, args) -> None:
     ol = dataclasses.replace(exp.ol4el, n_edges=args.edges,
                              heterogeneity=args.heterogeneity,
                              budget=args.budget, mode=args.el_mode,
+                             async_alpha=args.async_alpha,
                              utility="loss_delta")
     ex = LMExecutor(model, exp.model, exp.train, batch=args.batch,
                     seq_len=args.seq, seed=exp.train.seed)
@@ -66,9 +68,21 @@ def train_ol4el(exp, args) -> None:
                .with_executor(ex)
                .on_round(progress))
     if ol.mode == "sync":
-        report = session.run_sync(max_rounds=args.steps)
+        report = session.run_sync(
+            max_rounds=args.steps if args.steps is not None else 50)
     else:
-        report = session.run_async(max_events=args.steps * args.edges)
+        # without an explicit --steps the event horizon is derived from
+        # budget/cost (repro.el.events.default_event_horizon): async
+        # runs terminate on budget exhaustion — the old steps-based
+        # default silently truncated long runs.  An explicit --steps
+        # still caps the run (steps * edges events).
+        if args.steps is not None:
+            print(f"async: --steps caps the run at "
+                  f"{args.steps * args.edges} events (omit --steps to "
+                  "run to budget exhaustion)", flush=True)
+        report = session.run_async(
+            max_events=None if args.steps is None
+            else args.steps * args.edges)
     print(f"done: {report.n_aggregations} aggregations, "
           f"final loss {report.final_metric:.4f}, "
           f"consumed {report.total_consumed:.0f} "
@@ -87,7 +101,12 @@ def main(argv=None) -> None:
     ap.add_argument("--mode", default="standard",
                     choices=["standard", "ol4el"])
     ap.add_argument("--el-mode", default="async", choices=["sync", "async"])
-    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--async-alpha", type=float, default=0.5,
+                    help="async staleness-mix base rate (cfg.async_alpha)")
+    ap.add_argument("--steps", type=int, default=None,
+                    help="standard/sync: training steps/rounds (default "
+                         "50); async: optional event cap of steps*edges "
+                         "— omitted, the run goes to budget exhaustion")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--edges", type=int, default=4)

@@ -312,8 +312,13 @@ def test_ingraph_program_reused_across_knob_changes():
     assert r2.total_consumed != r1.total_consumed
 
 
-def test_run_el_rejects_ingraph_async():
+def test_run_el_routes_ingraph_async_through_event_program():
+    """ingraph=True used to be sync-only; async runs now compile through
+    the repro.el.events event-horizon program."""
     from benchmarks.common import run_el
-    with pytest.raises(ValueError, match="sync-only"):
-        run_el("svm", "ol4el", "async", 3.0, budget=500.0, n_data=400,
+    r = run_el("svm", "ol4el", "async", 3.0, budget=500.0, n_data=400,
                ingraph=True)
+    assert r.mode == "async"
+    assert r.n_aggregations > 0
+    # per-event records carry the completing edge
+    assert {rec.edge for rec in r.records} <= {0, 1, 2}

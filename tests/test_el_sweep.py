@@ -61,7 +61,10 @@ def test_spec_defaults_inherit_cfg_and_seed_varies_fastest():
     assert all(c["heterogeneity"] == 3.0 for c in cells)
     ccfgs = spec.cell_cfgs(cfg)
     assert [c.seed for c in ccfgs] == [0, 7, 0, 7]
-    assert all(c.mode == "sync" for c in ccfgs)
+    # the session config's mode carries into every cell (it picks the
+    # sync round vs the async event-horizon program for the whole grid)
+    assert all(c.mode == cfg.mode for c in ccfgs)
+    assert all(c.async_alpha == cfg.async_alpha for c in ccfgs)
     assert tuple(spec.axes(cfg)) == AXIS_ORDER
 
 
