@@ -24,7 +24,14 @@ def _time(fn, n=50, warmup=3) -> float:
     return (time.perf_counter() - t0) * 1e6 / n
 
 
-def run(quiet: bool = False) -> List[Dict]:
+def run(quiet: bool = False, sharded: bool = False) -> List[Dict]:
+    """``sharded=True`` (CLI: ``--sharded``) adds the mesh-sharded /
+    donated single-run rows — they spawn a multi-device
+    ``scripts/bench_el.py`` subprocess (minutes, needs forced host
+    devices), so they are opt-in and the default run keeps the quick
+    in-process contract existing callers (``benchmarks.run``) rely on;
+    the committed ``BENCH_el.json`` is the canonical record of those
+    tiers."""
     rows = []
 
     # bandit decision latency (cloud control plane)
@@ -172,6 +179,13 @@ def run(quiet: bool = False) -> List[Dict]:
                 f"speedup={seq_host_us / max(sweep_us, 1e-9):.1f}"
                 "x_vs_seq_host"))
 
+    # mesh-sharded + donated single-run data plane vs the replicated
+    # in-graph program (scripts/bench_el.py in a subprocess — the
+    # sharded rows need forced host devices, which must be set before
+    # jax initializes, so they cannot run in this process)
+    if sharded:
+        rows.extend(_sharded_rows())
+
     if not quiet:
         for row in rows:
             print(f"micro {row['name']:40s} {row['us_per_call']:12.1f} us  "
@@ -179,5 +193,59 @@ def run(quiet: bool = False) -> List[Dict]:
     return rows
 
 
+def _sharded_rows() -> List[Dict]:
+    rows = []
+    import json as _json
+    import os as _os
+    import subprocess as _sp
+    import sys as _sys
+    import tempfile as _tempfile
+    repo = _os.path.dirname(_os.path.dirname(_os.path.abspath(__file__)))
+    with _tempfile.TemporaryDirectory() as td:
+        bench_out = _os.path.join(td, "bench_el.json")
+        r = _sp.run(
+            [_sys.executable, _os.path.join(repo, "scripts", "bench_el.py"),
+             "--devices", "4", "--skip-host", "--repeats", "3",
+             "--samples", "2000", "--budget", "2000", "--max-rounds", "48",
+             "--max-events", "128", "--out", bench_out],
+            capture_output=True, text=True, timeout=1800,
+            env=dict(_os.environ,
+                     PYTHONPATH=_os.path.join(repo, "src")))
+        if r.returncode != 0:
+            raise RuntimeError(f"bench_el subprocess failed:\n{r.stdout}"
+                               f"\n{r.stderr}")
+        sub = _json.load(open(bench_out))["rows"]
+
+    def _peak(row):
+        p = row.get("peak_live_bytes")
+        return "n/a" if p is None else f"{p / 1e6:.2f}MB"
+
+    base = sub["el_sync_ingraph"]
+    for name, tag in (("el_sync_ingraph_donate", "donated"),
+                      ("el_sync_sharded", "sharded_2x2"),
+                      ("el_sync_sharded_donate", "sharded_donated")):
+        row = sub[name]
+        rows.append(dict(
+            name=f"{name}_per_round",
+            us_per_call=row["us_per_aggregation"],
+            derived=f"{tag},speedup={base['us_per_aggregation'] / max(row['us_per_aggregation'], 1e-9):.1f}"
+                    f"x_vs_replicated,peak={_peak(row)}"
+                    f"(vs{_peak(base)}),alias={row.get('alias_bytes', 0)}B"))
+    abase = sub["el_async_ingraph"]
+    arow = sub["el_async_sharded"]
+    rows.append(dict(
+        name="el_async_sharded_per_event",
+        us_per_call=arow["us_per_aggregation"],
+        derived=f"speedup={abase['us_per_aggregation'] / max(arow['us_per_aggregation'], 1e-9):.1f}"
+                f"x_vs_replicated,peak={_peak(arow)}(vs{_peak(abase)})"))
+    return rows
+
+
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--sharded", action="store_true",
+                    help="also run the mesh-sharded/donated single-run "
+                         "rows (spawns a multi-device scripts/bench_el.py "
+                         "subprocess; minutes)")
+    run(sharded=ap.parse_args().sharded)

@@ -1,0 +1,222 @@
+"""Benchmark the single-run EL data plane → ``BENCH_el.json``.
+
+Measures, for one sync run and one async run of the paper's SVM
+workload, the per-aggregation wall-clock and per-device peak live bytes
+of every execution tier:
+
+  * ``host``            — the host-driven loop (numpy control plane);
+  * ``ingraph``         — the compiled ``lax.while_loop`` program
+                          (the PR 3 replicated path — the baseline the
+                          sharded/donated rows are judged against);
+  * ``ingraph_donate``  — same program with the initial params' buffers
+                          donated (XLA aliases them into the output:
+                          in-place fleet update instead of a copy);
+  * ``sharded``         — the program pjit-sharded over a debug mesh
+                          built from forced host devices (edge dim over
+                          ``data``, model tensors over ``model``), the
+                          placement a TPU fleet uses via
+                          ``repro.launch.mesh``;
+  * ``sharded_donate``  — both.
+
+Peak live bytes come from XLA's ``memory_analysis`` of the compiled
+executable (arguments + outputs + temps − aliased), so the donation
+saving and the per-device sharding saving are visible even on CPU.
+Timings are CPU-host numbers — correctness-path costs, not TPU perf
+(the roofline models that) — but the sharded rows execute the real
+partitioned program on real (forced) devices.
+
+    PYTHONPATH=src python scripts/bench_el.py --devices 4 --out BENCH_el.json
+
+Run from the repo root; the committed ``BENCH_el.json`` is this
+script's output on the CI-class container.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+# must precede the jax import: the sharded rows need a real (CPU-
+# emulated) multi-device fleet, sized by --devices (default 4)
+from repro.launch.hostdev import force_host_devices
+
+force_host_devices("--devices", skip=(), count_from_flag=True,
+                   always=True)
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.el import ELSession
+from repro.el.events import ASYNC_KNOB_NAMES, async_knobs, make_async_program
+from repro.el.ingraph import KNOB_NAMES, make_sync_program, sync_knobs
+from repro.launch.classic import classic_fixture
+from repro.launch.mesh import make_debug_mesh_for
+from repro.sharding import el_run_in_shardings
+
+
+def _fixture(args):
+    fx = classic_fixture("svm-wafer", samples=args.samples,
+                         n_edges=args.edges, alpha=1.0,
+                         batch=args.batch)
+    ol = dataclasses.replace(
+        fx["exp"].ol4el, mode="sync", policy="ol4el", n_edges=args.edges,
+        budget=args.budget, heterogeneity=4.0, utility=fx["utility"],
+        seed=0)
+    return fx["model"], fx["executor"], ol, fx["n_samples"]
+
+
+def _memory(jfn, example_args):
+    """Per-device peak live bytes of the compiled executable (None when
+    the backend cannot report it)."""
+    try:
+        ma = jfn.lower(*example_args).compile().memory_analysis()
+        peak = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+                + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
+        return {
+            "peak_live_bytes": int(peak),
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+        }
+    except Exception as e:                     # pragma: no cover
+        return {"peak_live_bytes": None, "memory_error": str(e)[:120]}
+
+
+def bench_compiled(model, ex, ol, ns, mode, mesh, donate, args):
+    """Time one compiled-program tier and read its memory analysis."""
+    cfg = dataclasses.replace(ol, mode=mode)
+    if mode == "sync":
+        core = make_sync_program(
+            model, ex.edge_data, ex.eval_set, cfg, lr=ex.lr, batch=ex.batch,
+            n_samples=np.asarray(ns, np.float64),
+            max_rounds=args.max_rounds, mesh=mesh)
+        knobs, knob_names = sync_knobs(cfg), KNOB_NAMES
+    else:
+        core = make_async_program(
+            model, ex.edge_data, ex.eval_set, cfg, lr=ex.lr, batch=ex.batch,
+            max_events=args.max_events, mesh=mesh)
+        knobs, knob_names = async_knobs(cfg), ASYNC_KNOB_NAMES
+    params0 = model.init(jax.random.key(0))
+    rng = jax.random.key(cfg.seed + 17)
+    kw = {}
+    if donate:
+        kw["donate_argnums"] = (0,)
+    if mesh is not None:
+        kw["in_shardings"] = el_run_in_shardings(
+            mesh, model.cfg, jax.eval_shape(lambda p: p, params0),
+            knob_names)
+    jfn = jax.jit(core, **kw)
+
+    def fresh():
+        return jax.tree.map(lambda x: x.copy(), params0)
+
+    _, out = jax.block_until_ready(jfn(fresh(), rng, knobs))   # compile
+    n_agg = int(out["n_rounds"])
+    reps = []
+    for _ in range(args.repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(jfn(fresh(), rng, knobs))
+        reps.append((time.perf_counter() - t0) * 1e6)
+    # min-of-repeats: the host is a shared CPU, so the floor is the
+    # honest per-program cost (the mean rides scheduler noise)
+    dt_us = min(reps)
+    row = {
+        "n_aggregations": n_agg,
+        "us_per_aggregation": dt_us / max(n_agg, 1),
+        "wall_us": dt_us,
+        "wall_us_mean": float(np.mean(reps)),
+    }
+    row.update(_memory(jfn, (jax.eval_shape(lambda p: p, params0), rng,
+                             knobs)))
+    return row
+
+
+def bench_host(model, ex, ol, ns, mode):
+    cfg = dataclasses.replace(ol, mode=mode)
+
+    def run():
+        s = (ELSession(cfg, metric_name="accuracy", lr=0.05)
+             .with_executor(ex, init_params=model.init(jax.random.key(0)),
+                            n_samples=ns))
+        return s.run_sync() if mode == "sync" else s.run_async()
+
+    run()                                       # warm the executor jits
+    t0 = time.perf_counter()
+    rep = run()
+    dt_us = (time.perf_counter() - t0) * 1e6
+    return {"n_aggregations": rep.n_aggregations,
+            "us_per_aggregation": dt_us / max(rep.n_aggregations, 1),
+            "wall_us": dt_us, "peak_live_bytes": None}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(
+        description="single-run EL data-plane benchmark -> BENCH_el.json")
+    ap.add_argument("--devices", type=int, default=4,
+                    help="forced host device count (the debug mesh is "
+                         "(devices//2, 2))")
+    ap.add_argument("--edges", type=int, default=8)
+    ap.add_argument("--samples", type=int, default=4000)
+    ap.add_argument("--batch", type=int, default=128)
+    ap.add_argument("--budget", type=float, default=4000.0)
+    ap.add_argument("--max-rounds", type=int, default=64)
+    ap.add_argument("--max-events", type=int, default=256)
+    ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--skip-host", action="store_true",
+                    help="omit the slow host-loop baselines")
+    ap.add_argument("--out", default="BENCH_el.json")
+    args = ap.parse_args(argv)
+
+    n_dev = jax.device_count()
+    mesh = make_debug_mesh_for(n_dev)
+    model, ex, ol, ns = _fixture(args)
+
+    rows = {}
+    tiers = [("ingraph", None, False), ("ingraph_donate", None, True),
+             ("sharded", mesh, False), ("sharded_donate", mesh, True)]
+    for mode in ("sync", "async"):
+        if not args.skip_host:
+            rows[f"el_{mode}_host"] = bench_host(model, ex, ol, ns, mode)
+            print(f"el_{mode}_host: "
+                  f"{rows[f'el_{mode}_host']['us_per_aggregation']:.0f} "
+                  "us/agg", flush=True)
+        for name, m, donate in tiers:
+            row = bench_compiled(model, ex, ol, ns, mode, m, donate, args)
+            rows[f"el_{mode}_{name}"] = row
+            peak = row.get("peak_live_bytes")
+            print(f"el_{mode}_{name}: {row['us_per_aggregation']:.0f} "
+                  f"us/agg, peak "
+                  f"{peak if peak is None else f'{peak / 1e6:.2f}MB'}",
+                  flush=True)
+
+    report = {
+        "meta": {
+            "workload": "svm-wafer",
+            "edges": args.edges, "samples": args.samples,
+            "batch": args.batch, "budget": args.budget,
+            "max_rounds": args.max_rounds, "max_events": args.max_events,
+            "devices": n_dev, "mesh": dict(mesh.shape),
+            "backend": jax.default_backend(), "jax": jax.__version__,
+            "note": ("CPU-host correctness-path timings; peak bytes are "
+                     "per-device XLA memory_analysis (args+outputs+temps"
+                     "-aliased)"),
+        },
+        "rows": rows,
+    }
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -48,7 +48,8 @@ from repro.el.events.scheduler import (schedule_block, split_event_keys,
                                        staleness_merge)
 from repro.el.events.state import (bandit_fleet_init, bandit_place,
                                    bandit_slice)
-from repro.el.ingraph import (_pad_edge_data, _tree_l2,
+from repro.el.ingraph import (_edge_stack_constraints, _pad_edge_data,
+                              _shard_edge_data, _tree_l2,
                               check_ingraph_support, default_metric_fn,
                               make_local_block)
 
@@ -57,11 +58,15 @@ Params = Any
 
 def _build_parts(model, edge_data, eval_set, cfg: OL4ELConfig, *,
                  lr: float, batch: int, metric_fn: Optional[Callable],
-                 metric_name: str):
+                 metric_name: str, mesh=None):
     """The data-plane pieces both async paths share: the masked local
     block (identical minibatch streams to the sync program's) and the
-    jittable eval metric."""
+    jittable eval metric.  With ``mesh=`` the per-edge datasets live
+    sharded over the mesh's edge axes (the host reference kernels never
+    pass one)."""
     xs, ys, n_per_edge = _pad_edge_data(edge_data)
+    if mesh is not None:
+        xs, ys = _shard_edge_data(mesh, cfg.n_edges, xs, ys)
     local_block = make_local_block(model, xs, ys, n_per_edge, batch, lr,
                                    cfg.max_interval)
     if metric_fn is None:
@@ -95,7 +100,7 @@ def make_async_program(model, edge_data, eval_set, cfg: OL4ELConfig, *,
                        n_samples: Optional[np.ndarray] = None,
                        metric_fn: Optional[Callable] = None,
                        metric_name: str = "accuracy",
-                       max_events: int = 256):
+                       max_events: int = 256, mesh=None):
     """Build ``program(init_params, rng, knobs) -> (params, out)`` — the
     whole budgeted async run as one ``lax.while_loop`` over events, with
     the control-plane knobs (``ASYNC_KNOB_NAMES`` / ``async_knobs``) as
@@ -104,6 +109,17 @@ def make_async_program(model, edge_data, eval_set, cfg: OL4ELConfig, *,
     ``n_samples`` is accepted for signature parity with the sync program
     and ignored: the async global update is the staleness mix, not a
     weighted average.
+
+    With ``mesh=`` the big per-edge state — the datasets and the
+    ``[n_edges, ...]`` fetched-params stack each edge trains from —
+    shards over the mesh's (``pod``, ``data``) axes and its tensor dims
+    over ``model`` (``el_stacked_param_specs`` layout), so a large fleet's
+    model copies spread across devices instead of replicating E-fold.
+    The event edge's slice is gathered replicated before its local
+    block, merge and bandit update (the replicated control plane:
+    finish times, budgets, bandit fleet), which keeps every computed
+    value — and hence the whole run — bit-identical to the unsharded
+    program (tested on a debug mesh).
 
     ``out`` is a dict of device arrays: per-event ``metric``,
     ``utility``, ``interval``, ``edge``, ``cost`` (the charge),
@@ -118,7 +134,9 @@ def make_async_program(model, edge_data, eval_set, cfg: OL4ELConfig, *,
     n_edges, k = cfg.n_edges, cfg.max_interval
     local_block, metric_fn, eval_step = _build_parts(
         model, edge_data, eval_set, cfg, lr=lr, batch=batch,
-        metric_fn=metric_fn, metric_name=metric_name)
+        metric_fn=metric_fn, metric_name=metric_name, mesh=mesh)
+    constrain_edge_stack, gather_edge_stack = _edge_stack_constraints(
+        mesh, n_edges)
 
     def program(init_params: Params, rng: jax.Array,
                 knobs: Dict[str, jax.Array]):
@@ -144,9 +162,9 @@ def make_async_program(model, edge_data, eval_set, cfg: OL4ELConfig, *,
         _, interval0, cost0, finish0 = jax.vmap(init_edge)(
             jnp.arange(n_edges))
 
-        edge_params = jax.tree.map(
+        edge_params = constrain_edge_stack(jax.tree.map(
             lambda x: jnp.broadcast_to(x, (n_edges,) + x.shape),
-            init_params)
+            init_params))
         if metric_fn is not None:
             prev_metric = metric_fn(init_params)
         else:
@@ -180,8 +198,12 @@ def make_async_program(model, edge_data, eval_set, cfg: OL4ELConfig, *,
             e = jnp.argmin(finish)
             wall = finish[e]
             interval, cost = infl_i[e], infl_c[e]
-            # edge e finishes `interval` local iterations and uploads
-            p_e = jax.tree.map(lambda a: a[e], edge_params)
+            # edge e finishes `interval` local iterations and uploads;
+            # its slice of the sharded stack is gathered replicated so
+            # the block/merge arithmetic runs identically on every
+            # device (the event path is control plane)
+            p_e = gather_edge_stack(jax.tree.map(lambda a: a[e],
+                                                 edge_params))
             p_new = local_block(p_e, e, interval,
                                 jax.random.fold_in(k_data, e))
             # the SAME realized-cost draw set the finish time and is
@@ -195,8 +217,10 @@ def make_async_program(model, edge_data, eval_set, cfg: OL4ELConfig, *,
                                          interval - 1, utility, cost)
             fleet = bandit_place(fleet, e, bstate_e)
             # edge fetches the fresh global model, schedules next block
-            edge_params = jax.tree.map(
-                lambda a, g: a.at[e].set(g), edge_params, new_global)
+            # (the scatter re-pins the stack's sharding so the
+            # while-loop carry layout is stable across iterations)
+            edge_params = constrain_edge_stack(jax.tree.map(
+                lambda a, g: a.at[e].set(g), edge_params, new_global))
             fetch_ver = fetch_ver.at[e].set(version)
             resid = budget - consumed[e]
             _, nxt_i, nxt_c, fin = schedule_block(

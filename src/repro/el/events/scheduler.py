@@ -8,6 +8,14 @@ reference loop calls them as tiny jitted kernels in the exact order the
 in fixed-cost mode every selection, realized cost, merge coefficient and
 budget charge agrees bit-for-bit.
 
+Everything here is control plane: in a mesh-sharded run
+(``make_async_program(mesh=...)``) these functions execute replicated on
+every device — selections, realized costs and merge coefficients are
+scalars derived from replicated bandit/budget state, so the shared
+``jax.random`` chain advances identically on every shard and the sharded
+program stays bit-identical to the unsharded one (only the per-edge
+datasets and the fetched-params stack shard).
+
 Key schedule (one ``jax.random`` chain per run, seeded like the sync
 program with ``jax.random.key(cfg.seed + 17)``):
 

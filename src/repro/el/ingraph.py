@@ -238,17 +238,75 @@ def make_local_block(model, xs: jax.Array, ys: jax.Array,
     return local_block
 
 
+def _shard_edge_data(mesh, n_edges: int, *arrays: jax.Array):
+    """Place the ``[E, ...]`` padded datasets on the mesh with their edge
+    dim over (``pod``, ``data``) — replicated when the fleet does not
+    tile the edge axes (the ``el_run_partition_specs`` policy)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.sharding import el_run_partition_specs
+    edge_spec, _ = el_run_partition_specs(
+        mesh.axis_names, dict(zip(mesh.axis_names,
+                                  np.shape(mesh.devices))), n_edges, ())
+    return tuple(
+        jax.device_put(a, NamedSharding(
+            mesh, P(*edge_spec, *([None] * (a.ndim - 1)))))
+        for a in arrays)
+
+
+def _edge_stack_constraints(mesh, n_edges: int
+                            ) -> Tuple[Callable, Callable]:
+    """Two trace-time pytree constraints for the ``[E, ...]`` per-edge
+    parameter stack: ``constrain`` pins it to the sharded
+    ``el_stacked_param_specs`` layout (edge dim over pod/data, tensor
+    dims by the per-arch resolver), ``gather`` pins it replicated — the
+    explicit all-gather in front of every cross-edge reduction that
+    keeps sharded runs bit-identical to unsharded ones.  Both are
+    identity when ``mesh`` is None.
+    """
+    if mesh is None:
+        ident = lambda tree: tree                              # noqa: E731
+        return ident, ident
+
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.sharding import el_stacked_param_specs, to_shardings
+
+    def constrain(tree):
+        specs = el_stacked_param_specs(mesh, n_edges, tree)
+        return lax.with_sharding_constraint(tree,
+                                            to_shardings(mesh, specs))
+
+    def gather(tree):
+        return lax.with_sharding_constraint(
+            tree, jax.tree.map(lambda _: NamedSharding(mesh, P()), tree))
+
+    return constrain, gather
+
+
 def make_sync_program(model, edge_data, eval_set, cfg: OL4ELConfig, *,
                       lr: float, batch: int,
                       n_samples: Optional[np.ndarray] = None,
                       metric_fn: Optional[Callable] = None,
                       metric_name: str = "accuracy",
-                      max_rounds: int = 512):
+                      max_rounds: int = 512, mesh=None):
     """Build ``program(init_params, rng, knobs) -> (params, out)`` — the
     whole budgeted sync run as one ``lax.while_loop``, with the
     control-plane knobs (see ``KNOB_NAMES`` / ``sync_knobs``) as traced
     inputs so one compiled program serves any (ucb_c, budget, cost) point
     — and so ``repro.el.sweep`` can vmap it over a whole ablation grid.
+
+    With ``mesh=`` the run's ``[n_edges, ...]`` data plane shards over
+    the mesh's (``pod``, ``data``) axes and model tensors over ``model``
+    (``repro.sharding.el_run_partition_specs`` placement): the per-edge
+    datasets and the broadcast per-edge parameter stack live sharded, so
+    the vmapped local blocks — the hot path — run edge-parallel.  The
+    control plane (bandit state, budgets, history) stays replicated, and
+    the per-edge params are explicitly all-gathered *before* the
+    aggregation einsum so every reduction executes replicated in the
+    same order as the unsharded program — that is what makes a sharded
+    run bit-identical to the mesh-less one (tested on a debug mesh)
+    rather than an ulp off from partial-sum reordering.
 
     ``out`` is a dict of device arrays: per-round ``metric``, ``utility``,
     ``interval``, ``consumed`` (cumulative total across edges), ``wall``
@@ -260,6 +318,10 @@ def make_sync_program(model, edge_data, eval_set, cfg: OL4ELConfig, *,
     n_edges, k = cfg.n_edges, cfg.max_interval
 
     xs, ys, n_per_edge = _pad_edge_data(edge_data)
+    constrain_edge_stack, gather_edge_stack = _edge_stack_constraints(
+        mesh, n_edges)
+    if mesh is not None:
+        xs, ys = _shard_edge_data(mesh, n_edges, xs, ys)
     w_agg = (np.ones(n_edges) if n_samples is None
              else np.asarray(n_samples, np.float64))
     w_agg = jnp.asarray(w_agg / w_agg.sum(), jnp.float32)
@@ -310,8 +372,16 @@ def make_sync_program(model, edge_data, eval_set, cfg: OL4ELConfig, *,
             keys = jax.vmap(lambda e: jax.random.fold_in(k_data, e))(edge_ids)
             bcast = jax.tree.map(
                 lambda x: jnp.broadcast_to(x, (n_edges,) + x.shape), params)
+            # data plane: the per-edge param stack (and with it the
+            # vmapped local blocks) shards over the mesh's edge axes ...
+            bcast = constrain_edge_stack(bcast)
             edge_params = jax.vmap(local_block, in_axes=(0, 0, None, 0))(
                 bcast, edge_ids, interval, keys)
+            # ... and is all-gathered BEFORE the aggregation so the
+            # einsum reduces replicated, in the unsharded program's
+            # exact accumulation order (bit-identity; a psum over the
+            # sharded edge dim would be an ulp off)
+            edge_params = gather_edge_stack(edge_params)
             new_params = weighted_mean(edge_params)
 
             # straggler semantics: every edge's clock advances by the

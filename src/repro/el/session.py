@@ -59,11 +59,20 @@ class ELSession:
         self._callbacks: List[RoundCallback] = []
         self.coord: Optional[CloudCoordinator] = None   # built per run
         self._coord_consumed = False
-        self._fastpath = None                           # compiled program
+        # compiled-program cache: key -> jitted program.  Keys carry the
+        # structural config AND the mesh/sharding + donation identity
+        # (two meshes compile different executables — sharing or
+        # thrashing a slot between them would silently retrace per call).
+        # Bounded FIFO: each entry's closure pins a device-resident copy
+        # of the padded per-edge datasets, so an unbounded cache would
+        # leak under ever-changing keys (e.g. fresh metric_fn lambdas).
+        self._programs: Dict[tuple, Any] = {}
+        self._max_cached_programs = 8
+        self._fastpath = None                           # last sync program
         self._fastpath_key = None
-        self._async_fastpath = None                     # compiled async
+        self._async_fastpath = None                     # last async program
         self._async_key = None
-        self._sweep_program = None                      # compiled sweep
+        self._sweep_program = None                      # last sweep program
         self._sweep_key = None
 
     @property
@@ -113,6 +122,13 @@ class ELSession:
 
     def _initial_params(self) -> Params:
         if self._init_params is not None:
+            if any(getattr(leaf, "is_deleted", lambda: False)()
+                   for leaf in jax.tree.leaves(self._init_params)):
+                raise RuntimeError(
+                    "the session's init_params were donated to a previous "
+                    "donate=True run (their buffers are invalidated); pass "
+                    "fresh init_params via .with_executor() before running "
+                    "again")
             return self._init_params
         ex = self._require_executor()
         if hasattr(ex, "init_params"):
@@ -358,8 +374,38 @@ class ELSession:
         check_ingraph_support(cfg, self._require_executor(), caller=caller)
         return cfg
 
+    def _cache_program(self, key: tuple, program: Any) -> Any:
+        """Insert into the bounded FIFO program cache (oldest evicted;
+        the last-used aliases keep an evicted program alive until the
+        next run replaces them)."""
+        self._programs[key] = program
+        while len(self._programs) > self._max_cached_programs:
+            self._programs.pop(next(iter(self._programs)))
+        return program
+
+    def _jit_ingraph(self, core, knob_names, mesh, donate, params):
+        """jit one of the compiled EL programs with the run's placement
+        and donation: with ``mesh`` the inputs land per
+        ``repro.sharding.el_run_in_shardings`` (params by the per-arch
+        resolver, control plane replicated); with ``donate`` the params
+        argument's buffers are donated — XLA aliases them into the
+        output params, so an aggregation updates the fleet's parameters
+        in place instead of copying them every round.  ``params`` is the
+        run's already-materialized initial tree (shapes only are read)."""
+        kw: Dict[str, Any] = {}
+        if donate:
+            kw["donate_argnums"] = (0,)
+        if mesh is not None:
+            from repro.sharding import el_run_in_shardings
+            ex = self._require_executor()
+            kw["in_shardings"] = el_run_in_shardings(
+                mesh, getattr(ex.model, "cfg", None),
+                jax.eval_shape(lambda p: p, params), knob_names)
+        return jax.jit(core, **kw)
+
     def run_sync_ingraph(self, max_rounds: int = 512,
-                         metric_fn: Optional[Callable] = None) -> ELReport:
+                         metric_fn: Optional[Callable] = None, *,
+                         mesh=None, donate: bool = False) -> ELReport:
         """Run the whole budgeted sync loop as ONE compiled XLA program.
 
         Numerically equivalent (up to RNG streams) to ``run_sync`` under
@@ -380,23 +426,35 @@ class ELSession:
         Unsupported (policy, cost_model, executor) combinations raise an
         informative ``ValueError``/``TypeError`` naming the combination.
         Callbacks still fire, streamed after the device loop finishes.
+
+        ``mesh=`` runs the program sharded: the ``[n_edges, ...]`` data
+        plane over the mesh's (``pod``, ``data``) axes, model tensors
+        over ``model``, control plane replicated — bit-identical to the
+        mesh-less program (see ``make_sync_program``).  ``donate=True``
+        donates the initial params' buffers to the program (in-place
+        fleet update); the caller must not reuse the passed-in params
+        afterwards — the session detects a reuse attempt and raises.
         """
-        from repro.el.ingraph import make_sync_program, sync_knobs
+        from repro.el.ingraph import (KNOB_NAMES, make_sync_program,
+                                      sync_knobs)
         ex = self._require_executor()
         cfg = self._ingraph_cfg("run_sync_ingraph", mode="sync")
         t0 = time.perf_counter()
-        key = (ex, self._structural_cfg(cfg), max_rounds, metric_fn,
-               self.metric_name,
-               None if self._n_samples is None else tuple(self._n_samples))
-        if self._fastpath is None or self._fastpath_key != key:
-            self._fastpath = jax.jit(make_sync_program(
+        key = ("sync", ex, self._structural_cfg(cfg), max_rounds,
+               metric_fn, self.metric_name,
+               None if self._n_samples is None else tuple(self._n_samples),
+               mesh, donate)
+        params = self._initial_params()
+        program = self._programs.get(key)
+        if program is None:
+            program = self._jit_ingraph(make_sync_program(
                 ex.model, ex.edge_data, ex.eval_set, cfg,
                 lr=ex.lr, batch=ex.batch, n_samples=self._n_samples,
                 metric_fn=metric_fn, metric_name=self.metric_name,
-                max_rounds=max_rounds))
-            self._fastpath_key = key
-        program = self._fastpath
-        params = self._initial_params()
+                max_rounds=max_rounds, mesh=mesh),
+                KNOB_NAMES, mesh, donate, params)
+            self._cache_program(key, program)
+        self._fastpath, self._fastpath_key = program, key
         params, out = jax.block_until_ready(
             program(params, jax.random.key(cfg.seed + 17),
                     sync_knobs(cfg)))
@@ -424,7 +482,8 @@ class ELSession:
         )
 
     def run_async_ingraph(self, max_events: Optional[int] = None,
-                          metric_fn: Optional[Callable] = None) -> ELReport:
+                          metric_fn: Optional[Callable] = None, *,
+                          mesh=None, donate: bool = False) -> ELReport:
         """Run the whole budgeted async event loop as ONE compiled XLA
         program (``repro.el.events``): no host priority queue — finish
         times live in an ``[n_edges]`` array and each ``lax.while_loop``
@@ -437,8 +496,15 @@ class ELSession:
         terminate on budget exhaustion, never silent truncation.  In
         fixed-cost mode the result is bit-identical to the host event
         queue on the same streams, ``run_async(rng_streams="jax")``.
+
+        ``mesh=`` shards the per-edge datasets and the ``[n_edges, ...]``
+        fetched-params stack over the mesh (bit-identical to the
+        mesh-less program — see ``make_async_program``); ``donate=True``
+        donates the initial params' buffers (caller must not reuse them;
+        the session detects reuse and raises).
         """
-        from repro.el.events import (async_knobs, default_event_horizon,
+        from repro.el.events import (ASYNC_KNOB_NAMES, async_knobs,
+                                     default_event_horizon,
                                      make_async_program)
         ex = self._require_executor()
         cfg = self._ingraph_cfg("run_async_ingraph", mode="async")
@@ -453,16 +519,18 @@ class ELSession:
                           .bit_length())
         else:
             horizon = int(max_events)
-        key = (ex, self._structural_cfg(cfg), horizon, metric_fn,
-               self.metric_name)
-        if self._async_fastpath is None or self._async_key != key:
-            self._async_fastpath = jax.jit(make_async_program(
+        key = ("async", ex, self._structural_cfg(cfg), horizon, metric_fn,
+               self.metric_name, mesh, donate)
+        params = self._initial_params()
+        program = self._programs.get(key)
+        if program is None:
+            program = self._jit_ingraph(make_async_program(
                 ex.model, ex.edge_data, ex.eval_set, cfg,
                 lr=ex.lr, batch=ex.batch, metric_fn=metric_fn,
-                metric_name=self.metric_name, max_events=horizon))
-            self._async_key = key
-        program = self._async_fastpath
-        params = self._initial_params()
+                metric_name=self.metric_name, max_events=horizon,
+                mesh=mesh), ASYNC_KNOB_NAMES, mesh, donate, params)
+            self._cache_program(key, program)
+        self._async_fastpath, self._async_key = program, key
         params, out = jax.block_until_ready(
             program(params, jax.random.key(cfg.seed + 17),
                     async_knobs(cfg)))
@@ -521,18 +589,20 @@ class ELSession:
         axes = spec.axes(cfg)
         spec_shape = (tuple(len(v) for v in axes.values()),
                       spec.max_rounds)
-        key = (ex, self._structural_cfg(cfg), spec_shape, metric_fn,
-               self.metric_name, mesh,
+        key = ("sweep", ex, self._structural_cfg(cfg), spec_shape,
+               metric_fn, self.metric_name, mesh,
                None if self._n_samples is None else tuple(self._n_samples))
-        if self._sweep_program is None or self._sweep_key != key:
-            self._sweep_program = make_sweep_program(
+        program = self._programs.get(key)
+        if program is None:
+            program = make_sweep_program(
                 ex.model, ex.edge_data, ex.eval_set, cfg, spec,
                 lr=ex.lr, batch=ex.batch, n_samples=self._n_samples,
                 metric_fn=metric_fn, metric_name=self.metric_name,
                 mesh=mesh)
-            self._sweep_key = key
+            self._cache_program(key, program)
+        self._sweep_program, self._sweep_key = program, key
         params, out = run_sweep_program(
-            self._sweep_program, self._initial_params(),
+            program, self._initial_params(),
             spec.cell_cfgs(cfg))
         report = SweepReport(
             spec=spec, axes=spec.axes(cfg), cells=spec.cells(cfg),

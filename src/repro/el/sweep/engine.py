@@ -31,13 +31,13 @@ from repro.el.events.knobs import ASYNC_KNOB_NAMES, async_knobs
 from repro.el.events.program import make_async_program
 from repro.el.ingraph import KNOB_NAMES, make_sync_program, sync_knobs
 from repro.el.sweep.spec import SweepSpec
+# the knob-layout classification is shared with the single-run placement
+# (repro.sharding.el_run_partition_specs) — one source of truth for which
+# control-plane inputs carry a trailing per-edge dim
+from repro.sharding import (EL_EDGE_KNOBS as _EDGE_KNOBS,
+                            EL_SCALAR_KNOBS as _SCALAR_KNOBS)
 
 Params = Any
-
-#: Knobs with a trailing per-edge dim [n_cells, E] (shardable over model).
-_EDGE_KNOBS = ("comp", "comm", "min_edge_cost")
-#: Scalar knobs [n_cells].
-_SCALAR_KNOBS = ("ucb_c", "budget", "cost_noise", "async_alpha")
 
 
 def knob_names(mode: str) -> Tuple[str, ...]:

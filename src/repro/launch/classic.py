@@ -1,0 +1,59 @@
+"""The shared classic-workload (SVM / K-means) EL data plane.
+
+One source of truth for the per-arch fixture every classic launcher
+builds — ``repro.launch.train`` (compiled single runs),
+``repro.launch.sweep`` (compiled grids) and ``scripts/bench_el.py``
+(the benchmark artifact) previously kept three drifting copies of the
+dataset builder plus the metric/lr/batch/utility constants.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+from repro.config import get_config
+from repro.data import (make_traffic_dataset, make_wafer_dataset,
+                        partition_edges)
+from repro.federated import ClassicExecutor
+from repro.models import build_model
+
+#: Per-arch data-plane recipe: (metric, lr, batch, utility).  The
+#: utility matches the paper's pairing — eval-gain for the SVM testbed,
+#: the model-specific param-delta for K-means (no jittable F1).
+CLASSIC_RECIPES = {
+    "svm-wafer": ("accuracy", 0.05, 64, "eval_gain"),
+    "kmeans-traffic": ("f1", 1.0, 128, "param_delta"),
+}
+
+
+def classic_fixture(arch: str, *, samples: int, n_edges: int,
+                    alpha: float = 100.0, data_seed: int = 0,
+                    kmeans_impl: str = "jnp",
+                    batch: Optional[int] = None) -> Dict[str, Any]:
+    """Build the classic EL data plane: dataset → Dirichlet edge split →
+    ``ClassicExecutor``, plus the arch's recipe constants.
+
+    Returns a dict with ``exp`` (the ExperimentConfig), ``model``,
+    ``executor``, ``metric``, ``lr``, ``utility``, ``init_params`` (from
+    ``model.init(key(data_seed))``) and ``n_samples`` (per-edge sizes,
+    the aggregation weights).  ``batch`` overrides the recipe's
+    minibatch size (benchmarks use a larger one).
+    """
+    import jax
+    metric, lr, recipe_batch, utility = CLASSIC_RECIPES[arch]
+    exp = get_config(arch)
+    if arch == "kmeans-traffic":
+        train, test = make_traffic_dataset(n=samples, seed=data_seed)
+        model = build_model(exp.model, impl=kmeans_impl)
+    else:
+        train, test = make_wafer_dataset(n=samples, seed=data_seed)
+        model = build_model(exp.model)
+    edges = partition_edges(train, n_edges, alpha=alpha, seed=data_seed)
+    ex = ClassicExecutor(model, edges, test,
+                         batch=batch or recipe_batch, lr=lr)
+    return {
+        "exp": exp, "model": model, "executor": ex, "metric": metric,
+        "lr": lr, "utility": utility,
+        "init_params": model.init(jax.random.key(data_seed)),
+        "n_samples": [len(e["y"]) for e in edges],
+    }

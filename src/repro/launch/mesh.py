@@ -29,3 +29,12 @@ def make_debug_mesh(n_data: int = 2, n_model: int = 2):
     """Small mesh for CPU multi-device tests (subprocesses set
     ``--xla_force_host_platform_device_count`` accordingly)."""
     return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def make_debug_mesh_for(n_devices: int):
+    """The debug mesh over a forced host-device fleet: shape
+    ``(n_devices//2, 2)``, so 4 devices give a 2x2 (data, model) mesh
+    and 8 a 4-wide ``data`` axis — the one sizing rule every launcher
+    (``repro.launch.train``/``sweep``, ``scripts/bench_el.py``) shares."""
+    d = max(n_devices // 2, 1)
+    return make_debug_mesh(d, n_devices // d)

@@ -20,65 +20,35 @@ sweep (``data``) axis.
 
 from __future__ import annotations
 
-import os
-import sys
+from repro.launch.hostdev import force_host_devices
 
-
-def _force_host_devices() -> None:
-    """Must run before jax initializes: emulate a small device fleet when
-    a mesh is requested (mirrors repro.launch.dryrun)."""
-    mode = None
-    for i, arg in enumerate(sys.argv):
-        if arg == "--mesh" and i + 1 < len(sys.argv):
-            mode = sys.argv[i + 1]
-        elif arg.startswith("--mesh="):
-            mode = arg.split("=", 1)[1]
-    if mode not in (None, "none"):
-        n = os.environ.get("REPRO_SWEEP_DEVICES", "4")
-        os.environ["XLA_FLAGS"] = (
-            os.environ.get("XLA_FLAGS", "")
-            + " --xla_force_host_platform_device_count=" + n)
-
-
-_force_host_devices()
+force_host_devices()     # must precede the jax import (emulated fleet)
 
 import argparse
 import dataclasses
 
 import jax
 
-from repro.config import CLASSIC_IDS, get_config
-from repro.data import (make_traffic_dataset, make_wafer_dataset,
-                        partition_edges)
+from repro.config import CLASSIC_IDS
 from repro.el import ELSession
 from repro.el.sweep import spec_from_sequences
-from repro.federated import ClassicExecutor
-from repro.launch.mesh import make_debug_mesh
-from repro.models import build_model
+from repro.launch.classic import classic_fixture
+from repro.launch.mesh import make_debug_mesh_for
 
 
 def build_session(args) -> ELSession:
-    if args.arch == "svm-wafer":
-        train, test = make_wafer_dataset(n=args.samples, seed=args.data_seed)
-        metric, lr, batch, utility = "accuracy", 0.05, 64, "eval_gain"
-    else:
-        train, test = make_traffic_dataset(n=args.samples,
-                                           seed=args.data_seed)
-        metric, lr, batch, utility = "f1", 1.0, 128, "param_delta"
-    exp = get_config(args.arch)
-    model = build_model(exp.model)
+    fx = classic_fixture(args.arch, samples=args.samples,
+                         n_edges=args.edges, alpha=args.alpha,
+                         data_seed=args.data_seed,
+                         kmeans_impl=args.kmeans_impl)
     ol = dataclasses.replace(
-        exp.ol4el, mode=args.el_mode, policy="ol4el", n_edges=args.edges,
-        utility=utility, cost_model=args.cost_model,
-        max_interval=args.max_interval)
-    edges = partition_edges(train, args.edges, alpha=args.alpha,
-                            seed=args.data_seed)
-    ex = ClassicExecutor(model, edges, test, batch=batch, lr=lr)
-    return (ELSession(ol, metric_name=metric, lr=lr)
-            .with_executor(ex,
-                           init_params=model.init(
-                               jax.random.key(args.data_seed)),
-                           n_samples=[len(e["y"]) for e in edges]))
+        fx["exp"].ol4el, mode=args.el_mode, policy="ol4el",
+        n_edges=args.edges, utility=fx["utility"],
+        cost_model=args.cost_model, max_interval=args.max_interval)
+    return (ELSession(ol, metric_name=fx["metric"], lr=fx["lr"])
+            .with_executor(fx["executor"],
+                           init_params=fx["init_params"],
+                           n_samples=fx["n_samples"]))
 
 
 def main() -> None:
@@ -110,6 +80,12 @@ def main() -> None:
     ap.add_argument("--cost-model", default="fixed",
                     choices=["fixed", "variable"])
     ap.add_argument("--max-interval", type=int, default=10)
+    ap.add_argument("--kmeans-impl", default="jnp",
+                    choices=["jnp", "pallas"],
+                    help="K-means E-step engine inside the compiled "
+                         "local blocks (pallas: the "
+                         "repro.kernels.kmeans_assign kernel; interpret "
+                         "mode off-TPU)")
     ap.add_argument("--data-seed", type=int, default=0)
     ap.add_argument("--mesh", default="none", choices=["none", "debug"],
                     help="'debug': shard the sweep over a 2x2 host-device "
@@ -125,9 +101,7 @@ def main() -> None:
     if args.mesh == "debug":
         # mesh shape follows the forced device count: (count//2, 2) —
         # REPRO_SWEEP_DEVICES=8 gives a (4, 2) mesh, 4 (default) a (2, 2)
-        n_dev = jax.device_count()
-        d = max(n_dev // 2, 1)
-        mesh = make_debug_mesh(d, n_dev // d)
+        mesh = make_debug_mesh_for(jax.device_count())
     session = build_session(args)
     print(f"sweep {args.arch}: {spec.describe(session.cfg)}"
           + (f" on mesh {tuple(mesh.shape.items())}" if mesh else ""),

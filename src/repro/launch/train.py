@@ -7,12 +7,26 @@ Two execution modes:
     intervals chosen by the budget-limited MAB, local-SGD blocks +
     aggregation, budgets charged per the heterogeneous cost model.
 
-On a real TPU cluster the same code runs under the production mesh (see
-``repro.launch.mesh``); on this CPU host it runs on the default device
-with the smoke-scale configs.
+Classic archs (``svm-wafer`` / ``kmeans-traffic``) under ``--mode
+ol4el`` run the COMPILED single-run programs (``run_sync_ingraph`` /
+``run_async_ingraph``).  ``--mesh debug|prod`` shards that single run's
+``[n_edges, ...]`` data plane over a mesh (``debug``: a 2x2 forced
+host-device mesh; ``prod``: ``repro.launch.mesh.make_production_mesh``,
+which ``REPRO_DEBUG_MESH=d`` shrinks to ``d x d`` for CI) — bit-identical
+to the unsharded run.  ``--donate`` donates the initial params' buffers
+so aggregations update the fleet parameters in place.
+
+On a real TPU cluster the same code runs under the production mesh; on
+this CPU host ``--mesh`` emulates a small fleet via forced host devices
+(``REPRO_SWEEP_DEVICES``, default 4) and LM archs run on the default
+device with the smoke-scale configs.
 """
 
 from __future__ import annotations
+
+from repro.launch.hostdev import force_host_devices
+
+force_host_devices()     # must precede the jax import (emulated fleet)
 
 import argparse
 import dataclasses
@@ -45,6 +59,81 @@ def train_standard(exp, args) -> None:
     if args.ckpt:
         checkpoint.save(args.ckpt, state, step=n_steps)
         print(f"saved checkpoint to {args.ckpt}")
+
+
+def _build_mesh(args):
+    import os
+    if args.mesh == "none":
+        return None
+    from repro.launch.mesh import make_debug_mesh_for, make_production_mesh
+    if args.mesh == "debug":
+        n_dev = jax.device_count()
+        if n_dev == 1:
+            # the forced-host-device preamble scans sys.argv, so a
+            # programmatic main(argv=[... , "--mesh", "debug"]) call
+            # misses it — run unsharded loudly rather than silently
+            print("WARNING: --mesh debug but only 1 device is visible "
+                  "(forced host devices are set from sys.argv before "
+                  "jax init — invoke via the CLI, or set XLA_FLAGS="
+                  "--xla_force_host_platform_device_count=N yourself); "
+                  "running on a 1x1 mesh", flush=True)
+        return make_debug_mesh_for(n_dev)
+    if not os.environ.get("REPRO_DEBUG_MESH") and jax.device_count() < 256:
+        raise SystemExit(
+            "--mesh prod needs the production fleet (a 16x16 = 256-chip "
+            "pod); on a CPU host set REPRO_DEBUG_MESH=2 (with "
+            "REPRO_SWEEP_DEVICES=4) for the debug-scale 2x2 production "
+            "mesh, or use --mesh debug")
+    return make_production_mesh()
+
+
+def train_classic_ol4el(exp, args) -> None:
+    """Classic archs through the compiled single-run EL programs —
+    optionally mesh-sharded (``--mesh``) and buffer-donating
+    (``--donate``)."""
+    from repro.launch.classic import classic_fixture
+
+    fx = classic_fixture(args.arch, samples=args.samples,
+                         n_edges=args.edges, alpha=args.alpha,
+                         kmeans_impl=args.kmeans_impl)
+    metric = fx["metric"]
+    ol = dataclasses.replace(fx["exp"].ol4el, n_edges=args.edges,
+                             heterogeneity=args.heterogeneity,
+                             budget=args.budget, mode=args.el_mode,
+                             async_alpha=args.async_alpha, policy="ol4el",
+                             utility=fx["utility"])
+    mesh = _build_mesh(args)
+    session = (ELSession(ol, metric_name=metric, lr=fx["lr"])
+               .with_executor(fx["executor"],
+                              init_params=fx["init_params"],
+                              n_samples=fx["n_samples"]))
+    desc = (f"compiled {ol.mode} run, {args.edges} edges"
+            + (f", mesh {tuple(mesh.shape.items())}" if mesh else "")
+            + (", donated params" if args.donate else ""))
+    print(f"ol4el {args.arch}: {desc}", flush=True)
+    if ol.mode == "sync":
+        report = session.run_sync_ingraph(
+            max_rounds=args.steps if args.steps is not None else 256,
+            mesh=mesh, donate=args.donate)
+    else:
+        # same announced-cap contract as train_ol4el: an explicit
+        # --steps bounds the run at steps*edges events, never silently
+        if args.steps is not None:
+            print(f"async: --steps caps the run at "
+                  f"{args.steps * args.edges} events (omit --steps to "
+                  "run to budget exhaustion)", flush=True)
+        report = session.run_async_ingraph(
+            max_events=None if args.steps is None
+            else args.steps * args.edges,
+            mesh=mesh, donate=args.donate)
+    print(f"done: {report.n_aggregations} aggregations, "
+          f"final {metric} {report.final_metric:.4f}, "
+          f"consumed {report.total_consumed:.0f} "
+          f"({report.terminated_reason}); arm pulls {report.arm_pulls}")
+    if args.ckpt:
+        checkpoint.save(args.ckpt, report.final_params,
+                        step=report.n_aggregations)
+        print(f"saved EL checkpoint to {args.ckpt}")
 
 
 def train_ol4el(exp, args) -> None:
@@ -114,11 +203,39 @@ def main(argv=None) -> None:
     ap.add_argument("--budget", type=float, default=1e5)
     ap.add_argument("--log-every", type=int, default=5)
     ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--mesh", default="none",
+                    choices=["none", "debug", "prod"],
+                    help="shard a classic-arch single EL run: 'debug' "
+                         "builds a mesh over the forced host devices "
+                         "(REPRO_SWEEP_DEVICES, default 4); 'prod' uses "
+                         "repro.launch.mesh.make_production_mesh "
+                         "(REPRO_DEBUG_MESH=d shrinks it to d x d)")
+    ap.add_argument("--donate", action="store_true",
+                    help="donate the initial params' buffers to the "
+                         "compiled run (in-place fleet update; classic "
+                         "ol4el only)")
+    ap.add_argument("--samples", type=int, default=4000,
+                    help="classic-arch dataset size (ol4el mode)")
+    ap.add_argument("--alpha", type=float, default=100.0,
+                    help="Dirichlet concentration of the classic edge "
+                         "data split (matches repro.launch.sweep)")
+    ap.add_argument("--kmeans-impl", default="jnp",
+                    choices=["jnp", "pallas"],
+                    help="K-means E-step engine for the local blocks "
+                         "(pallas: the repro.kernels.kmeans_assign "
+                         "kernel; interpret mode off-TPU)")
     args = ap.parse_args(argv)
 
     exp = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    classic_el = args.mode == "ol4el" and exp.model.family == "classic"
+    if not classic_el and (args.mesh != "none" or args.donate):
+        ap.error("--mesh/--donate drive the compiled single-run programs, "
+                 "which need a classic arch under --mode ol4el (LM archs "
+                 "and --mode standard run the host loops)")
     if args.mode == "standard":
         train_standard(exp, args)
+    elif classic_el:
+        train_classic_ol4el(exp, args)
     else:
         train_ol4el(exp, args)
 

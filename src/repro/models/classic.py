@@ -80,20 +80,38 @@ class LinearSVM:
 
 
 class KMeans:
+    """Minibatch-Lloyd K-means.
+
+    ``impl`` selects the E-step engine, following the ``models/layers``
+    convention: ``"jnp"`` (the pure-XLA distance expansion) or
+    ``"pallas"`` — the ``repro.kernels.kmeans_assign`` Pallas kernel
+    (native on TPU, interpret mode elsewhere; oracle-tested against the
+    jnp path in tests/test_kernels.py).  The kernel is vmap-safe, so the
+    compiled EL programs' per-edge local blocks route through it too.
+    ``use_kernel=True`` is the deprecated spelling of ``impl="pallas"``.
+    """
+
     def __init__(self, cfg: ModelConfig, blend: float = 0.5,
-                 use_kernel: bool = False):
+                 use_kernel: bool = False, impl: str = "jnp"):
+        if impl not in ("jnp", "pallas"):
+            raise ValueError(f"KMeans impl={impl!r}; expected 'jnp' or "
+                             "'pallas'")
         self.cfg = cfg
         self.d = cfg.d_model
         self.k = cfg.vocab_size
         self.blend = blend           # minibatch-Lloyd blending rate
-        self.use_kernel = use_kernel
+        self.impl = "pallas" if use_kernel else impl
+
+    @property
+    def use_kernel(self) -> bool:   # pre-impl= spelling, kept for callers
+        return self.impl == "pallas"
 
     def init(self, rng: jax.Array) -> Params:
         return {"centers": jax.random.normal(rng, (self.k, self.d),
                                              jnp.float32)}
 
     def assign(self, params: Params, x: jax.Array) -> jax.Array:
-        if self.use_kernel:
+        if self.impl == "pallas":
             from repro.kernels.kmeans_assign import ops as ka_ops
             return ka_ops.assign(x, params["centers"])
         d2 = (jnp.sum(x ** 2, -1, keepdims=True)

@@ -23,12 +23,28 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.config import ModelConfig
 
 
+#: Mesh axes the per-edge (batch/fleet) dims spread over.
+_EDGE_AXIS_NAMES = ("pod", "data")
+
+
 def _axis_size(mesh: Mesh, name: str) -> int:
     return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
 
 
 def edge_axes(mesh: Mesh) -> Tuple[str, ...]:
-    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return tuple(a for a in _EDGE_AXIS_NAMES if a in mesh.axis_names)
+
+
+def _leaf_path_keys(path) -> list:
+    return [getattr(k, "key", getattr(k, "idx", None)) for k in path]
+
+
+def _leaf_param_name(keys) -> str:
+    """The rule-lookup name of a param-tree leaf: the last string key on
+    its path, ignoring ``sub*`` wrapper levels — the one resolver every
+    spec builder in this module shares."""
+    return next((k for k in reversed(keys) if isinstance(k, str)
+                 and not k.startswith("sub")), "")
 
 
 def _div(n: int, m: int) -> bool:
@@ -112,10 +128,8 @@ def param_specs(cfg: ModelConfig, mesh: Mesh, params_shape: Any,
         return spec
 
     def leaf_spec(path, leaf) -> P:
-        keys = [getattr(k, "key", getattr(k, "idx", None))
-                for k in path]
-        name = next((k for k in reversed(keys) if isinstance(k, str)
-                     and not k.startswith("sub")), "")
+        keys = _leaf_path_keys(path)
+        name = _leaf_param_name(keys)
         # scanned models stack group params on a leading n_groups dim;
         # unrolled models keep a list of per-group dicts (no extra dim)
         stacked = ("groups" in keys) and cfg.scan_layers
@@ -172,9 +186,8 @@ def cache_specs(cfg: ModelConfig, mesh: Mesh, cache_shape: Any,
     shard_batch = _div(batch, n_edge)
 
     def leaf_spec(path, leaf) -> P:
-        keys = [getattr(k, "key", getattr(k, "idx", None)) for k in path]
-        name = next((k for k in reversed(keys) if isinstance(k, str)
-                     and not k.startswith("sub")), "")
+        keys = _leaf_path_keys(path)
+        name = _leaf_param_name(keys)
         stacked = ("groups" in keys) and cfg.scan_layers
         shape = leaf.shape[1:] if stacked else leaf.shape
         nd = len(shape)
@@ -211,3 +224,102 @@ def cache_specs(cfg: ModelConfig, mesh: Mesh, cache_shape: Any,
 def to_shardings(mesh: Mesh, specs: Any) -> Any:
     return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
                         is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# EL data-plane placement (shared by the single-run compiled programs in
+# repro.el.ingraph / repro.el.events and the sweep engine repro.el.sweep)
+# ---------------------------------------------------------------------------
+
+#: Control-plane knobs with a trailing per-edge dim ``[..., E]`` — the
+#: sweep engine stacks these as ``[n_cells, E]``; a single run passes
+#: them as ``[E]`` (replicated: they are bytes, and the single-run
+#: control plane — bandit stats, budgets, finish times — replicates).
+EL_EDGE_KNOBS = ("comp", "comm", "min_edge_cost")
+#: Scalar control-plane knobs (``[n_cells]`` in a sweep, 0-d in a run).
+EL_SCALAR_KNOBS = ("ucb_c", "budget", "cost_noise", "async_alpha")
+
+
+def el_edge_dim_axes(axis_names: Sequence[str],
+                     axis_sizes: Dict[str, int],
+                     n_edges: int) -> Optional[Tuple[str, ...]]:
+    """Mesh axes the ``[n_edges, ...]`` data-plane dim shards over.
+
+    Pure placement policy (no devices), resolver-style like
+    ``param_specs``: the edge dim goes over the (``pod``, ``data``) axes
+    when it tiles them, and *replicates* otherwise (a 3-edge fleet on a
+    2-wide data axis cannot split evenly — the run still works, just
+    without edge parallelism).  Returns the axis tuple or ``None``.
+    """
+    ea = tuple(a for a in _EDGE_AXIS_NAMES if a in axis_names)
+    n_shards = _prod(axis_sizes.get(a, 1) for a in ea)
+    if ea and n_shards > 1 and n_edges % n_shards == 0:
+        return ea
+    return None
+
+
+def el_run_partition_specs(axis_names: Sequence[str],
+                           axis_sizes: Dict[str, int],
+                           n_edges: int,
+                           knob_names: Sequence[str]
+                           ) -> Tuple[P, Dict[str, P]]:
+    """PartitionSpecs for one EL run's (edge data, knobs).
+
+    The per-edge datasets ``xs [E, N, d]`` / ``ys [E, N]`` shard their
+    edge dim over (``pod``, ``data``) via :func:`el_edge_dim_axes`; the
+    control-plane knobs all replicate — bandit statistics, budgets and
+    finish times are the replicated control plane, only the data plane
+    (per-edge params/data) spreads over the mesh.  Pure (no devices) so
+    the placement policy is unit-testable, mirroring
+    ``repro.el.sweep.sweep_partition_specs``.
+    """
+    ea = el_edge_dim_axes(axis_names, axis_sizes, n_edges)
+    edge_spec = P(ea) if ea else P(None)
+    knob_specs = {name: P() for name in knob_names}
+    return edge_spec, knob_specs
+
+
+def el_stacked_param_specs(mesh: Mesh, n_edges: int,
+                           stacked_params: Any) -> Any:
+    """PartitionSpecs for an ``[n_edges, ...]``-stacked param tree.
+
+    The ``el_state_specs`` layout (``repro.federated.local_sgd``) for
+    the in-graph programs: leading edge dim over (``pod``, ``data``)
+    when it tiles, each parameter's own dims by the per-arch name+shape
+    resolver (large model tensors over ``model``, classic/unknown names
+    replicate).  ``stacked_params`` may hold tracers — only ``.shape``
+    is read, so this works at trace time inside the compiled programs.
+
+    Scanned-LM group stacking (``param_specs``' ``groups`` rule) is NOT
+    handled here: the compiled EL programs only admit flat
+    ``InGraphExecutor`` param trees today (``check_ingraph_support``);
+    staging an LM executor in-graph must teach this function the extra
+    ``n_groups`` dim first.
+    """
+    ms = _axis_size(mesh, "model")
+    ea = el_edge_dim_axes(mesh.axis_names, dict(
+        zip(mesh.axis_names, mesh.devices.shape)), n_edges)
+
+    def leaf_spec(path, leaf) -> P:
+        name = _leaf_param_name(_leaf_path_keys(path))
+        base = _param_spec(name, leaf.shape[1:], ms)
+        return P(ea, *base)
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, stacked_params)
+
+
+def el_run_in_shardings(mesh: Mesh, model_cfg: Optional[ModelConfig],
+                        params_shape: Any,
+                        knob_names: Sequence[str]) -> Tuple[Any, ...]:
+    """NamedShardings for the compiled EL programs' call signature
+    ``(init_params, rng, knobs)``: params by the per-arch resolver
+    (classic models replicate — their tensors are tiny), the rng key and
+    every knob replicated (the control plane)."""
+    if model_cfg is not None:
+        p_sh = to_shardings(mesh, param_specs(model_cfg, mesh,
+                                              params_shape))
+    else:
+        p_sh = jax.tree.map(lambda _: NamedSharding(mesh, P()),
+                            params_shape)
+    rep = NamedSharding(mesh, P())
+    return p_sh, rep, {k: rep for k in knob_names}
