@@ -24,14 +24,17 @@ def _time(fn, n=50, warmup=3) -> float:
     return (time.perf_counter() - t0) * 1e6 / n
 
 
-def run(quiet: bool = False, sharded: bool = False) -> List[Dict]:
+def run(quiet: bool = False, sharded: bool = False,
+        fleet: bool = False) -> List[Dict]:
     """``sharded=True`` (CLI: ``--sharded``) adds the mesh-sharded /
     donated single-run rows — they spawn a multi-device
     ``scripts/bench_el.py`` subprocess (minutes, needs forced host
     devices), so they are opt-in and the default run keeps the quick
     in-process contract existing callers (``benchmarks.run``) rely on;
     the committed ``BENCH_el.json`` is the canonical record of those
-    tiers."""
+    tiers.  ``fleet=True`` (CLI: ``--fleet``) likewise adds the
+    multi-tenant serving row via a ``scripts/bench_fleet.py``
+    subprocess; ``BENCH_fleet.json`` is its canonical record."""
     rows = []
 
     # bandit decision latency (cloud control plane)
@@ -186,6 +189,13 @@ def run(quiet: bool = False, sharded: bool = False) -> List[Dict]:
     if sharded:
         rows.extend(_sharded_rows())
 
+    # multi-tenant EL serving: a FleetServer cohort (slot waves with
+    # mid-flight refill) vs sequential per-tenant sessions
+    # (scripts/bench_fleet.py in a subprocess — keeps this process's
+    # jax device config untouched)
+    if fleet:
+        rows.extend(_fleet_rows())
+
     if not quiet:
         for row in rows:
             print(f"micro {row['name']:40s} {row['us_per_call']:12.1f} us  "
@@ -241,6 +251,40 @@ def _sharded_rows() -> List[Dict]:
     return rows
 
 
+def _fleet_rows() -> List[Dict]:
+    rows = []
+    import json as _json
+    import os as _os
+    import subprocess as _sp
+    import sys as _sys
+    import tempfile as _tempfile
+    repo = _os.path.dirname(_os.path.dirname(_os.path.abspath(__file__)))
+    with _tempfile.TemporaryDirectory() as td:
+        bench_out = _os.path.join(td, "bench_fleet.json")
+        r = _sp.run(
+            [_sys.executable,
+             _os.path.join(repo, "scripts", "bench_fleet.py"),
+             "--tenants", "64", "--repeats", "1", "--out", bench_out],
+            capture_output=True, text=True, timeout=1800,
+            env=dict(_os.environ,
+                     PYTHONPATH=_os.path.join(repo, "src")))
+        if r.returncode != 0:
+            raise RuntimeError(f"bench_fleet subprocess failed:\n{r.stdout}"
+                               f"\n{r.stderr}")
+        sub = _json.load(open(bench_out))["rows"]
+    flt = sub["fleet_64"]
+    rows.append(dict(
+        name="fleet_tenants_per_sec",
+        us_per_call=1e6 / max(flt["tenants_per_sec"], 1e-9),
+        derived=f"{flt['tenants_per_sec']:.1f}t/s,"
+                f"speedup={flt['speedup_vs_sequential_host']:.1f}"
+                "x_vs_seq_host,"
+                f"{flt['speedup_vs_sequential_ingraph']:.1f}"
+                "x_vs_seq_ingraph,"
+                f"waves={flt['waves']},compiles={flt['compiles']}"))
+    return rows
+
+
 if __name__ == "__main__":
     import argparse
     ap = argparse.ArgumentParser()
@@ -248,4 +292,8 @@ if __name__ == "__main__":
                     help="also run the mesh-sharded/donated single-run "
                          "rows (spawns a multi-device scripts/bench_el.py "
                          "subprocess; minutes)")
-    run(sharded=ap.parse_args().sharded)
+    ap.add_argument("--fleet", action="store_true",
+                    help="also run the multi-tenant fleet serving row "
+                         "(spawns a scripts/bench_fleet.py subprocess)")
+    _a = ap.parse_args()
+    run(sharded=_a.sharded, fleet=_a.fleet)

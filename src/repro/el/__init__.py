@@ -15,12 +15,18 @@ The public surface of the OL4EL reproduction:
     implement (``ClassicExecutor`` / ``LMExecutor`` satisfy it);
   * :mod:`repro.el.sweep` — declarative ablation grids
     (:class:`SweepSpec`) run as ONE vmapped, mesh-shardable compiled
-    program via ``ELSession.sweep(spec)`` → :class:`SweepReport`.
+    program via ``ELSession.sweep(spec)`` → :class:`SweepReport`;
+  * :mod:`repro.el.fleet` — multi-tenant EL-as-a-service:
+    :class:`FleetServer` buckets :class:`TenantRun` submissions into
+    cohorts (one compiled slot-batch program per structural config)
+    and streams per-tenant reports as slot waves complete.
 """
 
 from repro.el import policies
 from repro.el.executor import (EdgeExecutor, InGraphExecutor,
                                validate_executor)
+from repro.el.fleet import (FleetServer, ReportReady, RoundDelta,
+                            TenantRun)
 from repro.el.report import ELReport, RoundRecord
 from repro.el.session import ELSession
 from repro.el.sweep import SweepReport, SweepSpec
@@ -29,4 +35,5 @@ __all__ = [
     "ELSession", "ELReport", "RoundRecord", "EdgeExecutor",
     "InGraphExecutor", "validate_executor", "policies",
     "SweepSpec", "SweepReport",
+    "FleetServer", "TenantRun", "RoundDelta", "ReportReady",
 ]

@@ -1,0 +1,84 @@
+"""Bounded compiled-program cache, shared by sessions and fleet cohorts.
+
+Every compiled EL program's closure pins a device-resident copy of the
+padded per-edge datasets, so an unbounded cache leaks device memory
+under ever-changing keys (e.g. fresh ``metric_fn`` lambdas).  This is
+the bounded FIFO ``ELSession`` has kept inline since the donation PR,
+extracted so a :class:`repro.el.fleet.FleetServer` can share one cache
+(and its hit/miss counters — the fleet's compiles-per-cohort assertion)
+with the sessions that verify its tenants, and so ``close()`` /
+``clear()`` can release the pinned buffers of long-lived servers.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Iterator, Optional
+
+
+class ProgramCache:
+    """Insertion-ordered dict of compiled programs with FIFO eviction.
+
+    Mapping-shaped on purpose: ``len`` / ``in`` / iteration behave like
+    the plain dict it replaces, so session internals (and the tests that
+    poke them) keep working.  ``hits`` / ``misses`` count ``get()``
+    outcomes — a fleet cohort compiles exactly once iff every later
+    lookup of its key is a hit.
+    """
+
+    def __init__(self, max_entries: int = 8):
+        self.max_entries = int(max_entries)
+        self._entries: Dict[tuple, Any] = {}
+        self.hits = 0
+        self.misses = 0
+
+    def get(self, key: tuple, default: Optional[Any] = None) -> Any:
+        entry = self._entries.get(key, default)
+        if entry is default:
+            self.misses += 1
+        else:
+            self.hits += 1
+        return entry
+
+    def put(self, key: tuple, program: Any) -> Any:
+        """Insert, evicting oldest entries past ``max_entries`` (any
+        alias the caller keeps — e.g. the session's last-used fast-path
+        handle — keeps an evicted program alive until replaced)."""
+        self._entries[key] = program
+        while len(self._entries) > self.max_entries:
+            self._entries.pop(next(iter(self._entries)))
+        return program
+
+    def clear(self) -> int:
+        """Drop every cached program, returning how many were dropped.
+        The programs' closures (and with them the device-resident
+        datasets they pin) become collectible once callers also drop
+        their aliases."""
+        n = len(self._entries)
+        self._entries.clear()
+        return n
+
+    # -- dict-compatible surface ---------------------------------------------
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: tuple) -> bool:
+        return key in self._entries
+
+    def __iter__(self) -> Iterator[tuple]:
+        return iter(self._entries)
+
+    def __getitem__(self, key: tuple) -> Any:
+        return self._entries[key]
+
+    def __setitem__(self, key: tuple, program: Any) -> None:
+        self.put(key, program)
+
+    def keys(self):
+        return self._entries.keys()
+
+    def values(self):
+        return self._entries.values()
+
+    def items(self):
+        return self._entries.items()

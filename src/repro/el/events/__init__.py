@@ -22,8 +22,10 @@ Front doors: ``ELSession.run_async_ingraph()`` and async
 """
 
 from repro.el.events.knobs import (ASYNC_KNOB_NAMES, async_knobs,
-                                   default_event_horizon)
-from repro.el.events.program import make_async_kernels, make_async_program
+                                   default_event_horizon,
+                                   padded_event_horizon)
+from repro.el.events.program import (make_async_cell, make_async_kernels,
+                                     make_async_program)
 from repro.el.events.reference import run_async_reference
 from repro.el.events.scheduler import (schedule_block, split_event_keys,
                                        split_init_keys, staleness_alpha,
@@ -33,6 +35,7 @@ from repro.el.events.state import (bandit_fleet_init, bandit_place,
 
 __all__ = [
     "ASYNC_KNOB_NAMES", "async_knobs", "default_event_horizon",
+    "padded_event_horizon", "make_async_cell",
     "make_async_program", "make_async_kernels", "run_async_reference",
     "schedule_block", "split_event_keys", "split_init_keys",
     "staleness_alpha", "staleness_merge",

@@ -64,3 +64,14 @@ def default_event_horizon(cfg: OL4ELConfig) -> int:
                     and cfg.cost_noise > 0) else 1.0
     per_edge = np.floor(cfg.budget / (floor * min_cost)) + 1.0
     return int(per_edge.sum())
+
+
+def padded_event_horizon(cfg: OL4ELConfig) -> int:
+    """:func:`default_event_horizon` rounded up to a power of two
+    (floor 64).  The horizon sizes the compiled program's history
+    arrays, so it is part of every compile-cache / cohort key — rounding
+    keeps nearby budget/cost points on ONE program instead of
+    recompiling per knob change.  Shared by ``run_async_ingraph`` and
+    the fleet's async cohort bucketing, so a tenant's cohort program has
+    exactly the horizon its independent verification run uses."""
+    return max(64, 1 << (default_event_horizon(cfg) - 1).bit_length())

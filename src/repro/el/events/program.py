@@ -48,8 +48,8 @@ from repro.el.events.scheduler import (schedule_block, split_event_keys,
                                        staleness_merge)
 from repro.el.events.state import (bandit_fleet_init, bandit_place,
                                    bandit_slice)
-from repro.el.ingraph import (_edge_stack_constraints, _pad_edge_data,
-                              _shard_edge_data, _tree_l2,
+from repro.el.ingraph import (ELCell, _edge_stack_constraints,
+                              _pad_edge_data, _shard_edge_data, _tree_l2,
                               check_ingraph_support, default_metric_fn,
                               make_local_block)
 
@@ -95,6 +95,160 @@ def _build_parts(model, edge_data, eval_set, cfg: OL4ELConfig, *,
     return local_block, metric_fn, eval_step
 
 
+def make_async_cell(model, edge_data, eval_set, cfg: OL4ELConfig, *,
+                    lr: float, batch: int,
+                    n_samples: Optional[np.ndarray] = None,
+                    metric_fn: Optional[Callable] = None,
+                    metric_name: str = "accuracy",
+                    max_events: int = 256, mesh=None) -> ELCell:
+    """The budgeted async event loop as an :class:`repro.el.ingraph.ELCell`
+    — the unfused form of ``make_async_program`` (which recomposes
+    exactly these closures into one ``lax.while_loop`` over events); see
+    that function for the semantics, knob contract and mesh placement."""
+    del n_samples
+    check_ingraph_support(cfg, caller="make_async_program")
+
+    n_edges, k = cfg.n_edges, cfg.max_interval
+    local_block, metric_fn, eval_step = _build_parts(
+        model, edge_data, eval_set, cfg, lr=lr, batch=batch,
+        metric_fn=metric_fn, metric_name=metric_name, mesh=mesh)
+    constrain_edge_stack, gather_edge_stack = _edge_stack_constraints(
+        mesh, n_edges)
+
+    def init(init_params: Params, rng: jax.Array,
+             knobs: Dict[str, jax.Array]) -> Dict[str, Any]:
+        ucb_c, budget = knobs["ucb_c"], knobs["budget"]
+        costs_ek = knobs["costs_ek"]                            # [E, K]
+
+        fleet = bandit_fleet_init(n_edges, k)
+        # initial scheduling: every edge selects its first block, in edge
+        # order (host loop's pre-event decide/realized_cost round)
+        rng, k_sel0, k_cost0 = split_init_keys(rng)
+
+        def init_edge(e):
+            return schedule_block(
+                bandit_slice(fleet, e), budget, costs_ek[e], ucb_c,
+                knobs["min_edge_cost"][e], knobs["cost_noise"],
+                knobs["comp"][e], knobs["comm"][e],
+                jnp.float32(0.0), jax.random.fold_in(k_sel0, e),
+                jax.random.fold_in(k_cost0, e))
+
+        _, interval0, cost0, finish0 = jax.vmap(init_edge)(
+            jnp.arange(n_edges))
+
+        edge_params = constrain_edge_stack(jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_edges,) + x.shape),
+            init_params))
+        if metric_fn is not None:
+            prev_metric = metric_fn(init_params)
+        else:
+            prev_metric = jnp.float32(jnp.nan)
+        hist = {
+            "metric": jnp.full((max_events,), jnp.nan, jnp.float32),
+            "utility": jnp.zeros((max_events,), jnp.float32),
+            "interval": jnp.zeros((max_events,), jnp.int32),
+            "edge": jnp.full((max_events,), -1, jnp.int32),
+            "cost": jnp.zeros((max_events,), jnp.float32),
+            "consumed": jnp.zeros((max_events,), jnp.float32),
+            "wall": jnp.zeros((max_events,), jnp.float32),
+        }
+        return {"gparams": init_params, "edge_params": edge_params,
+                "fleet": fleet,
+                "consumed": jnp.zeros((n_edges,), jnp.float32),
+                "finish": finish0, "infl_i": interval0, "infl_c": cost0,
+                "fetch_ver": jnp.zeros((n_edges,), jnp.int32),
+                "version": jnp.int32(0), "t": jnp.int32(0), "rng": rng,
+                "prev_metric": prev_metric, "wall": jnp.float32(0.0),
+                "hist": hist}
+
+    def cond(carry: Dict[str, Any], knobs: Dict[str, jax.Array]):
+        return ((carry["t"] < max_events)
+                & jnp.any(jnp.isfinite(carry["finish"])))
+
+    def body(carry: Dict[str, Any], knobs: Dict[str, jax.Array]):
+        ucb_c, budget = knobs["ucb_c"], knobs["budget"]
+        costs_ek = knobs["costs_ek"]                            # [E, K]
+        alpha0 = knobs["async_alpha"]
+        gparams, edge_params = carry["gparams"], carry["edge_params"]
+        fleet, consumed = carry["fleet"], carry["consumed"]
+        finish = carry["finish"]
+        infl_i, infl_c = carry["infl_i"], carry["infl_c"]
+        fetch_ver, version = carry["fetch_ver"], carry["version"]
+        t, prev_metric = carry["t"], carry["prev_metric"]
+        hist = carry["hist"]
+
+        rng, k_sel, k_data, k_cost = split_event_keys(carry["rng"])
+        # the event horizon: the earliest-finishing in-flight block
+        e = jnp.argmin(finish)
+        wall = finish[e]
+        interval, cost = infl_i[e], infl_c[e]
+        # edge e finishes `interval` local iterations and uploads;
+        # its slice of the sharded stack is gathered replicated so
+        # the block/merge arithmetic runs identically on every
+        # device (the event path is control plane)
+        p_e = gather_edge_stack(jax.tree.map(lambda a: a[e],
+                                             edge_params))
+        p_new = local_block(p_e, e, interval,
+                            jax.random.fold_in(k_data, e))
+        # the SAME realized-cost draw set the finish time and is
+        # charged at completion (charged == scheduled)
+        consumed = consumed.at[e].add(cost)
+        alpha = staleness_alpha(alpha0, version, fetch_ver[e], n_edges)
+        new_global = staleness_merge(gparams, p_new, alpha)
+        version = version + 1
+        metric, utility = eval_step(new_global, gparams, prev_metric)
+        bstate_e = jax_bandit_update(bandit_slice(fleet, e),
+                                     interval - 1, utility, cost)
+        fleet = bandit_place(fleet, e, bstate_e)
+        # edge fetches the fresh global model, schedules next block
+        # (the scatter re-pins the stack's sharding so the
+        # while-loop carry layout is stable across iterations)
+        edge_params = constrain_edge_stack(jax.tree.map(
+            lambda a, g: a.at[e].set(g), edge_params, new_global))
+        fetch_ver = fetch_ver.at[e].set(version)
+        resid = budget - consumed[e]
+        _, nxt_i, nxt_c, fin = schedule_block(
+            bstate_e, resid, costs_ek[e], ucb_c,
+            knobs["min_edge_cost"][e], knobs["cost_noise"],
+            knobs["comp"][e], knobs["comm"][e], wall,
+            jax.random.fold_in(k_sel, e),
+            jax.random.fold_in(k_cost, e))
+        finish = finish.at[e].set(fin)
+        infl_i = infl_i.at[e].set(nxt_i)
+        infl_c = infl_c.at[e].set(nxt_c)
+        hist = {
+            "metric": hist["metric"].at[t].set(metric),
+            "utility": hist["utility"].at[t].set(utility),
+            "interval": hist["interval"].at[t].set(interval),
+            "edge": hist["edge"].at[t].set(e.astype(jnp.int32)),
+            "cost": hist["cost"].at[t].set(cost),
+            "consumed": hist["consumed"].at[t].set(jnp.sum(consumed)),
+            "wall": hist["wall"].at[t].set(wall),
+        }
+        return {"gparams": new_global, "edge_params": edge_params,
+                "fleet": fleet, "consumed": consumed, "finish": finish,
+                "infl_i": infl_i, "infl_c": infl_c,
+                "fetch_ver": fetch_ver, "version": version, "t": t + 1,
+                "rng": rng, "prev_metric": metric, "wall": wall,
+                "hist": hist}
+
+    def finalize(carry: Dict[str, Any], knobs: Dict[str, jax.Array]):
+        out = dict(carry["hist"])
+        out["n_rounds"] = carry["t"]
+        out["budgets_left"] = knobs["budget"] - carry["consumed"]
+        out["arm_pulls"] = carry["fleet"]["counts"]             # [E, K]
+        out["wall_time"] = carry["wall"]
+        # blocks still in flight at exit: 0 means the budgets silenced
+        # every edge (terminated_reason="budget_exhausted"), >0 means
+        # the event horizon cut the run short ("max_events")
+        out["n_active"] = jnp.sum(
+            jnp.isfinite(carry["finish"]).astype(jnp.int32))
+        return carry["gparams"], out
+
+    return ELCell(init=init, cond=cond, body=body, finalize=finalize,
+                  horizon=max_events)
+
+
 def make_async_program(model, edge_data, eval_set, cfg: OL4ELConfig, *,
                        lr: float, batch: int,
                        n_samples: Optional[np.ndarray] = None,
@@ -128,134 +282,17 @@ def make_async_program(model, edge_data, eval_set, cfg: OL4ELConfig, *,
     the final per-edge ``budgets_left`` and the per-edge bandit
     ``arm_pulls`` ``[E, K]``.
     """
-    del n_samples
-    check_ingraph_support(cfg, caller="make_async_program")
-
-    n_edges, k = cfg.n_edges, cfg.max_interval
-    local_block, metric_fn, eval_step = _build_parts(
+    cell = make_async_cell(
         model, edge_data, eval_set, cfg, lr=lr, batch=batch,
-        metric_fn=metric_fn, metric_name=metric_name, mesh=mesh)
-    constrain_edge_stack, gather_edge_stack = _edge_stack_constraints(
-        mesh, n_edges)
+        n_samples=n_samples, metric_fn=metric_fn, metric_name=metric_name,
+        max_events=max_events, mesh=mesh)
 
     def program(init_params: Params, rng: jax.Array,
                 knobs: Dict[str, jax.Array]):
-        ucb_c, budget = knobs["ucb_c"], knobs["budget"]
-        comp, comm = knobs["comp"], knobs["comm"]
-        costs_ek = knobs["costs_ek"]                            # [E, K]
-        min_edge_cost = knobs["min_edge_cost"]                  # [E]
-        cost_noise = knobs["cost_noise"]
-        alpha0 = knobs["async_alpha"]
-
-        fleet = bandit_fleet_init(n_edges, k)
-        # initial scheduling: every edge selects its first block, in edge
-        # order (host loop's pre-event decide/realized_cost round)
-        rng, k_sel0, k_cost0 = split_init_keys(rng)
-
-        def init_edge(e):
-            return schedule_block(
-                bandit_slice(fleet, e), budget, costs_ek[e], ucb_c,
-                min_edge_cost[e], cost_noise, comp[e], comm[e],
-                jnp.float32(0.0), jax.random.fold_in(k_sel0, e),
-                jax.random.fold_in(k_cost0, e))
-
-        _, interval0, cost0, finish0 = jax.vmap(init_edge)(
-            jnp.arange(n_edges))
-
-        edge_params = constrain_edge_stack(jax.tree.map(
-            lambda x: jnp.broadcast_to(x, (n_edges,) + x.shape),
-            init_params))
-        if metric_fn is not None:
-            prev_metric = metric_fn(init_params)
-        else:
-            prev_metric = jnp.float32(jnp.nan)
-        hist = {
-            "metric": jnp.full((max_events,), jnp.nan, jnp.float32),
-            "utility": jnp.zeros((max_events,), jnp.float32),
-            "interval": jnp.zeros((max_events,), jnp.int32),
-            "edge": jnp.full((max_events,), -1, jnp.int32),
-            "cost": jnp.zeros((max_events,), jnp.float32),
-            "consumed": jnp.zeros((max_events,), jnp.float32),
-            "wall": jnp.zeros((max_events,), jnp.float32),
-        }
-        carry = (init_params, edge_params, fleet,
-                 jnp.zeros((n_edges,), jnp.float32),            # consumed
-                 finish0, interval0, cost0,
-                 jnp.zeros((n_edges,), jnp.int32),              # fetch ver
-                 jnp.int32(0),                                  # version
-                 jnp.int32(0),                                  # t
-                 rng, prev_metric, jnp.float32(0.0), hist)
-
-        def cond(carry):
-            (_, _, _, _, finish, _, _, _, _, t, _, _, _, _) = carry
-            return (t < max_events) & jnp.any(jnp.isfinite(finish))
-
-        def body(carry):
-            (gparams, edge_params, fleet, consumed, finish, infl_i, infl_c,
-             fetch_ver, version, t, rng, prev_metric, _, hist) = carry
-            rng, k_sel, k_data, k_cost = split_event_keys(rng)
-            # the event horizon: the earliest-finishing in-flight block
-            e = jnp.argmin(finish)
-            wall = finish[e]
-            interval, cost = infl_i[e], infl_c[e]
-            # edge e finishes `interval` local iterations and uploads;
-            # its slice of the sharded stack is gathered replicated so
-            # the block/merge arithmetic runs identically on every
-            # device (the event path is control plane)
-            p_e = gather_edge_stack(jax.tree.map(lambda a: a[e],
-                                                 edge_params))
-            p_new = local_block(p_e, e, interval,
-                                jax.random.fold_in(k_data, e))
-            # the SAME realized-cost draw set the finish time and is
-            # charged at completion (charged == scheduled)
-            consumed = consumed.at[e].add(cost)
-            alpha = staleness_alpha(alpha0, version, fetch_ver[e], n_edges)
-            new_global = staleness_merge(gparams, p_new, alpha)
-            version = version + 1
-            metric, utility = eval_step(new_global, gparams, prev_metric)
-            bstate_e = jax_bandit_update(bandit_slice(fleet, e),
-                                         interval - 1, utility, cost)
-            fleet = bandit_place(fleet, e, bstate_e)
-            # edge fetches the fresh global model, schedules next block
-            # (the scatter re-pins the stack's sharding so the
-            # while-loop carry layout is stable across iterations)
-            edge_params = constrain_edge_stack(jax.tree.map(
-                lambda a, g: a.at[e].set(g), edge_params, new_global))
-            fetch_ver = fetch_ver.at[e].set(version)
-            resid = budget - consumed[e]
-            _, nxt_i, nxt_c, fin = schedule_block(
-                bstate_e, resid, costs_ek[e], ucb_c, min_edge_cost[e],
-                cost_noise, comp[e], comm[e], wall,
-                jax.random.fold_in(k_sel, e),
-                jax.random.fold_in(k_cost, e))
-            finish = finish.at[e].set(fin)
-            infl_i = infl_i.at[e].set(nxt_i)
-            infl_c = infl_c.at[e].set(nxt_c)
-            hist = {
-                "metric": hist["metric"].at[t].set(metric),
-                "utility": hist["utility"].at[t].set(utility),
-                "interval": hist["interval"].at[t].set(interval),
-                "edge": hist["edge"].at[t].set(e.astype(jnp.int32)),
-                "cost": hist["cost"].at[t].set(cost),
-                "consumed": hist["consumed"].at[t].set(jnp.sum(consumed)),
-                "wall": hist["wall"].at[t].set(wall),
-            }
-            return (new_global, edge_params, fleet, consumed, finish,
-                    infl_i, infl_c, fetch_ver, version, t + 1, rng,
-                    metric, wall, hist)
-
-        (params, _, fleet, consumed, finish, _, _, _, _, t, _, _, wall,
-         hist) = lax.while_loop(cond, body, carry)
-        out = dict(hist)
-        out["n_rounds"] = t
-        out["budgets_left"] = budget - consumed
-        out["arm_pulls"] = fleet["counts"]                      # [E, K]
-        out["wall_time"] = wall
-        # blocks still in flight at exit: 0 means the budgets silenced
-        # every edge (terminated_reason="budget_exhausted"), >0 means
-        # the event horizon cut the run short ("max_events")
-        out["n_active"] = jnp.sum(jnp.isfinite(finish).astype(jnp.int32))
-        return params, out
+        carry = lax.while_loop(lambda c: cell.cond(c, knobs),
+                               lambda c: cell.body(c, knobs),
+                               cell.init(init_params, rng, knobs))
+        return cell.finalize(carry, knobs)
 
     return program
 

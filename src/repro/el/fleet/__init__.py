@@ -1,0 +1,29 @@
+"""``repro.el.fleet`` — multi-tenant EL-as-a-service.
+
+A persistent, host-driven service over the compiled EL programs:
+
+  * :class:`TenantRun` — one tenant's submission (config + executor +
+    seed + knob point + priority);
+  * :class:`FleetServer` — buckets tenants into cohorts (one compiled
+    knob-parameterized slot-batch program per structural config),
+    drives each cohort in fixed-width slot waves with mid-flight
+    refill (continuous batching) and donated-buffer recycling;
+  * :class:`RoundDelta` / :class:`ReportReady` — per-tenant events
+    streamed to subscribers as rounds complete;
+  * :class:`Cohort` — the per-structure slot/admission state machine.
+
+Correctness bar: every tenant's streamed report is bit-identical to an
+independent ``ELSession.run_sync_ingraph`` / ``run_async_ingraph`` of
+that tenant alone (see ``tests/test_el_fleet.py``).
+
+CLI front door: ``python -m repro.launch.fleet``.
+"""
+
+from repro.el.fleet.cohort import Cohort
+from repro.el.fleet.server import DEFAULT_SYNC_HORIZON, FleetServer
+from repro.el.fleet.tenant import ReportReady, RoundDelta, TenantRun
+
+__all__ = [
+    "FleetServer", "TenantRun", "RoundDelta", "ReportReady", "Cohort",
+    "DEFAULT_SYNC_HORIZON",
+]

@@ -1,0 +1,178 @@
+"""One cohort = one structural config = ONE compiled slot-batch program.
+
+A :class:`Cohort` owns the runtime state behind a
+:class:`repro.el.sweep.engine.CellBatch`: the stacked device carry, the
+per-slot tenant bindings and knob rows, and a priority admission queue.
+``wave()`` is the whole service loop body — admit pending tenants into
+free slots, run ``rounds_per_wave`` masked iterations, stream each
+slot's newly completed aggregations as :class:`RoundDelta` events, and
+finalize slots whose runs terminated (freeing them for the next
+admission).  The stacked carry is donated every wave, so a cohort
+serving thousands of tenants recycles one set of device buffers.
+"""
+
+from __future__ import annotations
+
+import heapq
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.el.report import ELReport, RoundRecord, records_from_out, \
+    report_from_out
+from repro.el.fleet.tenant import ReportReady, RoundDelta, TenantRun
+from repro.el.sweep.engine import CellBatch
+
+EmitFn = Callable[[Any], None]
+
+
+class _Active:
+    """A tenant occupying a slot: its submission, resolved knob row,
+    streamed-record cursor and admission wall-clock."""
+
+    __slots__ = ("tenant_id", "run", "knobs", "records", "t0")
+
+    def __init__(self, tenant_id: str, run: TenantRun,
+                 knobs: Dict[str, np.ndarray]):
+        self.tenant_id = tenant_id
+        self.run = run
+        self.knobs = knobs
+        self.records: List[RoundRecord] = []
+        self.t0 = time.perf_counter()
+
+
+class Cohort:
+    """Slot-batched continuous service of one structural config."""
+
+    def __init__(self, key: tuple, batch: CellBatch,
+                 knobs_fn: Callable, n_samples: Optional[np.ndarray]):
+        self.key = key
+        self.batch = batch
+        self.knobs_fn = knobs_fn
+        self.n_samples = n_samples
+        self.waves = 0
+        self.admitted = 0
+        self.completed = 0
+        self._seq = 0
+        self._pending: List[Tuple[int, int, str, TenantRun]] = []
+        self._slots: List[Optional[_Active]] = [None] * batch.n_slots
+        self._stacked = None                     # device carry [n_slots,...]
+        self._knobs_np: Optional[Dict[str, np.ndarray]] = None
+
+    # -- admission ----------------------------------------------------------
+
+    def submit(self, tenant_id: str, run: TenantRun) -> None:
+        """Queue a tenant (higher ``priority`` first, FIFO within)."""
+        heapq.heappush(self._pending,
+                       (-run.priority, self._seq, tenant_id, run))
+        self._seq += 1
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self._pending) or any(s is not None
+                                          for s in self._slots)
+
+    @property
+    def n_active(self) -> int:
+        return sum(s is not None for s in self._slots)
+
+    @property
+    def n_pending(self) -> int:
+        return len(self._pending)
+
+    def _admit(self) -> None:
+        """Fill free slots from the queue (continuous batching: runs
+        admitted mid-flight join the next wave; occupied slots are
+        untouched — ``place`` only writes the freed row)."""
+        for s in range(self.batch.n_slots):
+            if self._slots[s] is not None or not self._pending:
+                continue
+            _, _, tenant_id, run = heapq.heappop(self._pending)
+            knobs = self.knobs_fn(run.cfg)
+            params = (run.init_params if run.init_params is not None
+                      else run.executor.init_params(run.cfg.seed))
+            carry = self.batch.init_slot(
+                params, jax.random.key(run.cfg.seed + 17),
+                {k: jnp.asarray(v) for k, v in knobs.items()})
+            if self._stacked is None:
+                self._stacked = self.batch.broadcast(carry)
+                self._knobs_np = {
+                    k: np.zeros((self.batch.n_slots,) + np.shape(v),
+                                np.float32)
+                    for k, v in knobs.items()}
+            self._stacked = self.batch.place(self._stacked, carry,
+                                             jnp.int32(s))
+            for k, v in knobs.items():
+                self._knobs_np[k][s] = v
+            self._slots[s] = _Active(tenant_id, run, knobs)
+            self.admitted += 1
+
+    # -- the service loop body ----------------------------------------------
+
+    def wave(self, emit: EmitFn) -> List[Tuple[str, ELReport]]:
+        """Admit, step one wave, stream deltas, finalize finished slots.
+
+        Returns the ``(tenant_id, report)`` pairs completed this wave
+        (also emitted as :class:`ReportReady` events, after that
+        tenant's final :class:`RoundDelta`\\ s).
+        """
+        self._admit()
+        active = np.array([s is not None for s in self._slots])
+        if not active.any():
+            return []
+        self._stacked, running = self.batch.step(
+            self._stacked,
+            {k: jnp.asarray(v) for k, v in self._knobs_np.items()},
+            jnp.asarray(active))
+        running = np.asarray(running)
+        self.waves += 1
+
+        # stream the wave's newly completed aggregations from the live
+        # history — the same arrays the final report is built from, so
+        # accumulated deltas == report.records bit for bit
+        t_host = np.asarray(self._stacked["t"])
+        hist = jax.tree.map(np.asarray, self._stacked["hist"])
+        done: List[Tuple[str, ELReport]] = []
+        for s, slot in enumerate(self._slots):
+            if slot is None:
+                continue
+            hi = int(t_host[s])
+            if hi > len(slot.records):
+                fresh = records_from_out(
+                    {k: v[s] for k, v in hist.items()},
+                    len(slot.records), hi)
+                slot.records.extend(fresh)
+                for rec in fresh:
+                    emit(RoundDelta(slot.tenant_id, rec))
+            if not running[s]:
+                done.append(self._finalize(s, emit))
+        return done
+
+    def _finalize(self, s: int, emit: EmitFn) -> Tuple[str, ELReport]:
+        slot = self._slots[s]
+        carry = self.batch.take_slot(self._stacked, jnp.int32(s))
+        params, out = self.batch.finalize_slot(
+            carry, {k: jnp.asarray(v) for k, v in slot.knobs.items()})
+        out = {k: np.asarray(v) for k, v in out.items()}
+        final = slot.run.executor.evaluate(params)[slot.run.metric_name]
+        report = report_from_out(
+            out, mode=self.batch.mode, policy=slot.run.cfg.policy,
+            horizon=self.batch.horizon, final_metric=final,
+            final_params=params,
+            elapsed_s=time.perf_counter() - slot.t0,
+            records=slot.records)
+        self._slots[s] = None                    # frees the row; the mask
+        self.completed += 1                      # keeps it inert until reuse
+        emit(ReportReady(slot.tenant_id, report))
+        return slot.tenant_id, report
+
+    def release(self) -> None:
+        """Drop the device carry (buffer release is then a GC away);
+        queued/active tenants are discarded."""
+        self._stacked = None
+        self._knobs_np = None
+        self._slots = [None] * self.batch.n_slots
+        self._pending = []

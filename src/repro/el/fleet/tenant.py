@@ -1,0 +1,64 @@
+"""Tenant-facing records of the fleet server: what a caller submits
+(:class:`TenantRun`) and the two event types streamed back to
+subscribers (:class:`RoundDelta` per completed aggregation,
+:class:`ReportReady` when the tenant's run finishes)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Sequence
+
+from repro.config import OL4ELConfig
+from repro.el.report import ELReport, RoundRecord
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantRun:
+    """One tenant's EL run, as submitted to :class:`FleetServer.submit`.
+
+    ``cfg`` carries both the structure (mode, n_edges, utility — the
+    cohort key) and the knob point (budget, ucb_c, seed, ... — traced
+    inputs of the cohort's one compiled program).  ``executor`` is the
+    tenant's in-graph data plane (e.g. ``ClassicExecutor``); tenants
+    sharing an executor + structural config share a cohort and its
+    compiled slot-batch program.
+
+    ``init_params=None`` resolves to ``executor.init_params(cfg.seed)``
+    at admission — the same default an ``ELSession`` uses, which is what
+    keeps a fleet tenant bit-identical to an independent
+    ``run_sync_ingraph`` / ``run_async_ingraph`` of the same submission.
+    ``n_samples`` (per-edge aggregation weights) applies to sync runs
+    only, mirroring the session fast paths.  Higher ``priority`` admits
+    first; ties admit in submission order.
+    """
+
+    cfg: OL4ELConfig
+    executor: Any
+    tenant_id: Optional[str] = None
+    priority: int = 0
+    metric_fn: Optional[Callable] = None
+    metric_name: str = "accuracy"
+    n_samples: Optional[Sequence[float]] = None
+    init_params: Any = None
+    #: sync history length (compiled ``max_rounds``); ``None`` → 512.
+    #: Async cohorts size their history from the padded event horizon.
+    max_rounds: Optional[int] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class RoundDelta:
+    """Streamed to subscribers after each wave, once per aggregation the
+    tenant completed in that wave — read straight from the live device
+    history, so the deltas a subscriber accumulates are the finished
+    report's ``records`` (same arrays, read incrementally)."""
+
+    tenant_id: str
+    record: RoundRecord
+
+
+@dataclasses.dataclass(frozen=True)
+class ReportReady:
+    """Streamed when a tenant's run terminates and its slot is freed."""
+
+    tenant_id: str
+    report: ELReport

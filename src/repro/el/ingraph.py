@@ -51,6 +51,7 @@ Everything else stays on the host paths (``ELSession.run_sync`` /
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -284,6 +285,184 @@ def _edge_stack_constraints(mesh, n_edges: int
     return constrain, gather
 
 
+@dataclasses.dataclass(frozen=True)
+class ELCell:
+    """One EL run's compiled loop, split into composable pieces.
+
+    The four closures share the program's dict carry (``carry["t"]`` is
+    the round/event counter, ``carry["hist"]`` the ``[horizon]`` history
+    arrays) and all take the traced knob dict explicitly, so callers can
+    compose them into different drivers:
+
+      * ``make_sync_program`` / ``make_async_program`` fuse
+        ``init → while(cond, body) → finalize`` into ONE program per run
+        (the single-run and sweep fast paths);
+      * the fleet server (``repro.el.fleet``) instead vmaps a bounded
+        chunk of ``body`` over tenant *slots* and carries the stacked
+        state across calls — continuous batching over the same cell,
+        bit-identical because ``body`` is the same traced function.
+    """
+
+    init: Callable       # (init_params, rng, knobs) -> carry
+    cond: Callable       # (carry, knobs) -> bool scalar (continue?)
+    body: Callable       # (carry, knobs) -> carry (one round/event)
+    finalize: Callable   # (carry, knobs) -> (params, out dict)
+    horizon: int         # history length (max_rounds / max_events)
+
+
+def make_sync_cell(model, edge_data, eval_set, cfg: OL4ELConfig, *,
+                   lr: float, batch: int,
+                   n_samples: Optional[np.ndarray] = None,
+                   metric_fn: Optional[Callable] = None,
+                   metric_name: str = "accuracy",
+                   max_rounds: int = 512, mesh=None) -> ELCell:
+    """The budgeted sync round as an :class:`ELCell` — the unfused form
+    of ``make_sync_program`` (which recomposes exactly these closures
+    into one ``lax.while_loop``); see that function for the semantics,
+    knob contract and mesh placement."""
+    check_ingraph_support(cfg, caller="make_sync_program")
+
+    n_edges, k = cfg.n_edges, cfg.max_interval
+
+    xs, ys, n_per_edge = _pad_edge_data(edge_data)
+    constrain_edge_stack, gather_edge_stack = _edge_stack_constraints(
+        mesh, n_edges)
+    if mesh is not None:
+        xs, ys = _shard_edge_data(mesh, n_edges, xs, ys)
+    w_agg = (np.ones(n_edges) if n_samples is None
+             else np.asarray(n_samples, np.float64))
+    w_agg = jnp.asarray(w_agg / w_agg.sum(), jnp.float32)
+
+    if metric_fn is None:
+        metric_fn = default_metric_fn(model, eval_set, metric_name)
+    if cfg.utility == "eval_gain" and metric_fn is None:
+        raise ValueError(
+            "utility='eval_gain' needs a jittable metric; pass metric_fn= "
+            "or use utility='param_delta'")
+
+    local_block = make_local_block(model, xs, ys, n_per_edge, batch, lr, k)
+
+    def weighted_mean(trees: Params) -> Params:
+        return jax.tree.map(
+            lambda leaf: jnp.einsum(
+                "e...,e->...", leaf.astype(jnp.float32), w_agg
+            ).astype(leaf.dtype), trees)
+
+    def init(init_params: Params, rng: jax.Array,
+             knobs: Dict[str, jax.Array]) -> Dict[str, Any]:
+        bstate = jax_bandit_init(k)
+        consumed = jnp.zeros((n_edges,), jnp.float32)
+        if metric_fn is not None:
+            prev_metric = metric_fn(init_params)
+        else:
+            prev_metric = jnp.float32(jnp.nan)
+        hist = {
+            "metric": jnp.full((max_rounds,), jnp.nan, jnp.float32),
+            "utility": jnp.zeros((max_rounds,), jnp.float32),
+            "interval": jnp.zeros((max_rounds,), jnp.int32),
+            "consumed": jnp.zeros((max_rounds,), jnp.float32),
+            "wall": jnp.zeros((max_rounds,), jnp.float32),
+        }
+        return {"params": init_params, "bstate": bstate,
+                "consumed": consumed, "t": jnp.int32(0), "rng": rng,
+                "prev_metric": prev_metric, "wall": jnp.float32(0.0),
+                "hist": hist}
+
+    def cond(carry: Dict[str, Any], knobs: Dict[str, jax.Array]):
+        resid = knobs["budget"] - carry["consumed"]                  # [E]
+        affordable = (jnp.min(resid)
+                      >= jnp.min(knobs["costs_k"]) - 1e-12)
+        exhausted = jnp.any(resid < knobs["min_edge_cost"])
+        return (carry["t"] < max_rounds) & affordable & ~exhausted
+
+    def body(carry: Dict[str, Any], knobs: Dict[str, jax.Array]):
+        ucb_c = knobs["ucb_c"]
+        budget = knobs["budget"]
+        comp, comm = knobs["comp"], knobs["comm"]
+        costs_k = knobs["costs_k"]
+        cost_noise = knobs["cost_noise"]
+        params, bstate = carry["params"], carry["bstate"]
+        consumed, t = carry["consumed"], carry["t"]
+        prev_metric, wall = carry["prev_metric"], carry["wall"]
+        hist = carry["hist"]
+
+        rng, k_sel, k_data = jax.random.split(carry["rng"], 3)
+        resid = jnp.min(budget - consumed)
+        w = jax_selection_weights(bstate, resid, costs_k, ucb_c)
+        logits = jnp.where(w > 0, jnp.log(jnp.maximum(w, 1e-30)),
+                           -jnp.inf)
+        arm = jax.random.categorical(k_sel, logits)
+        interval = arm + 1
+
+        edge_ids = jnp.arange(n_edges)
+        keys = jax.vmap(lambda e: jax.random.fold_in(k_data, e))(edge_ids)
+        bcast = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_edges,) + x.shape), params)
+        # data plane: the per-edge param stack (and with it the
+        # vmapped local blocks) shards over the mesh's edge axes ...
+        bcast = constrain_edge_stack(bcast)
+        edge_params = jax.vmap(local_block, in_axes=(0, 0, None, 0))(
+            bcast, edge_ids, interval, keys)
+        # ... and is all-gathered BEFORE the aggregation so the
+        # einsum reduces replicated, in the unsharded program's
+        # exact accumulation order (bit-identity; a psum over the
+        # sharded edge dim would be an ulp off)
+        edge_params = gather_edge_stack(edge_params)
+        new_params = weighted_mean(edge_params)
+
+        # straggler semantics: every edge's clock advances by the
+        # slowest edge's round time (matches CloudCoordinator.charge
+        # in run_sync)
+        round_costs = interval.astype(jnp.float32) * comp + comm  # [E]
+        # host semantics (CloudCoordinator.realized_cost): each
+        # edge's realized cost is the expected cost times an
+        # i.i.d. multiplier max(0.1, 1 + noise·N(0,1)).  The key
+        # is derived from k_data OUTSIDE the per-edge fold range
+        # [0, n_edges), so the fixed-cost RNG streams are
+        # untouched.  ``cost_noise`` is a TRACED knob (sweepable):
+        # a 0.0 knob multiplies by exactly 1.0, so fixed-cost runs
+        # are the noise-0 program bit-for-bit.
+        k_cost = jax.random.fold_in(k_data, n_edges)
+        eps = jax.random.normal(k_cost, (n_edges,))
+        mult = jnp.maximum(0.1, 1.0 + cost_noise * eps)
+        round_costs = round_costs * mult
+        slot = jnp.max(round_costs)
+        consumed = consumed + slot
+
+        if metric_fn is not None:
+            metric = metric_fn(new_params)
+        else:
+            metric = jnp.float32(jnp.nan)
+        if cfg.utility == "eval_gain":
+            utility = metric - prev_metric
+        else:                              # param_delta (§III.A)
+            utility = 1.0 / (1.0 + _tree_l2(params, new_params))
+
+        bstate = jax_bandit_update(bstate, arm, utility, slot)
+        wall = wall + slot
+        hist = {
+            "metric": hist["metric"].at[t].set(metric),
+            "utility": hist["utility"].at[t].set(utility),
+            "interval": hist["interval"].at[t].set(interval),
+            "consumed": hist["consumed"].at[t].set(jnp.sum(consumed)),
+            "wall": hist["wall"].at[t].set(wall),
+        }
+        return {"params": new_params, "bstate": bstate,
+                "consumed": consumed, "t": t + 1, "rng": rng,
+                "prev_metric": metric, "wall": wall, "hist": hist}
+
+    def finalize(carry: Dict[str, Any], knobs: Dict[str, jax.Array]):
+        out = dict(carry["hist"])
+        out["n_rounds"] = carry["t"]
+        out["budgets_left"] = knobs["budget"] - carry["consumed"]
+        out["arm_pulls"] = carry["bstate"]["counts"]
+        out["wall_time"] = carry["wall"]
+        return carry["params"], out
+
+    return ELCell(init=init, cond=cond, body=body, finalize=finalize,
+                  horizon=max_rounds)
+
+
 def make_sync_program(model, edge_data, eval_set, cfg: OL4ELConfig, *,
                       lr: float, batch: int,
                       n_samples: Optional[np.ndarray] = None,
@@ -313,141 +492,17 @@ def make_sync_program(model, edge_data, eval_set, cfg: OL4ELConfig, *,
     (cumulative straggler time), plus scalars ``n_rounds`` and the final
     per-edge ``budgets_left``.
     """
-    check_ingraph_support(cfg, caller="make_sync_program")
-
-    n_edges, k = cfg.n_edges, cfg.max_interval
-
-    xs, ys, n_per_edge = _pad_edge_data(edge_data)
-    constrain_edge_stack, gather_edge_stack = _edge_stack_constraints(
-        mesh, n_edges)
-    if mesh is not None:
-        xs, ys = _shard_edge_data(mesh, n_edges, xs, ys)
-    w_agg = (np.ones(n_edges) if n_samples is None
-             else np.asarray(n_samples, np.float64))
-    w_agg = jnp.asarray(w_agg / w_agg.sum(), jnp.float32)
-
-    if metric_fn is None:
-        metric_fn = default_metric_fn(model, eval_set, metric_name)
-    if cfg.utility == "eval_gain" and metric_fn is None:
-        raise ValueError(
-            "utility='eval_gain' needs a jittable metric; pass metric_fn= "
-            "or use utility='param_delta'")
-
-    local_block = make_local_block(model, xs, ys, n_per_edge, batch, lr, k)
-
-    def weighted_mean(trees: Params) -> Params:
-        return jax.tree.map(
-            lambda leaf: jnp.einsum(
-                "e...,e->...", leaf.astype(jnp.float32), w_agg
-            ).astype(leaf.dtype), trees)
+    cell = make_sync_cell(
+        model, edge_data, eval_set, cfg, lr=lr, batch=batch,
+        n_samples=n_samples, metric_fn=metric_fn, metric_name=metric_name,
+        max_rounds=max_rounds, mesh=mesh)
 
     def program(init_params: Params, rng: jax.Array,
                 knobs: Dict[str, jax.Array]):
-        ucb_c = knobs["ucb_c"]
-        budget = knobs["budget"]
-        comp, comm = knobs["comp"], knobs["comm"]
-        costs_k = knobs["costs_k"]
-        min_edge_cost = knobs["min_edge_cost"]
-        cost_noise = knobs["cost_noise"]
-
-        def cond(carry):
-            (_, _, consumed, t, _, _, _, _) = carry
-            resid = budget - consumed                                # [E]
-            affordable = jnp.min(resid) >= jnp.min(costs_k) - 1e-12
-            exhausted = jnp.any(resid < min_edge_cost)
-            return (t < max_rounds) & affordable & ~exhausted
-
-        def body(carry):
-            (params, bstate, consumed, t, rng, prev_metric, wall,
-             hist) = carry
-            rng, k_sel, k_data = jax.random.split(rng, 3)
-            resid = jnp.min(budget - consumed)
-            w = jax_selection_weights(bstate, resid, costs_k, ucb_c)
-            logits = jnp.where(w > 0, jnp.log(jnp.maximum(w, 1e-30)),
-                               -jnp.inf)
-            arm = jax.random.categorical(k_sel, logits)
-            interval = arm + 1
-
-            edge_ids = jnp.arange(n_edges)
-            keys = jax.vmap(lambda e: jax.random.fold_in(k_data, e))(edge_ids)
-            bcast = jax.tree.map(
-                lambda x: jnp.broadcast_to(x, (n_edges,) + x.shape), params)
-            # data plane: the per-edge param stack (and with it the
-            # vmapped local blocks) shards over the mesh's edge axes ...
-            bcast = constrain_edge_stack(bcast)
-            edge_params = jax.vmap(local_block, in_axes=(0, 0, None, 0))(
-                bcast, edge_ids, interval, keys)
-            # ... and is all-gathered BEFORE the aggregation so the
-            # einsum reduces replicated, in the unsharded program's
-            # exact accumulation order (bit-identity; a psum over the
-            # sharded edge dim would be an ulp off)
-            edge_params = gather_edge_stack(edge_params)
-            new_params = weighted_mean(edge_params)
-
-            # straggler semantics: every edge's clock advances by the
-            # slowest edge's round time (matches CloudCoordinator.charge
-            # in run_sync)
-            round_costs = interval.astype(jnp.float32) * comp + comm  # [E]
-            # host semantics (CloudCoordinator.realized_cost): each
-            # edge's realized cost is the expected cost times an
-            # i.i.d. multiplier max(0.1, 1 + noise·N(0,1)).  The key
-            # is derived from k_data OUTSIDE the per-edge fold range
-            # [0, n_edges), so the fixed-cost RNG streams are
-            # untouched.  ``cost_noise`` is a TRACED knob (sweepable):
-            # a 0.0 knob multiplies by exactly 1.0, so fixed-cost runs
-            # are the noise-0 program bit-for-bit.
-            k_cost = jax.random.fold_in(k_data, n_edges)
-            eps = jax.random.normal(k_cost, (n_edges,))
-            mult = jnp.maximum(0.1, 1.0 + cost_noise * eps)
-            round_costs = round_costs * mult
-            slot = jnp.max(round_costs)
-            consumed = consumed + slot
-
-            if metric_fn is not None:
-                metric = metric_fn(new_params)
-            else:
-                metric = jnp.float32(jnp.nan)
-            if cfg.utility == "eval_gain":
-                utility = metric - prev_metric
-            else:                              # param_delta (§III.A)
-                utility = 1.0 / (1.0 + _tree_l2(params, new_params))
-
-            bstate = jax_bandit_update(bstate, arm, utility, slot)
-            wall = wall + slot
-            hist = {
-                "metric": hist["metric"].at[t].set(metric),
-                "utility": hist["utility"].at[t].set(utility),
-                "interval": hist["interval"].at[t].set(interval),
-                "consumed": hist["consumed"].at[t].set(
-                    jnp.sum(consumed)),
-                "wall": hist["wall"].at[t].set(wall),
-            }
-            return (new_params, bstate, consumed, t + 1, rng, metric, wall,
-                    hist)
-
-        bstate = jax_bandit_init(k)
-        consumed = jnp.zeros((n_edges,), jnp.float32)
-        if metric_fn is not None:
-            prev_metric = metric_fn(init_params)
-        else:
-            prev_metric = jnp.float32(jnp.nan)
-        hist = {
-            "metric": jnp.full((max_rounds,), jnp.nan, jnp.float32),
-            "utility": jnp.zeros((max_rounds,), jnp.float32),
-            "interval": jnp.zeros((max_rounds,), jnp.int32),
-            "consumed": jnp.zeros((max_rounds,), jnp.float32),
-            "wall": jnp.zeros((max_rounds,), jnp.float32),
-        }
-        carry = (init_params, bstate, consumed, jnp.int32(0), rng,
-                 prev_metric, jnp.float32(0.0), hist)
-        (params, bstate, consumed, t, _, _, wall, hist) = \
-            lax.while_loop(cond, body, carry)
-        out = dict(hist)
-        out["n_rounds"] = t
-        out["budgets_left"] = budget - consumed
-        out["arm_pulls"] = bstate["counts"]
-        out["wall_time"] = wall
-        return params, out
+        carry = lax.while_loop(lambda c: cell.cond(c, knobs),
+                               lambda c: cell.body(c, knobs),
+                               cell.init(init_params, rng, knobs))
+        return cell.finalize(carry, knobs)
 
     return program
 

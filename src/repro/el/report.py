@@ -1,4 +1,8 @@
-"""Run artifacts of the EL runtime: per-round records + the final report."""
+"""Run artifacts of the EL runtime: per-round records + the final report,
+plus the builders that turn a compiled program's ``out`` dict into them
+(shared by ``ELSession.run_*_ingraph`` and the fleet server, so a
+tenant's streamed report is built by the same arithmetic as a
+single-run one)."""
 
 from __future__ import annotations
 
@@ -69,3 +73,60 @@ class ELReport:
                 f"aggs={self.n_aggregations} "
                 f"consumed={self.total_consumed:.0f} "
                 f"({self.terminated_reason})")
+
+
+def records_from_out(out: Dict[str, Any], lo: int, hi: int
+                     ) -> List[RoundRecord]:
+    """``RoundRecord``s for rounds/events ``[lo, hi)`` of a compiled
+    program's history arrays (``out`` may be the final ``out`` dict or a
+    live ``carry["hist"]`` — same arrays either way, which is what makes
+    the fleet's streamed deltas equal the finished report's records).
+    Sync histories carry no ``edge`` array; those records get ``-1``."""
+    edge = out.get("edge")
+    return [
+        RoundRecord(float(out["wall"][t]), float(out["consumed"][t]),
+                    float(out["metric"][t]), float(out["utility"][t]),
+                    float(out["interval"][t]),
+                    int(edge[t]) if edge is not None else -1, t + 1)
+        for t in range(lo, hi)
+    ]
+
+
+def report_from_out(out: Dict[str, Any], *, mode: str, policy: str,
+                    horizon: int, final_metric: float, final_params: Any,
+                    elapsed_s: float,
+                    records: Optional[List[RoundRecord]] = None
+                    ) -> "ELReport":
+    """Assemble an :class:`ELReport` from a compiled program's ``out``.
+
+    One builder for both modes and all drivers (``run_sync_ingraph``,
+    ``run_async_ingraph``, the fleet cohorts): the termination reason
+    comes from ``n_active`` when present (the async in-flight count),
+    else from the round count against ``horizon``; async ``[E, K]`` arm
+    pulls are summed to the sync ``[K]`` histogram shape.
+    """
+    import numpy as np
+    n = int(out["n_rounds"])
+    if records is None:
+        records = records_from_out(out, 0, n)
+    pulls = np.asarray(out["arm_pulls"])
+    if pulls.ndim == 2:                                # async [E,K] -> [K]
+        pulls = pulls.sum(axis=0)
+    if "n_active" in out:
+        reason = ("budget_exhausted" if int(out["n_active"]) == 0
+                  else "max_events")
+    else:
+        reason = "max_rounds" if n >= horizon else "budget_exhausted"
+    return ELReport(
+        records=records,
+        final_metric=float(final_metric),
+        n_aggregations=n,
+        total_consumed=float(out["consumed"][n - 1]) if n else 0.0,
+        wall_time=float(out["wall_time"]),
+        terminated_reason=reason,
+        policy=policy,
+        mode=mode,
+        arm_pulls=[int(c) for c in pulls],
+        elapsed_s=elapsed_s,
+        final_params=final_params,
+    )

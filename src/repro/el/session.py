@@ -32,8 +32,10 @@ from repro.config import ExperimentConfig, OL4ELConfig
 from repro.core.coordinator import CloudCoordinator
 from repro.core.utility import UtilityEstimator, param_l2_delta
 from repro.el import policies as el_policies
+from repro.el.cache import ProgramCache
 from repro.el.executor import EdgeExecutor, validate_executor
-from repro.el.report import ELReport, RoundRecord
+from repro.el.report import (ELReport, RoundRecord, records_from_out,
+                             report_from_out)
 
 Params = Any
 RoundCallback = Callable[[RoundRecord], None]
@@ -63,11 +65,16 @@ class ELSession:
         # structural config AND the mesh/sharding + donation identity
         # (two meshes compile different executables — sharing or
         # thrashing a slot between them would silently retrace per call).
-        # Bounded FIFO: each entry's closure pins a device-resident copy
-        # of the padded per-edge datasets, so an unbounded cache would
-        # leak under ever-changing keys (e.g. fresh metric_fn lambdas).
-        self._programs: Dict[tuple, Any] = {}
+        # Bounded FIFO (repro.el.cache.ProgramCache): each entry's
+        # closure pins a device-resident copy of the padded per-edge
+        # datasets, so an unbounded cache would leak under ever-changing
+        # keys (e.g. fresh metric_fn lambdas).  A FleetServer can share
+        # this cache (FleetServer(cache=session.compile_cache)) so its
+        # cohorts and the session's verification runs count hits/misses
+        # against one pool.
         self._max_cached_programs = 8
+        self._programs = ProgramCache(self._max_cached_programs)
+        self._closed = False
         self._fastpath = None                           # last sync program
         self._fastpath_key = None
         self._async_fastpath = None                     # last async program
@@ -116,6 +123,10 @@ class ELSession:
     # -- internals -----------------------------------------------------------
 
     def _require_executor(self) -> EdgeExecutor:
+        if self._closed:
+            raise RuntimeError(
+                "this ELSession is closed (close() released its compiled "
+                "programs and device buffers); build a fresh session")
         if self._executor is None:
             raise RuntimeError("call .with_executor(...) before .run()")
         return self._executor
@@ -374,14 +385,44 @@ class ELSession:
         check_ingraph_support(cfg, self._require_executor(), caller=caller)
         return cfg
 
+    @property
+    def compile_cache(self) -> ProgramCache:
+        """The session's bounded compiled-program cache — pass it to a
+        ``FleetServer(cache=...)`` to share one pool (and one hit/miss
+        counter) between the server's cohorts and this session's
+        independent verification runs."""
+        return self._programs
+
+    def clear_compile_cache(self) -> int:
+        """Drop every cached compiled program AND the last-used aliases
+        that keep evicted programs alive.  Each program's closure pins a
+        device-resident copy of the padded per-edge datasets, so on a
+        long-lived server this is what actually releases device memory
+        (the buffers free once the GC collects the closures).  Returns
+        the number of cached programs dropped; the session stays usable
+        — the next run recompiles."""
+        n = self._programs.clear()
+        self._fastpath = self._fastpath_key = None
+        self._async_fastpath = self._async_key = None
+        self._sweep_program = self._sweep_key = None
+        return n
+
+    def close(self) -> None:
+        """Release everything the session pins on device: the compiled
+        programs (and the dataset copies their closures hold) plus the
+        initial-params reference.  After ``close()`` the session refuses
+        to run — build a fresh one instead (idempotent)."""
+        self.clear_compile_cache()
+        self._init_params = None
+        self._executor = None
+        self._closed = True
+
     def _cache_program(self, key: tuple, program: Any) -> Any:
         """Insert into the bounded FIFO program cache (oldest evicted;
         the last-used aliases keep an evicted program alive until the
         next run replaces them)."""
-        self._programs[key] = program
-        while len(self._programs) > self._max_cached_programs:
-            self._programs.pop(next(iter(self._programs)))
-        return program
+        self._programs.max_entries = self._max_cached_programs
+        return self._programs.put(key, program)
 
     def _jit_ingraph(self, core, knob_names, mesh, donate, params):
         """jit one of the compiled EL programs with the run's placement
@@ -458,28 +499,14 @@ class ELSession:
         params, out = jax.block_until_ready(
             program(params, jax.random.key(cfg.seed + 17),
                     sync_knobs(cfg)))
-        n = int(out["n_rounds"])
         records: List[RoundRecord] = []
-        for t in range(n):
-            self._emit(records, RoundRecord(
-                float(out["wall"][t]), float(out["consumed"][t]),
-                float(out["metric"][t]), float(out["utility"][t]),
-                float(out["interval"][t]), -1, t + 1))
+        for rec in records_from_out(out, 0, int(out["n_rounds"])):
+            self._emit(records, rec)
         final = ex.evaluate(params)[self.metric_name]
-        return ELReport(
-            records=records,
-            final_metric=float(final),
-            n_aggregations=n,
-            total_consumed=float(out["consumed"][n - 1]) if n else 0.0,
-            wall_time=float(out["wall_time"]),
-            terminated_reason=("max_rounds" if n >= max_rounds
-                               else "budget_exhausted"),
-            policy=cfg.policy,
-            mode="sync",
-            arm_pulls=[int(c) for c in np.asarray(out["arm_pulls"])],
-            elapsed_s=time.perf_counter() - t0,
-            final_params=params,
-        )
+        return report_from_out(
+            out, mode="sync", policy=cfg.policy, horizon=max_rounds,
+            final_metric=final, final_params=params,
+            elapsed_s=time.perf_counter() - t0, records=records)
 
     def run_async_ingraph(self, max_events: Optional[int] = None,
                           metric_fn: Optional[Callable] = None, *,
@@ -504,19 +531,17 @@ class ELSession:
         the session detects reuse and raises).
         """
         from repro.el.events import (ASYNC_KNOB_NAMES, async_knobs,
-                                     default_event_horizon,
-                                     make_async_program)
+                                     make_async_program,
+                                     padded_event_horizon)
         ex = self._require_executor()
         cfg = self._ingraph_cfg("run_async_ingraph", mode="async")
         t0 = time.perf_counter()
         if max_events is None:
-            # round the derived bound up to a power of two: the horizon
-            # is part of the compile cache key (it sizes the history
-            # arrays), so keying the exact budget/cost-dependent value
-            # would recompile on every knob change the traced inputs
-            # exist to absorb
-            horizon = max(64, 1 << (default_event_horizon(cfg) - 1)
-                          .bit_length())
+            # the padded (power-of-two) horizon: it is part of the
+            # compile cache key (it sizes the history arrays), so keying
+            # the exact budget/cost-dependent value would recompile on
+            # every knob change the traced inputs exist to absorb
+            horizon = padded_event_horizon(cfg)
         else:
             horizon = int(max_events)
         key = ("async", ex, self._structural_cfg(cfg), horizon, metric_fn,
@@ -534,30 +559,14 @@ class ELSession:
         params, out = jax.block_until_ready(
             program(params, jax.random.key(cfg.seed + 17),
                     async_knobs(cfg)))
-        n = int(out["n_rounds"])
         records: List[RoundRecord] = []
-        for t in range(n):
-            self._emit(records, RoundRecord(
-                float(out["wall"][t]), float(out["consumed"][t]),
-                float(out["metric"][t]), float(out["utility"][t]),
-                float(out["interval"][t]), int(out["edge"][t]), t + 1))
+        for rec in records_from_out(out, 0, int(out["n_rounds"])):
+            self._emit(records, rec)
         final = ex.evaluate(params)[self.metric_name]
-        pulls = np.asarray(out["arm_pulls"]).sum(axis=0)     # [E,K] -> [K]
-        return ELReport(
-            records=records,
-            final_metric=float(final),
-            n_aggregations=n,
-            total_consumed=float(out["consumed"][n - 1]) if n else 0.0,
-            wall_time=float(out["wall_time"]),
-            terminated_reason=("budget_exhausted"
-                               if int(out["n_active"]) == 0
-                               else "max_events"),
-            policy=cfg.policy,
-            mode="async",
-            arm_pulls=[int(c) for c in pulls],
-            elapsed_s=time.perf_counter() - t0,
-            final_params=params,
-        )
+        return report_from_out(
+            out, mode="async", policy=cfg.policy, horizon=horizon,
+            final_metric=final, final_params=params,
+            elapsed_s=time.perf_counter() - t0, records=records)
 
     # -- compiled ablation sweeps ---------------------------------------------
 

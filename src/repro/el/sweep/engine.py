@@ -18,18 +18,21 @@ propagation from the inputs.
 
 from __future__ import annotations
 
+import dataclasses
 import math
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.config import OL4ELConfig
 from repro.el.events.knobs import ASYNC_KNOB_NAMES, async_knobs
-from repro.el.events.program import make_async_program
-from repro.el.ingraph import KNOB_NAMES, make_sync_program, sync_knobs
+from repro.el.events.program import make_async_cell, make_async_program
+from repro.el.ingraph import (KNOB_NAMES, make_sync_cell,
+                              make_sync_program, sync_knobs)
 from repro.el.sweep.spec import SweepSpec
 # the knob-layout classification is shared with the single-run placement
 # (repro.sharding.el_run_partition_specs) — one source of truth for which
@@ -169,3 +172,151 @@ def run_sweep_program(program, init_params: Params,
     keys = cell_keys(cell_cfgs)
     params, out = jax.block_until_ready(program(init_params, keys, knobs))
     return params, {k: np.asarray(v) for k, v in out.items()}
+
+
+# ---------------------------------------------------------------------------
+# Steppable cell batches (the fleet data plane)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class CellBatch:
+    """A resumable slot-batched EL engine: the sweep's vmapped cell run
+    ``rounds_per_wave`` iterations at a time over a fixed ``[n_slots]``
+    batch with an activity mask, instead of to completion in one call.
+
+    Between waves the host may harvest finished slots (``take_slot`` /
+    ``finalize_slot``) and admit new tenants into the freed rows
+    (``init_slot`` + ``place``) — continuous batching over the EL
+    control plane.  Per-slot math is the unsharded :class:`ELCell`'s
+    ``cond``/``body`` verbatim; a slot applies ``body`` exactly as many
+    times as the single-run ``lax.while_loop`` would (``cond`` is a pure
+    function of carry + knobs), so every tenant's trajectory is
+    bit-identical to an independent ``run_sync_ingraph`` /
+    ``run_async_ingraph`` of that tenant alone.  Inactive slots run ZERO
+    body iterations per wave: their bandit state, budget, RNG, and
+    history are byte-for-byte frozen (the mask is inside the per-slot
+    loop condition, not a post-hoc select).
+
+    ``place`` and ``step`` donate the stacked carry, so a cohort
+    stepping for thousands of waves recycles one set of device buffers;
+    callers must treat the previous stacked value as consumed.
+    """
+
+    mode: str
+    n_slots: int
+    rounds_per_wave: int
+    horizon: int
+    #: (init_params, key, knobs_row) -> single-slot carry
+    init_slot: Callable
+    #: (carry_one) -> stacked carry with every row a copy (fills a fresh
+    #: batch; rows are only read after ``place`` overwrites them)
+    broadcast: Callable
+    #: (stacked, carry_one, slot) -> stacked with row ``slot`` replaced
+    #: (donates ``stacked``)
+    place: Callable
+    #: (stacked, slot) -> carry_one (a gather — safe before donation)
+    take_slot: Callable
+    #: (stacked, knobs_stacked, active[n_slots] bool) ->
+    #: (stacked', running[n_slots] bool); donates ``stacked``
+    step: Callable
+    #: (carry_one, knobs_row) -> (params, out) — the cell's finalize
+    finalize_slot: Callable
+
+
+def make_cell_batch(model, edge_data, eval_set, cfg: OL4ELConfig, *,
+                    n_slots: int, rounds_per_wave: int = 32,
+                    lr: float, batch: int,
+                    n_samples: Optional[np.ndarray] = None,
+                    metric_fn: Optional[Callable] = None,
+                    metric_name: str = "accuracy",
+                    horizon: int = 512,
+                    mesh=None) -> CellBatch:
+    """Build the steppable slot-batch engine for one structural config.
+
+    ``cfg`` contributes only structure (mode, n_edges, arch, utility,
+    horizon sizing); per-slot knob values and PRNG keys arrive at call
+    time, exactly as in :func:`make_sweep_program` — so one
+    ``CellBatch`` serves every tenant that shares the structure.
+    ``horizon`` is the compiled history length (``max_rounds`` sync,
+    ``max_events`` async); use :func:`padded_event_horizon` for async
+    cohorts so nearby budget points share one program.
+
+    With a ``mesh`` the slot dim of the stacked carry is constrained to
+    the cohort placement (:func:`repro.sharding.el_cohort_state_specs`)
+    inside ``step``; PRNG-key-typed leaves are left to GSPMD (key
+    arrays reject explicit layout constraints on some backends).
+    """
+    if cfg.mode == "async":
+        cell = make_async_cell(
+            model, edge_data, eval_set, cfg, lr=lr, batch=batch,
+            n_samples=n_samples, metric_fn=metric_fn,
+            metric_name=metric_name, max_events=horizon)
+    else:
+        cell = make_sync_cell(
+            model, edge_data, eval_set, cfg, lr=lr, batch=batch,
+            n_samples=n_samples, metric_fn=metric_fn,
+            metric_name=metric_name, max_rounds=horizon)
+
+    def _constrain(stacked):
+        if mesh is None:
+            return stacked
+        from repro.sharding import el_cohort_state_specs
+        specs = el_cohort_state_specs(mesh, n_slots, stacked)
+
+        def put(leaf, spec):
+            if jax.dtypes.issubdtype(leaf.dtype, jax.dtypes.prng_key):
+                return leaf
+            return lax.with_sharding_constraint(
+                leaf, NamedSharding(mesh, spec))
+
+        return jax.tree.map(put, stacked, specs)
+
+    def _init_slot(init_params, key, knobs_row):
+        return cell.init(init_params, key, knobs_row)
+
+    def _broadcast(carry_one):
+        return _constrain(jax.tree.map(
+            lambda leaf: jnp.broadcast_to(
+                leaf[None], (n_slots,) + leaf.shape), carry_one))
+
+    def _place(stacked, carry_one, slot):
+        return _constrain(jax.tree.map(
+            lambda s, one: s.at[slot].set(one), stacked, carry_one))
+
+    def _take_slot(stacked, slot):
+        return jax.tree.map(lambda s: s[slot], stacked)
+
+    def _step_one(carry, knobs, active):
+        # the mask lives INSIDE the loop condition: an inactive slot
+        # takes zero body iterations, so its carry (bandit counts,
+        # consumed budget, PRNG key, history) is returned untouched
+        def wave_cond(ci):
+            c, i = ci
+            return (i < rounds_per_wave) & active & cell.cond(c, knobs)
+
+        def wave_body(ci):
+            c, i = ci
+            return cell.body(c, knobs), i + jnp.int32(1)
+
+        carry, _ = lax.while_loop(wave_cond, wave_body,
+                                  (carry, jnp.int32(0)))
+        return carry, active & cell.cond(carry, knobs)
+
+    def _step(stacked, knobs_stacked, active):
+        stacked, running = jax.vmap(_step_one)(
+            stacked, knobs_stacked, active)
+        return _constrain(stacked), running
+
+    def _finalize_slot(carry_one, knobs_row):
+        return cell.finalize(carry_one, knobs_row)
+
+    return CellBatch(
+        mode=cfg.mode, n_slots=n_slots, rounds_per_wave=rounds_per_wave,
+        horizon=horizon,
+        init_slot=jax.jit(_init_slot),
+        broadcast=jax.jit(_broadcast),
+        place=jax.jit(_place, donate_argnums=(0,)),
+        take_slot=jax.jit(_take_slot),
+        step=jax.jit(_step, donate_argnums=(0,)),
+        finalize_slot=jax.jit(_finalize_slot))

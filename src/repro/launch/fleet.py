@@ -1,0 +1,195 @@
+"""Multi-tenant EL-as-a-service launcher.
+
+    PYTHONPATH=src python -m repro.launch.fleet --demo
+    PYTHONPATH=src python -m repro.launch.fleet --manifest tenants.yaml \
+        --mesh debug --slots 4
+
+Feeds a manifest of tenant runs (JSON or YAML; see ``--demo`` for the
+shape) into a :class:`repro.el.fleet.FleetServer`: tenants bucket into
+cohorts by structural config — one compiled slot-batch program per
+cohort — and are served in slot waves with mid-flight refill, their
+reports streamed as they complete.
+
+``--mesh debug`` shards every cohort's slot dim over a host-device mesh
+(the production placement, CPU-emulated); ``REPRO_SWEEP_DEVICES`` sets
+the forced device count (default 4 → a 2x2 mesh).  ``--assert-compiles``
+exits non-zero unless the server compiled exactly that many cohort
+programs — the CI smoke uses it to pin "one compile per cohort".
+"""
+
+from __future__ import annotations
+
+from repro.launch.hostdev import force_host_devices
+
+force_host_devices()     # must precede the jax import (emulated fleet)
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+from typing import Any, Dict, List
+
+import jax
+
+from repro.config import CLASSIC_IDS
+from repro.el.fleet import FleetServer, ReportReady, RoundDelta, TenantRun
+from repro.launch.classic import classic_fixture
+from repro.launch.mesh import make_debug_mesh_for
+
+#: the --demo manifest: 8 tenants across TWO structural cohorts — a sync
+#: SVM cohort and an async K-means cohort (the async budgets all pad to
+#: one event horizon, so they share a program).  Doubles as the CI fleet
+#: smoke workload.
+DEMO_MANIFEST: Dict[str, Any] = {
+    "tenants": [
+        {"arch": "svm-wafer", "mode": "sync", "budget": 900.0,
+         "ucb_c": 1.0, "seed": 0},
+        {"arch": "svm-wafer", "mode": "sync", "budget": 1500.0,
+         "ucb_c": 0.5, "seed": 1, "priority": 2},
+        {"arch": "svm-wafer", "mode": "sync", "budget": 600.0,
+         "ucb_c": 2.0, "seed": 2},
+        {"arch": "svm-wafer", "mode": "sync", "budget": 1200.0,
+         "ucb_c": 1.0, "seed": 3},
+        {"arch": "kmeans-traffic", "mode": "async", "budget": 700.0,
+         "ucb_c": 1.0, "seed": 4},
+        {"arch": "kmeans-traffic", "mode": "async", "budget": 800.0,
+         "ucb_c": 0.7, "seed": 5, "priority": 1},
+        {"arch": "kmeans-traffic", "mode": "async", "budget": 850.0,
+         "ucb_c": 1.5, "seed": 6},
+        {"arch": "kmeans-traffic", "mode": "async", "budget": 900.0,
+         "ucb_c": 1.0, "seed": 7},
+    ],
+}
+
+
+def load_manifest(path: str) -> Dict[str, Any]:
+    with open(path) as f:
+        text = f.read()
+    if path.endswith((".yaml", ".yml")):
+        import yaml
+        return yaml.safe_load(text)
+    return json.loads(text)
+
+
+def tenant_runs(manifest: Dict[str, Any], args) -> List[TenantRun]:
+    """Materialize the manifest: one data-plane fixture per (arch,
+    dataset) — tenants of a cohort must SHARE an executor, that is what
+    buckets them onto one compiled program."""
+    fixtures: Dict[tuple, Dict[str, Any]] = {}
+    runs: List[TenantRun] = []
+    for t in manifest["tenants"]:
+        arch = t["arch"]
+        if arch not in CLASSIC_IDS:
+            raise SystemExit(f"unknown arch {arch!r} (choices: "
+                             f"{sorted(CLASSIC_IDS)})")
+        fkey = (arch, t.get("samples", args.samples),
+                t.get("edges", args.edges), t.get("alpha", args.alpha),
+                t.get("data_seed", args.data_seed))
+        fx = fixtures.get(fkey)
+        if fx is None:
+            fx = fixtures[fkey] = classic_fixture(
+                arch, samples=fkey[1], n_edges=fkey[2], alpha=fkey[3],
+                data_seed=fkey[4])
+        mode = t.get("mode", "sync")
+        ol = dataclasses.replace(
+            fx["exp"].ol4el, mode=mode, policy="ol4el",
+            n_edges=fkey[2], utility=fx["utility"],
+            budget=float(t.get("budget", fx["exp"].ol4el.budget)),
+            ucb_c=float(t.get("ucb_c", fx["exp"].ol4el.ucb_c)),
+            seed=int(t.get("seed", 0)))
+        runs.append(TenantRun(
+            cfg=ol, executor=fx["executor"],
+            tenant_id=t.get("tenant_id"),
+            priority=int(t.get("priority", 0)),
+            metric_name=fx["metric"],
+            n_samples=fx["n_samples"] if mode == "sync" else None,
+            init_params=fx["init_params"]))
+    return runs
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(
+        description="serve a manifest of EL tenants as slot-batched "
+                    "cohorts")
+    ap.add_argument("--manifest", default=None,
+                    help="JSON/YAML tenant manifest (see --demo)")
+    ap.add_argument("--demo", action="store_true",
+                    help="run the built-in 8-tenant / 2-cohort demo "
+                         "manifest")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="cohort batch width (tenants beyond it queue)")
+    ap.add_argument("--rounds-per-wave", type=int, default=8,
+                    help="device iterations between host harvest points")
+    ap.add_argument("--samples", type=int, default=512,
+                    help="default dataset size per arch fixture")
+    ap.add_argument("--edges", type=int, default=4)
+    ap.add_argument("--alpha", type=float, default=100.0)
+    ap.add_argument("--data-seed", type=int, default=0)
+    ap.add_argument("--mesh", default="none", choices=["none", "debug"],
+                    help="'debug': shard every cohort's slot dim over a "
+                         "host-device mesh")
+    ap.add_argument("--assert-compiles", type=int, default=None,
+                    metavar="N",
+                    help="exit non-zero unless exactly N cohort programs "
+                         "were compiled (CI: one per cohort)")
+    ap.add_argument("--verbose", action="store_true",
+                    help="print every streamed round delta")
+    args = ap.parse_args()
+
+    if args.demo == (args.manifest is not None):
+        ap.error("pass exactly one of --demo / --manifest")
+    manifest = DEMO_MANIFEST if args.demo else load_manifest(args.manifest)
+
+    mesh = None
+    if args.mesh == "debug":
+        mesh = make_debug_mesh_for(jax.device_count())
+    server = FleetServer(n_slots=args.slots,
+                         rounds_per_wave=args.rounds_per_wave, mesh=mesh)
+
+    def on_event(ev):
+        if isinstance(ev, RoundDelta) and args.verbose:
+            r = ev.record
+            print(f"  [{ev.tenant_id}] agg {r.n_aggregations}: "
+                  f"consumed={r.total_consumed:.0f} "
+                  f"utility={r.utility:.4f}", flush=True)
+        elif isinstance(ev, ReportReady):
+            print(f"done {ev.tenant_id}: {ev.report.summary()}",
+                  flush=True)
+
+    server.subscribe(on_event)
+    runs = tenant_runs(manifest, args)
+    t0 = time.perf_counter()
+    ids = [server.submit(run) for run in runs]
+    print(f"fleet: {len(ids)} tenants, slots={args.slots}, "
+          f"wave={args.rounds_per_wave}"
+          + (f", mesh {tuple(mesh.shape.items())}" if mesh else ""),
+          flush=True)
+    reports = server.drain()
+    elapsed = time.perf_counter() - t0
+
+    st = server.stats()
+    print(f"\n{'tenant':>12s} {'mode':>6s} {'rounds':>6s} "
+          f"{'consumed':>9s} {'metric':>8s}  reason")
+    for tid in ids:
+        r = reports[tid]
+        print(f"{tid:>12s} {r.mode:>6s} {r.n_aggregations:6d} "
+              f"{r.total_consumed:9.0f} {r.final_metric:8.4f}  "
+              f"{r.terminated_reason}")
+    print(f"\n{len(reports)}/{len(ids)} reports in {elapsed:.2f}s — "
+          f"{st['cohorts']} cohorts, {st['compiles']} compiles "
+          f"({st['cache_hits']} cache hits), {st['waves']} waves")
+
+    if len(reports) != len(ids):
+        print("ERROR: missing tenant reports", file=sys.stderr)
+        raise SystemExit(1)
+    if (args.assert_compiles is not None
+            and st["compiles"] != args.assert_compiles):
+        print(f"ERROR: expected {args.assert_compiles} cohort compiles, "
+              f"got {st['compiles']} (cohorts={st['cohorts']})",
+              file=sys.stderr)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -55,6 +55,8 @@ class ServingEngine:
         self.slot_req: List[Optional[Request]] = [None] * n_slots
         self.waiting: List[Request] = []
         self._decode = jax.jit(model.decode_step)
+        self._last_tok = None
+        self._cur_len = 0          # shared position of every live slot
 
     # -- queue API -----------------------------------------------------------
 
@@ -90,14 +92,90 @@ class ServingEngine:
 
     # -- main loop -------------------------------------------------------------
 
+    @staticmethod
+    def _prompt_len(req: Request) -> int:
+        p = np.asarray(req.prompt)
+        return int(p.shape[-1])
+
+    def _pad_prompt(self, req: Request, to_len: int) -> np.ndarray:
+        p = np.asarray(req.prompt)
+        pad = to_len - p.shape[-1]
+        if p.ndim == 1:
+            return np.pad(p, (pad, 0))
+        return np.pad(p, ((0, 0), (pad, 0)))
+
+    def _admit_free_slots(self, completed: List[Request]) -> None:
+        """Mid-flight admission: fill free slots from the queue without
+        resetting the wave.  A queued prompt joins only if it fits the
+        slots' shared position (left-padded to ``_cur_len``); it is
+        prefilled on a scratch cache and only the admitted slots' cache
+        rows are scattered into the live cache, so occupied slots'
+        state is untouched.  Longer prompts stay queued until the batch
+        drains and a fresh wave restarts at their length."""
+        free = [s for s, r in enumerate(self.slot_req) if r is None]
+        admitted: List[int] = []
+        keep: List[Request] = []
+        for req in self.waiting:
+            if free and self._prompt_len(req) <= self._cur_len:
+                slot = free.pop(0)
+                self.slot_req[slot] = req
+                admitted.append(slot)
+            else:
+                keep.append(req)
+        self.waiting = keep
+        if not admitted:
+            return
+        shape = np.asarray(self.slot_req[admitted[0]].prompt).shape
+        batch = np.zeros((self.n_slots,) + shape[:-1] + (self._cur_len,),
+                         np.int32)
+        for slot in admitted:
+            batch[slot] = self._pad_prompt(self.slot_req[slot],
+                                           self._cur_len)
+        scratch = self.model.init_cache(self.n_slots, self.max_len)
+        logits, scratch = self.model.prefill(
+            self.params, jnp.asarray(batch), scratch)
+        rows = np.asarray(admitted)
+        # scan-stacked "groups" caches carry a leading [n_groups] dim
+        # (their batch axis is 1); everything else is batch-leading.
+        # Scalar leaves (the shared position index) are equal by
+        # construction — live and scratch both sit at _cur_len.
+        groups_stacked = not isinstance(self.cache.get("groups"), list)
+
+        def scatter(path, live, new):
+            if getattr(live, "ndim", 0) == 0:
+                return live
+            axis = 1 if (groups_stacked and path
+                         and getattr(path[0], "key", None) == "groups"
+                         and live.ndim >= 2) else 0
+            if live.shape[axis] != self.n_slots:
+                return live
+            if axis == 0:
+                return live.at[rows].set(new[rows])
+            return live.at[:, rows].set(new[:, rows])
+
+        self.cache = jax.tree_util.tree_map_with_path(
+            scatter, self.cache, scratch)
+        tok = self._sample(logits, self._slot_temperatures())
+        last = jnp.asarray(self._last_tok)
+        for slot in admitted:
+            last = last.at[slot].set(tok[slot])
+        self._last_tok = last
+        flat = np.asarray(tok).reshape(self.n_slots, -1)
+        for slot in admitted:
+            self._append_and_check(slot, self.slot_req[slot],
+                                   int(flat[slot, 0]), completed)
+
     def step(self) -> List[Request]:
         """Admit + decode one step. Returns requests completed this step.
 
-        Simplified continuous batching: all active slots share one decode
-        cadence; admission happens whenever a slot is free.  To keep the
-        single shared ``index`` consistent across slots, the engine admits
-        only when the queue position matches — prompts are left-padded to
-        the current shared length (standard same-length batching).
+        Continuous batching: all active slots share one decode cadence,
+        and admission happens whenever a slot is free — a queued request
+        whose prompt fits the shared position is left-padded to
+        ``_cur_len``, prefilled on a scratch cache and scattered into
+        its slot mid-flight, while the other slots keep decoding.  An
+        empty batch restarts a fresh wave at the longest queued prompt's
+        length (which is how prompts longer than the shared position
+        eventually admit).
         """
         completed: List[Request] = []
         # admission: all slots empty -> start a fresh generation wave
@@ -105,23 +183,17 @@ class ServingEngine:
             wave = self.waiting[: self.n_slots]
             self.waiting = self.waiting[len(wave):]
             self.cache = self.model.init_cache(self.n_slots, self.max_len)
-            max_prompt = max(len(r.prompt if r.prompt.ndim == 1
-                                 else r.prompt[0]) for r in wave)
+            max_prompt = max(self._prompt_len(r) for r in wave)
             prompts = []
             for slot, req in enumerate(wave):
                 self.slot_req[slot] = req
-                p = np.asarray(req.prompt)
-                pad = max_prompt - (len(p) if p.ndim == 1 else p.shape[-1])
-                if p.ndim == 1:
-                    p = np.pad(p, (pad, 0))
-                else:
-                    p = np.pad(p, ((0, 0), (pad, 0)))
-                prompts.append(p)
+                prompts.append(self._pad_prompt(req, max_prompt))
             batch = np.zeros((self.n_slots,) + prompts[0].shape, np.int32)
             for i, p in enumerate(prompts):
                 batch[i] = p
             logits, self.cache = self.model.prefill(
                 self.params, jnp.asarray(batch), self.cache)
+            self._cur_len = max_prompt
             tok = self._sample(logits, self._slot_temperatures())
             self._last_tok = tok
             flat = np.asarray(tok).reshape(self.n_slots, -1)
@@ -134,6 +206,12 @@ class ServingEngine:
         if self.active == 0:
             return completed
 
+        # free-slot refill before the lock-step decode
+        if self.waiting and self.active < self.n_slots:
+            self._admit_free_slots(completed)
+            if self.active == 0:         # everything admitted finished at
+                return completed         # its first token (EOS / max=1)
+
         # decode step for all active slots
         tok = self._last_tok
         if self.cfg.n_codebooks > 1:
@@ -143,6 +221,7 @@ class ServingEngine:
         logits, self.cache = self._decode(self.params,
                                           jnp.asarray(inp, jnp.int32),
                                           self.cache)
+        self._cur_len += 1
         tok = self._sample(logits, self._slot_temperatures())
         self._last_tok = tok
         flat = np.asarray(tok).reshape(self.n_slots, -1)

@@ -308,6 +308,36 @@ def el_stacked_param_specs(mesh: Mesh, n_edges: int,
     return jax.tree_util.tree_map_with_path(leaf_spec, stacked_params)
 
 
+def el_cohort_slot_axes(axis_names: Sequence[str],
+                        axis_sizes: Dict[str, int],
+                        n_slots: int) -> Optional[Tuple[str, ...]]:
+    """Mesh axes a fleet cohort's ``[n_slots, ...]`` tenant-slot dim
+    shards over: the (``pod``, ``data``) axes when the slot count tiles
+    them, replication otherwise — the same tiles-or-replicates policy as
+    the single-run edge dim (:func:`el_edge_dim_axes`), because a
+    cohort's slot dim *is* its batch dim.  Pure (no devices)."""
+    return el_edge_dim_axes(axis_names, axis_sizes, n_slots)
+
+
+def el_cohort_state_specs(mesh: Mesh, n_slots: int, state: Any) -> Any:
+    """PartitionSpecs for a cohort's slot-stacked carry/knob pytree:
+    every leaf with a leading ``[n_slots]`` dim shards that dim over the
+    cohort slot axes (inner dims replicated — classic-model tensors are
+    tiny; the per-slot math is the unsharded cell's, which is what keeps
+    fleet runs bit-identical to single runs), anything else replicates.
+    ``state`` may hold tracers — only ``.shape`` is read."""
+    ea = el_cohort_slot_axes(mesh.axis_names, dict(
+        zip(mesh.axis_names, mesh.devices.shape)), n_slots)
+
+    def leaf_spec(leaf) -> P:
+        nd = len(leaf.shape)
+        if ea and nd >= 1 and leaf.shape[0] == n_slots:
+            return P(ea, *([None] * (nd - 1)))
+        return P(*([None] * nd))
+
+    return jax.tree.map(leaf_spec, state)
+
+
 def el_run_in_shardings(mesh: Mesh, model_cfg: Optional[ModelConfig],
                         params_shape: Any,
                         knob_names: Sequence[str]) -> Tuple[Any, ...]:

@@ -322,3 +322,54 @@ def test_run_el_routes_ingraph_async_through_event_program():
     assert r.n_aggregations > 0
     # per-event records carry the completing edge
     assert {rec.edge for rec in r.records} <= {0, 1, 2}
+
+
+# ---------------------------------------------------------------------------
+# compile-cache lifecycle: bounded pool, close(), device-buffer release
+# ---------------------------------------------------------------------------
+
+
+def test_program_cache_counts_and_evicts_fifo():
+    from repro.el.cache import ProgramCache
+    c = ProgramCache(max_entries=2)
+    c.put("a", 1)
+    c.put("b", 2)
+    assert c.get("a") == 1 and c.hits == 1 and c.misses == 0
+    assert c.get("zzz") is None and c.misses == 1
+    c.put("c", 3)                       # evicts "a" (FIFO)
+    assert "a" not in c and c.get("b") == 2 and c.get("c") == 3
+    assert len(c) == 2
+    assert c.clear() == 2 and len(c) == 0
+
+
+def test_clear_compile_cache_reports_dropped_programs():
+    s = _svm_session("sync", budget=600.0)
+    s.run_sync_ingraph(max_rounds=64)
+    assert len(s.compile_cache) == 1
+    assert s.clear_compile_cache() == 1
+    assert len(s.compile_cache) == 0
+    # session stays usable: the next run recompiles into the pool
+    r = s.run_sync_ingraph(max_rounds=64)
+    assert r.n_aggregations > 0 and len(s.compile_cache) == 1
+
+
+def test_close_frees_device_buffers_and_refuses_runs():
+    """close() must actually release device memory: each compiled
+    program's closure pins padded device copies of the per-edge
+    datasets, so the live-buffer count has to DROP once the cache (and
+    the session's params reference) is dropped."""
+    import gc
+    s = _svm_session("sync", budget=600.0)
+    r = s.run_sync_ingraph(max_rounds=64)
+    del r                               # report holds final_params
+    gc.collect()
+    before = len(jax.live_arrays())
+    s.close()
+    gc.collect()
+    after = len(jax.live_arrays())
+    assert after < before, (before, after)
+    with pytest.raises(RuntimeError, match="closed"):
+        s.run_sync_ingraph(max_rounds=64)
+    with pytest.raises(RuntimeError, match="closed"):
+        s.run_sync()
+    s.close()                           # idempotent

@@ -71,6 +71,72 @@ def test_engine_matches_single_request_decode():
     assert solo == batched
 
 
+def test_engine_admits_into_free_slot_mid_flight():
+    """Regression: ``step()`` promised free-slot admission but only
+    admitted when ALL slots were empty — a queued request now joins as
+    soon as any slot frees, while the others keep decoding."""
+    cfg, eng = _engine(n_slots=2)
+    rng = np.random.default_rng(2)
+    p = lambda n: rng.integers(0, cfg.model.vocab_size,
+                               size=n).astype(np.int32)
+    eng.submit(Request(uid=0, prompt=p(8), max_new_tokens=3))
+    eng.submit(Request(uid=1, prompt=p(8), max_new_tokens=9))
+    eng.submit(Request(uid=2, prompt=p(6), max_new_tokens=4))
+    done = []
+    for _ in range(3):                  # prefill + 2 decodes: uid0 exits
+        done += eng.step()
+    assert [r.uid for r in done] == [0]
+    assert eng.active == 1 and len(eng.waiting) == 1
+    done += eng.step()                  # uid2 admits into the freed slot
+    assert eng.active == 2 and not eng.waiting
+    assert {r.uid for r in eng.slot_req if r is not None} == {1, 2}
+    done += eng.run()
+    assert sorted(r.uid for r in done) == [0, 1, 2]
+    assert all(len(r.output) == r.max_new_tokens for r in done)
+
+
+def test_engine_mid_flight_admission_matches_solo_decode():
+    """A greedy request admitted mid-flight decodes exactly like a solo
+    run of the same (position-aligned) prompt — the scratch-cache
+    prefill + row scatter must not disturb numerics."""
+    cfg, eng = _engine(n_slots=2)
+    prompt = np.arange(2, 8, dtype=np.int32)        # len 6 < cur_len 8
+    eng.submit(Request(uid=0, prompt=np.arange(1, 9, dtype=np.int32),
+                       max_new_tokens=3))
+    eng.submit(Request(uid=1, prompt=np.arange(3, 11, dtype=np.int32),
+                       max_new_tokens=9))
+    eng.submit(Request(uid=2, prompt=prompt, max_new_tokens=4))
+    batched = [r for r in eng.run() if r.uid == 2][0].output
+
+    # uid0 exits after 3 tokens (prefill + 2 decodes), so uid2 admits at
+    # shared position 10 — the solo twin runs the same left-padded prompt
+    cfg, solo = _engine(n_slots=1)
+    solo.submit(Request(uid=2, prompt=np.pad(prompt, (10 - len(prompt), 0)),
+                        max_new_tokens=4))
+    assert solo.run()[0].output == batched
+
+
+def test_engine_defers_prompt_longer_than_shared_position():
+    """A queued prompt longer than the slots' shared position cannot be
+    position-aligned mid-flight; it waits for the next fresh wave (and
+    still completes)."""
+    cfg, eng = _engine(n_slots=2)
+    rng = np.random.default_rng(3)
+    p = lambda n: rng.integers(0, cfg.model.vocab_size,
+                               size=n).astype(np.int32)
+    eng.submit(Request(uid=0, prompt=p(8), max_new_tokens=3))
+    eng.submit(Request(uid=1, prompt=p(8), max_new_tokens=5))
+    eng.submit(Request(uid=2, prompt=p(40), max_new_tokens=2))
+    done = []
+    for _ in range(4):
+        done += eng.step()
+    # uid0 exited, but uid2 (longer than the shared position) must wait
+    assert eng.active == 1 and len(eng.waiting) == 1
+    done += eng.run()
+    assert sorted(r.uid for r in done) == [0, 1, 2]
+    assert all(len(r.output) == r.max_new_tokens for r in done)
+
+
 def test_engine_per_slot_temperature():
     """Each slot samples with its own request's temperature (regression:
     the whole batch used to inherit the first slot's temperature, so a
