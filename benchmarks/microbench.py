@@ -14,14 +14,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-
-def _time(fn, n=50, warmup=3) -> float:
-    for _ in range(warmup):
-        fn()
-    t0 = time.perf_counter()
-    for _ in range(n):
-        fn()
-    return (time.perf_counter() - t0) * 1e6 / n
+# the shared wall-clock helper (repro.obs.timing) — this module's old
+# private ``_time`` copy, now one implementation for every bench
+from repro.obs.timing import timeit_us as _time
 
 
 def run(quiet: bool = False, sharded: bool = False,
@@ -132,6 +127,22 @@ def run(quiet: bool = False, sharded: bool = False,
         name="el_sync_ingraph_per_round", us_per_call=ing_us,
         derived=f"acc={ing.final_metric:.3f},"
                 f"speedup={host_us / max(ing_us, 1e-9):.1f}x_vs_host"))
+
+    # in-graph telemetry rings (repro.obs): per-round cost of the
+    # instrumented sync program vs the bare one — both warm, min-of-3
+    # (the acceptance bound is <10% overhead per round)
+    from repro.obs.timing import repeat_s
+    sess.run_sync_ingraph(telemetry=64)         # compile instrumented
+    off_us = min(repeat_s(sess.run_sync_ingraph, 3)) * 1e6 \
+        / max(ing.n_aggregations, 1)
+    on = sess.run_sync_ingraph(telemetry=64)
+    on_us = min(repeat_s(lambda: sess.run_sync_ingraph(telemetry=64),
+                         3)) * 1e6 / max(on.n_aggregations, 1)
+    rows.append(dict(
+        name="el_telemetry_overhead_per_round",
+        us_per_call=max(on_us - off_us, 0.0),
+        derived=f"on={on_us:.0f}us,off={off_us:.0f}us,overhead="
+                f"{(on_us - off_us) / max(off_us, 1e-9) * 100:.1f}pct"))
 
     # host-driven async event queue vs the fully in-graph event-horizon
     # program (repro.el.events: argmin finish-times + masked merges, no

@@ -11,6 +11,10 @@ of every execution tier:
   * ``ingraph_donate``  — same program with the initial params' buffers
                           donated (XLA aliases them into the output:
                           in-place fleet update instead of a copy);
+  * ``ingraph_telemetry`` — the program with the ``repro.obs`` in-graph
+                          telemetry rings recording every round; against
+                          the bare ``ingraph`` row this bounds the
+                          observability overhead (acceptance: <10%);
   * ``sharded``         — the program pjit-sharded over a debug mesh
                           built from forced host devices (edge dim over
                           ``data``, model tensors over ``model``), the
@@ -49,7 +53,6 @@ force_host_devices("--devices", skip=(), count_from_flag=True,
 import argparse
 import dataclasses
 import json
-import time
 
 import jax
 import numpy as np
@@ -59,6 +62,7 @@ from repro.el.events import ASYNC_KNOB_NAMES, async_knobs, make_async_program
 from repro.el.ingraph import KNOB_NAMES, make_sync_program, sync_knobs
 from repro.launch.classic import classic_fixture
 from repro.launch.mesh import make_debug_mesh_for
+from repro.obs.timing import repeat_s, time_block
 from repro.sharding import el_run_in_shardings
 
 
@@ -91,19 +95,20 @@ def _memory(jfn, example_args):
         return {"peak_live_bytes": None, "memory_error": str(e)[:120]}
 
 
-def bench_compiled(model, ex, ol, ns, mode, mesh, donate, args):
+def bench_compiled(model, ex, ol, ns, mode, mesh, donate, args,
+                   telemetry=None):
     """Time one compiled-program tier and read its memory analysis."""
     cfg = dataclasses.replace(ol, mode=mode)
     if mode == "sync":
         core = make_sync_program(
             model, ex.edge_data, ex.eval_set, cfg, lr=ex.lr, batch=ex.batch,
             n_samples=np.asarray(ns, np.float64),
-            max_rounds=args.max_rounds, mesh=mesh)
+            max_rounds=args.max_rounds, mesh=mesh, telemetry=telemetry)
         knobs, knob_names = sync_knobs(cfg), KNOB_NAMES
     else:
         core = make_async_program(
             model, ex.edge_data, ex.eval_set, cfg, lr=ex.lr, batch=ex.batch,
-            max_events=args.max_events, mesh=mesh)
+            max_events=args.max_events, mesh=mesh, telemetry=telemetry)
         knobs, knob_names = async_knobs(cfg), ASYNC_KNOB_NAMES
     params0 = model.init(jax.random.key(0))
     rng = jax.random.key(cfg.seed + 17)
@@ -121,11 +126,9 @@ def bench_compiled(model, ex, ol, ns, mode, mesh, donate, args):
 
     _, out = jax.block_until_ready(jfn(fresh(), rng, knobs))   # compile
     n_agg = int(out["n_rounds"])
-    reps = []
-    for _ in range(args.repeats):
-        t0 = time.perf_counter()
-        jax.block_until_ready(jfn(fresh(), rng, knobs))
-        reps.append((time.perf_counter() - t0) * 1e6)
+    reps = [s * 1e6 for s in repeat_s(
+        lambda: jax.block_until_ready(jfn(fresh(), rng, knobs)),
+        args.repeats)]
     # min-of-repeats: the host is a shared CPU, so the floor is the
     # honest per-program cost (the mean rides scheduler noise)
     dt_us = min(reps)
@@ -150,9 +153,9 @@ def bench_host(model, ex, ol, ns, mode):
         return s.run_sync() if mode == "sync" else s.run_async()
 
     run()                                       # warm the executor jits
-    t0 = time.perf_counter()
-    rep = run()
-    dt_us = (time.perf_counter() - t0) * 1e6
+    with time_block() as tb:
+        rep = run()
+    dt_us = tb.us
     return {"n_aggregations": rep.n_aggregations,
             "us_per_aggregation": dt_us / max(rep.n_aggregations, 1),
             "wall_us": dt_us, "peak_live_bytes": None}
@@ -171,6 +174,9 @@ def main(argv=None) -> None:
     ap.add_argument("--max-rounds", type=int, default=64)
     ap.add_argument("--max-events", type=int, default=256)
     ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--telemetry-ring", type=int, default=64,
+                    help="ring length of the el_*_ingraph_telemetry "
+                         "tiers (repro.obs in-graph rings)")
     ap.add_argument("--skip-host", action="store_true",
                     help="omit the slow host-loop baselines")
     ap.add_argument("--out", default="BENCH_el.json")
@@ -181,22 +187,34 @@ def main(argv=None) -> None:
     model, ex, ol, ns = _fixture(args)
 
     rows = {}
-    tiers = [("ingraph", None, False), ("ingraph_donate", None, True),
-             ("sharded", mesh, False), ("sharded_donate", mesh, True)]
+    tiers = [("ingraph", None, False, None),
+             ("ingraph_donate", None, True, None),
+             ("ingraph_telemetry", None, False, args.telemetry_ring),
+             ("sharded", mesh, False, None),
+             ("sharded_donate", mesh, True, None)]
     for mode in ("sync", "async"):
         if not args.skip_host:
             rows[f"el_{mode}_host"] = bench_host(model, ex, ol, ns, mode)
             print(f"el_{mode}_host: "
                   f"{rows[f'el_{mode}_host']['us_per_aggregation']:.0f} "
                   "us/agg", flush=True)
-        for name, m, donate in tiers:
-            row = bench_compiled(model, ex, ol, ns, mode, m, donate, args)
+        for name, m, donate, telem in tiers:
+            row = bench_compiled(model, ex, ol, ns, mode, m, donate, args,
+                                 telemetry=telem)
             rows[f"el_{mode}_{name}"] = row
             peak = row.get("peak_live_bytes")
             print(f"el_{mode}_{name}: {row['us_per_aggregation']:.0f} "
                   f"us/agg, peak "
                   f"{peak if peak is None else f'{peak / 1e6:.2f}MB'}",
                   flush=True)
+        # the instrumented program's per-round cost vs the bare one —
+        # the repro.obs acceptance bound is <10%
+        base = rows[f"el_{mode}_ingraph"]["us_per_aggregation"]
+        trow = rows[f"el_{mode}_ingraph_telemetry"]
+        trow["overhead_vs_ingraph_pct"] = (
+            (trow["us_per_aggregation"] - base) / max(base, 1e-9) * 100)
+        print(f"el_{mode}_ingraph_telemetry overhead: "
+              f"{trow['overhead_vs_ingraph_pct']:+.1f}%", flush=True)
 
     report = {
         "meta": {

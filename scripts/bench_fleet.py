@@ -48,7 +48,6 @@ force_host_devices("--devices", skip=(), count_from_flag=True,
 import argparse
 import dataclasses
 import json
-import time
 from typing import List
 
 import jax
@@ -57,6 +56,7 @@ from repro.el import ELSession, TenantRun
 from repro.el.cache import ProgramCache
 from repro.el.fleet import FleetServer
 from repro.launch.classic import classic_fixture
+from repro.obs.timing import repeat_s
 
 #: per-tenant knob grids — every combination is the SAME structural
 #: config, so the whole population is one cohort / one compile
@@ -102,11 +102,9 @@ def bench_sequential(fx, base, n: int, args, ingraph: bool) -> dict:
         return total
 
     run_all(1)                              # warm the jits / compile once
-    reps, n_agg = [], 0
-    for _ in range(args.repeats):
-        t0 = time.perf_counter()
-        n_agg = run_all(n)
-        reps.append(time.perf_counter() - t0)
+    last = {}
+    reps = repeat_s(lambda: last.update(n_agg=run_all(n)), args.repeats)
+    n_agg = last["n_agg"]
     wall = min(reps)
     return {"tenants": n, "wall_s": wall,
             "tenants_per_sec": n / wall,
@@ -141,12 +139,11 @@ def bench_fleet(fx, base, n: int, args) -> dict:
         return reports, st
 
     serve(args.slots)                       # compile the cohort program
-    reps, stats, n_agg = [], None, 0
-    for _ in range(args.repeats):
-        t0 = time.perf_counter()
-        reports, stats = serve(n)
-        reps.append(time.perf_counter() - t0)
-        n_agg = sum(r.n_aggregations for r in reports.values())
+    last = {}
+    reps = repeat_s(lambda: last.update(zip(("reports", "stats"),
+                                            serve(n))), args.repeats)
+    stats = last["stats"]
+    n_agg = sum(r.n_aggregations for r in last["reports"].values())
     wall = min(reps)
     return {"tenants": n, "wall_s": wall,
             "tenants_per_sec": n / wall,

@@ -20,9 +20,14 @@ class ProgramCache:
 
     Mapping-shaped on purpose: ``len`` / ``in`` / iteration behave like
     the plain dict it replaces, so session internals (and the tests that
-    poke them) keep working.  ``hits`` / ``misses`` count ``get()``
-    outcomes — a fleet cohort compiles exactly once iff every later
-    lookup of its key is a hit.
+    poke them) keep working.  ``hits`` / ``misses`` / ``evictions``
+    count ``get()``/``put()`` outcomes — a fleet cohort compiles exactly
+    once iff every later lookup of its key is a hit — and are surfaced
+    as a snapshot by :meth:`stats` (``ELReport.telemetry["cache"]``,
+    the fleet CLI summary line).  Lookups and evictions also emit
+    ``cache.hit`` / ``cache.miss`` / ``cache.evict`` events on the
+    process tracer (``repro.obs.trace``), so a JSONL span stream shows
+    exactly when a server recompiled.
     """
 
     def __init__(self, max_entries: int = 8):
@@ -30,23 +35,40 @@ class ProgramCache:
         self._entries: Dict[tuple, Any] = {}
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
 
     def get(self, key: tuple, default: Optional[Any] = None) -> Any:
+        from repro.obs import trace
         entry = self._entries.get(key, default)
         if entry is default:
             self.misses += 1
+            trace.event("cache.miss", misses=self.misses)
         else:
             self.hits += 1
+            trace.event("cache.hit", hits=self.hits)
         return entry
 
     def put(self, key: tuple, program: Any) -> Any:
         """Insert, evicting oldest entries past ``max_entries`` (any
         alias the caller keeps — e.g. the session's last-used fast-path
         handle — keeps an evicted program alive until replaced)."""
+        from repro.obs import trace
         self._entries[key] = program
         while len(self._entries) > self.max_entries:
             self._entries.pop(next(iter(self._entries)))
+            self.evictions += 1
+            trace.event("cache.evict", evictions=self.evictions)
         return program
+
+    def stats(self) -> Dict[str, int]:
+        """Counter snapshot: entries/max_entries/hits/misses/evictions."""
+        return {
+            "entries": len(self._entries),
+            "max_entries": self.max_entries,
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+        }
 
     def clear(self) -> int:
         """Drop every cached program, returning how many were dropped.

@@ -100,11 +100,23 @@ def make_async_cell(model, edge_data, eval_set, cfg: OL4ELConfig, *,
                     n_samples: Optional[np.ndarray] = None,
                     metric_fn: Optional[Callable] = None,
                     metric_name: str = "accuracy",
-                    max_events: int = 256, mesh=None) -> ELCell:
+                    max_events: int = 256, mesh=None,
+                    telemetry=None) -> ELCell:
     """The budgeted async event loop as an :class:`repro.el.ingraph.ELCell`
     — the unfused form of ``make_async_program`` (which recomposes
     exactly these closures into one ``lax.while_loop`` over events); see
-    that function for the semantics, knob contract and mesh placement."""
+    that function for the semantics, knob contract and mesh placement.
+
+    ``telemetry=`` is the static in-graph observability gate (see
+    ``make_sync_cell``): off builds exactly today's carry; on adds a
+    ``carry["telem"]`` ring subtree recording, per event, the edge, arm,
+    realized charge, the edge's residual budget, the staleness-weighted
+    merge ``alpha`` (and the raw staleness), event inter-arrival time
+    and the event edge's per-arm bandit statistics.
+    """
+    from repro.obs.rings import (as_spec, async_ring_init,
+                                 async_ring_record, finalize_telemetry)
+    spec = as_spec(telemetry)
     del n_samples
     check_ingraph_support(cfg, caller="make_async_program")
 
@@ -152,14 +164,17 @@ def make_async_cell(model, edge_data, eval_set, cfg: OL4ELConfig, *,
             "consumed": jnp.zeros((max_events,), jnp.float32),
             "wall": jnp.zeros((max_events,), jnp.float32),
         }
-        return {"gparams": init_params, "edge_params": edge_params,
-                "fleet": fleet,
-                "consumed": jnp.zeros((n_edges,), jnp.float32),
-                "finish": finish0, "infl_i": interval0, "infl_c": cost0,
-                "fetch_ver": jnp.zeros((n_edges,), jnp.int32),
-                "version": jnp.int32(0), "t": jnp.int32(0), "rng": rng,
-                "prev_metric": prev_metric, "wall": jnp.float32(0.0),
-                "hist": hist}
+        carry = {"gparams": init_params, "edge_params": edge_params,
+                 "fleet": fleet,
+                 "consumed": jnp.zeros((n_edges,), jnp.float32),
+                 "finish": finish0, "infl_i": interval0, "infl_c": cost0,
+                 "fetch_ver": jnp.zeros((n_edges,), jnp.int32),
+                 "version": jnp.int32(0), "t": jnp.int32(0), "rng": rng,
+                 "prev_metric": prev_metric, "wall": jnp.float32(0.0),
+                 "hist": hist}
+        if spec is not None:
+            carry["telem"] = async_ring_init(spec, k)
+        return carry
 
     def cond(carry: Dict[str, Any], knobs: Dict[str, jax.Array]):
         return ((carry["t"] < max_events)
@@ -194,6 +209,11 @@ def make_async_cell(model, edge_data, eval_set, cfg: OL4ELConfig, *,
         # charged at completion (charged == scheduled)
         consumed = consumed.at[e].add(cost)
         alpha = staleness_alpha(alpha0, version, fetch_ver[e], n_edges)
+        if spec is not None:
+            # the raw staleness (staleness_alpha's exact f32
+            # expression), recorded in the telemetry ring below
+            stale = ((version - fetch_ver[e]).astype(jnp.float32)
+                     / jnp.float32(max(n_edges, 1)))
         new_global = staleness_merge(gparams, p_new, alpha)
         version = version + 1
         metric, utility = eval_step(new_global, gparams, prev_metric)
@@ -225,12 +245,21 @@ def make_async_cell(model, edge_data, eval_set, cfg: OL4ELConfig, *,
             "consumed": hist["consumed"].at[t].set(jnp.sum(consumed)),
             "wall": hist["wall"].at[t].set(wall),
         }
-        return {"gparams": new_global, "edge_params": edge_params,
-                "fleet": fleet, "consumed": consumed, "finish": finish,
-                "infl_i": infl_i, "infl_c": infl_c,
-                "fetch_ver": fetch_ver, "version": version, "t": t + 1,
-                "rng": rng, "prev_metric": metric, "wall": wall,
-                "hist": hist}
+        new_carry = {"gparams": new_global, "edge_params": edge_params,
+                     "fleet": fleet, "consumed": consumed,
+                     "finish": finish, "infl_i": infl_i,
+                     "infl_c": infl_c, "fetch_ver": fetch_ver,
+                     "version": version, "t": t + 1, "rng": rng,
+                     "prev_metric": metric, "wall": wall, "hist": hist}
+        if spec is not None:
+            with jax.named_scope("obs.telemetry"):
+                new_carry["telem"] = async_ring_record(
+                    carry["telem"], spec, t=t, edge=e,
+                    arm=interval - 1, cost=cost, budget_resid=resid,
+                    alpha=alpha, staleness=stale,
+                    interarrival=wall - carry["wall"],
+                    bstate_e=bstate_e)
+        return new_carry
 
     def finalize(carry: Dict[str, Any], knobs: Dict[str, jax.Array]):
         out = dict(carry["hist"])
@@ -243,6 +272,9 @@ def make_async_cell(model, edge_data, eval_set, cfg: OL4ELConfig, *,
         # the event horizon cut the run short ("max_events")
         out["n_active"] = jnp.sum(
             jnp.isfinite(carry["finish"]).astype(jnp.int32))
+        if spec is not None:
+            out["telemetry"] = finalize_telemetry(carry["telem"],
+                                                  carry["t"], spec)
         return carry["gparams"], out
 
     return ELCell(init=init, cond=cond, body=body, finalize=finalize,
@@ -254,7 +286,8 @@ def make_async_program(model, edge_data, eval_set, cfg: OL4ELConfig, *,
                        n_samples: Optional[np.ndarray] = None,
                        metric_fn: Optional[Callable] = None,
                        metric_name: str = "accuracy",
-                       max_events: int = 256, mesh=None):
+                       max_events: int = 256, mesh=None,
+                       telemetry=None):
     """Build ``program(init_params, rng, knobs) -> (params, out)`` — the
     whole budgeted async run as one ``lax.while_loop`` over events, with
     the control-plane knobs (``ASYNC_KNOB_NAMES`` / ``async_knobs``) as
@@ -285,7 +318,7 @@ def make_async_program(model, edge_data, eval_set, cfg: OL4ELConfig, *,
     cell = make_async_cell(
         model, edge_data, eval_set, cfg, lr=lr, batch=batch,
         n_samples=n_samples, metric_fn=metric_fn, metric_name=metric_name,
-        max_events=max_events, mesh=mesh)
+        max_events=max_events, mesh=mesh, telemetry=telemetry)
 
     def program(init_params: Params, rng: jax.Array,
                 knobs: Dict[str, jax.Array]):

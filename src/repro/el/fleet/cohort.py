@@ -83,10 +83,14 @@ class Cohort:
     def n_pending(self) -> int:
         return len(self._pending)
 
-    def _admit(self) -> None:
+    def _admit(self) -> int:
         """Fill free slots from the queue (continuous batching: runs
         admitted mid-flight join the next wave; occupied slots are
-        untouched — ``place`` only writes the freed row)."""
+        untouched — ``place`` only writes the freed row).  Returns the
+        number of tenants admitted; each admission emits a
+        ``cohort.refill`` trace event."""
+        from repro.obs import trace as obs_trace
+        refilled = 0
         for s in range(self.batch.n_slots):
             if self._slots[s] is not None or not self._pending:
                 continue
@@ -109,6 +113,10 @@ class Cohort:
                 self._knobs_np[k][s] = v
             self._slots[s] = _Active(tenant_id, run, knobs)
             self.admitted += 1
+            refilled += 1
+            obs_trace.event("cohort.refill", slot=s, tenant=tenant_id,
+                            queue_depth=len(self._pending))
+        return refilled
 
     # -- the service loop body ----------------------------------------------
 
@@ -117,46 +125,57 @@ class Cohort:
 
         Returns the ``(tenant_id, report)`` pairs completed this wave
         (also emitted as :class:`ReportReady` events, after that
-        tenant's final :class:`RoundDelta`\\ s).
+        tenant's final :class:`RoundDelta`\\ s).  The whole body runs
+        inside an ``obs.span("cohort.wave")`` recording slot occupancy,
+        queue depth, refill count and completions.
         """
-        self._admit()
-        active = np.array([s is not None for s in self._slots])
-        if not active.any():
-            return []
-        self._stacked, running = self.batch.step(
-            self._stacked,
-            {k: jnp.asarray(v) for k, v in self._knobs_np.items()},
-            jnp.asarray(active))
-        running = np.asarray(running)
-        self.waves += 1
+        from repro.obs import trace as obs_trace
+        with obs_trace.span("cohort.wave", mode=self.batch.mode) as sp:
+            refilled = self._admit()
+            sp["refilled"] = refilled
+            sp["queue_depth"] = len(self._pending)
+            active = np.array([s is not None for s in self._slots])
+            sp["slots_active"] = int(active.sum())
+            if not active.any():
+                sp["completed"] = 0
+                return []
+            self._stacked, running = self.batch.step(
+                self._stacked,
+                {k: jnp.asarray(v) for k, v in self._knobs_np.items()},
+                jnp.asarray(active))
+            running = np.asarray(running)
+            self.waves += 1
 
-        # stream the wave's newly completed aggregations from the live
-        # history — the same arrays the final report is built from, so
-        # accumulated deltas == report.records bit for bit
-        t_host = np.asarray(self._stacked["t"])
-        hist = jax.tree.map(np.asarray, self._stacked["hist"])
-        done: List[Tuple[str, ELReport]] = []
-        for s, slot in enumerate(self._slots):
-            if slot is None:
-                continue
-            hi = int(t_host[s])
-            if hi > len(slot.records):
-                fresh = records_from_out(
-                    {k: v[s] for k, v in hist.items()},
-                    len(slot.records), hi)
-                slot.records.extend(fresh)
-                for rec in fresh:
-                    emit(RoundDelta(slot.tenant_id, rec))
-            if not running[s]:
-                done.append(self._finalize(s, emit))
-        return done
+            # stream the wave's newly completed aggregations from the
+            # live history — the same arrays the final report is built
+            # from, so accumulated deltas == report.records bit for bit
+            t_host = np.asarray(self._stacked["t"])
+            hist = jax.tree.map(np.asarray, self._stacked["hist"])
+            done: List[Tuple[str, ELReport]] = []
+            for s, slot in enumerate(self._slots):
+                if slot is None:
+                    continue
+                hi = int(t_host[s])
+                if hi > len(slot.records):
+                    fresh = records_from_out(
+                        {k: v[s] for k, v in hist.items()},
+                        len(slot.records), hi)
+                    slot.records.extend(fresh)
+                    for rec in fresh:
+                        emit(RoundDelta(slot.tenant_id, rec))
+                if not running[s]:
+                    done.append(self._finalize(s, emit))
+            sp["completed"] = len(done)
+            return done
 
     def _finalize(self, s: int, emit: EmitFn) -> Tuple[str, ELReport]:
         slot = self._slots[s]
         carry = self.batch.take_slot(self._stacked, jnp.int32(s))
         params, out = self.batch.finalize_slot(
             carry, {k: jnp.asarray(v) for k, v in slot.knobs.items()})
-        out = {k: np.asarray(v) for k, v in out.items()}
+        # tree.map (not a dict comprehension): ``out`` carries a nested
+        # telemetry subtree when the cohort's rings are on
+        out = jax.tree.map(np.asarray, out)
         final = slot.run.executor.evaluate(params)[slot.run.metric_name]
         report = report_from_out(
             out, mode=self.batch.mode, policy=slot.run.cfg.policy,

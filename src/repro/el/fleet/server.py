@@ -48,16 +48,24 @@ class FleetServer:
     server share an ``ELSession.compile_cache`` so cohort programs and
     the session's verification runs pool one bounded cache (and one
     hit/miss counter); by default the server owns a private one.
+
+    ``telemetry=`` gates the in-graph observability rings for every
+    cohort program (``repro.obs``; off — the default — compiles
+    today's programs bit-for-bit).  Each tenant's report then carries
+    its own ring snapshot in ``report.telemetry["rings"]``.  The gate
+    joins the cohort key, so on/off tenants never share a cohort.
     """
 
     def __init__(self, *, n_slots: int = 4, rounds_per_wave: int = 32,
                  mesh=None, cache: Optional[ProgramCache] = None,
-                 max_cached: int = 8):
+                 max_cached: int = 8, telemetry=None):
+        from repro.obs.rings import as_spec
         if n_slots < 1:
             raise ValueError(f"n_slots must be >= 1, got {n_slots}")
         self.n_slots = int(n_slots)
         self.rounds_per_wave = int(rounds_per_wave)
         self.mesh = mesh
+        self.telemetry = as_spec(telemetry)
         self._owns_cache = cache is None
         self._cache = ProgramCache(max_cached) if cache is None else cache
         self._cohorts: Dict[tuple, Cohort] = {}
@@ -89,7 +97,7 @@ class FleetServer:
         return ("fleet", run.executor,
                 ELSession._structural_cfg(run.cfg), run.metric_fn,
                 run.metric_name, n_samples, horizon, self.n_slots,
-                self.rounds_per_wave, self.mesh)
+                self.rounds_per_wave, self.mesh, self.telemetry)
 
     def _horizon(self, run: TenantRun) -> int:
         if run.cfg.mode == "async":
@@ -150,20 +158,25 @@ class FleetServer:
         """The cohort's compiled slot-batch engine, via the shared
         program cache — one build (and one XLA compile) per structure."""
         from repro.el.sweep.engine import make_cell_batch
+        from repro.obs import trace as obs_trace
         key = self._cohort_key(run, horizon)
         batch = self._cache.get(key)
         if batch is None:
             ex = run.executor
-            batch = make_cell_batch(
-                ex.model, ex.edge_data, ex.eval_set, run.cfg,
-                n_slots=self.n_slots,
-                rounds_per_wave=self.rounds_per_wave,
-                lr=ex.lr, batch=ex.batch,
-                n_samples=self._n_samples_of(run),
-                metric_fn=run.metric_fn, metric_name=run.metric_name,
-                horizon=horizon, mesh=self.mesh)
-            self._cache.put(key, batch)
-            self.compiles += 1
+            with obs_trace.span("fleet.compile", mode=run.cfg.mode,
+                                n_slots=self.n_slots,
+                                telemetry=self.telemetry is not None):
+                batch = make_cell_batch(
+                    ex.model, ex.edge_data, ex.eval_set, run.cfg,
+                    n_slots=self.n_slots,
+                    rounds_per_wave=self.rounds_per_wave,
+                    lr=ex.lr, batch=ex.batch,
+                    n_samples=self._n_samples_of(run),
+                    metric_fn=run.metric_fn, metric_name=run.metric_name,
+                    horizon=horizon, mesh=self.mesh,
+                    telemetry=self.telemetry)
+                self._cache.put(key, batch)
+                self.compiles += 1
         return batch
 
     # -- the service loop ----------------------------------------------------
@@ -206,6 +219,7 @@ class FleetServer:
             "compiles": self.compiles,
             "cache_hits": self._cache.hits,
             "cache_misses": self._cache.misses,
+            "cache_evictions": self._cache.evictions,
             "waves": sum(c.waves for c in self._cohorts.values()),
         }
 

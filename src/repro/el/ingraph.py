@@ -315,11 +315,25 @@ def make_sync_cell(model, edge_data, eval_set, cfg: OL4ELConfig, *,
                    n_samples: Optional[np.ndarray] = None,
                    metric_fn: Optional[Callable] = None,
                    metric_name: str = "accuracy",
-                   max_rounds: int = 512, mesh=None) -> ELCell:
+                   max_rounds: int = 512, mesh=None,
+                   telemetry=None) -> ELCell:
     """The budgeted sync round as an :class:`ELCell` — the unfused form
     of ``make_sync_program`` (which recomposes exactly these closures
     into one ``lax.while_loop``); see that function for the semantics,
-    knob contract and mesh placement."""
+    knob contract and mesh placement.
+
+    ``telemetry=`` is the static in-graph observability gate
+    (``repro.obs.rings.as_spec`` coercions: None/False off, True/int/
+    ``TelemetrySpec`` on).  Off builds exactly the carry below — no
+    extra key, no extra op, the same traced program bit-for-bit.  On
+    adds a ``carry["telem"]`` ring subtree, each round recording arm,
+    straggler cost, residual budget and the bandit's per-arm statistics
+    at ``t % ring_size`` (under ``jax.named_scope("obs.telemetry")``),
+    surfaced by ``finalize`` as ``out["telemetry"]``.
+    """
+    from repro.obs.rings import (as_spec, finalize_telemetry,
+                                 sync_ring_init, sync_ring_record)
+    spec = as_spec(telemetry)
     check_ingraph_support(cfg, caller="make_sync_program")
 
     n_edges, k = cfg.n_edges, cfg.max_interval
@@ -363,10 +377,13 @@ def make_sync_cell(model, edge_data, eval_set, cfg: OL4ELConfig, *,
             "consumed": jnp.zeros((max_rounds,), jnp.float32),
             "wall": jnp.zeros((max_rounds,), jnp.float32),
         }
-        return {"params": init_params, "bstate": bstate,
-                "consumed": consumed, "t": jnp.int32(0), "rng": rng,
-                "prev_metric": prev_metric, "wall": jnp.float32(0.0),
-                "hist": hist}
+        carry = {"params": init_params, "bstate": bstate,
+                 "consumed": consumed, "t": jnp.int32(0), "rng": rng,
+                 "prev_metric": prev_metric, "wall": jnp.float32(0.0),
+                 "hist": hist}
+        if spec is not None:
+            carry["telem"] = sync_ring_init(spec, k)
+        return carry
 
     def cond(carry: Dict[str, Any], knobs: Dict[str, jax.Array]):
         resid = knobs["budget"] - carry["consumed"]                  # [E]
@@ -447,9 +464,16 @@ def make_sync_cell(model, edge_data, eval_set, cfg: OL4ELConfig, *,
             "consumed": hist["consumed"].at[t].set(jnp.sum(consumed)),
             "wall": hist["wall"].at[t].set(wall),
         }
-        return {"params": new_params, "bstate": bstate,
-                "consumed": consumed, "t": t + 1, "rng": rng,
-                "prev_metric": metric, "wall": wall, "hist": hist}
+        new_carry = {"params": new_params, "bstate": bstate,
+                     "consumed": consumed, "t": t + 1, "rng": rng,
+                     "prev_metric": metric, "wall": wall, "hist": hist}
+        if spec is not None:
+            with jax.named_scope("obs.telemetry"):
+                new_carry["telem"] = sync_ring_record(
+                    carry["telem"], spec, t=t, arm=arm, round_cost=slot,
+                    budget_resid=jnp.min(budget - consumed),
+                    bstate=bstate)
+        return new_carry
 
     def finalize(carry: Dict[str, Any], knobs: Dict[str, jax.Array]):
         out = dict(carry["hist"])
@@ -457,6 +481,9 @@ def make_sync_cell(model, edge_data, eval_set, cfg: OL4ELConfig, *,
         out["budgets_left"] = knobs["budget"] - carry["consumed"]
         out["arm_pulls"] = carry["bstate"]["counts"]
         out["wall_time"] = carry["wall"]
+        if spec is not None:
+            out["telemetry"] = finalize_telemetry(carry["telem"],
+                                                  carry["t"], spec)
         return carry["params"], out
 
     return ELCell(init=init, cond=cond, body=body, finalize=finalize,
@@ -468,7 +495,7 @@ def make_sync_program(model, edge_data, eval_set, cfg: OL4ELConfig, *,
                       n_samples: Optional[np.ndarray] = None,
                       metric_fn: Optional[Callable] = None,
                       metric_name: str = "accuracy",
-                      max_rounds: int = 512, mesh=None):
+                      max_rounds: int = 512, mesh=None, telemetry=None):
     """Build ``program(init_params, rng, knobs) -> (params, out)`` — the
     whole budgeted sync run as one ``lax.while_loop``, with the
     control-plane knobs (see ``KNOB_NAMES`` / ``sync_knobs``) as traced
@@ -490,12 +517,14 @@ def make_sync_program(model, edge_data, eval_set, cfg: OL4ELConfig, *,
     ``out`` is a dict of device arrays: per-round ``metric``, ``utility``,
     ``interval``, ``consumed`` (cumulative total across edges), ``wall``
     (cumulative straggler time), plus scalars ``n_rounds`` and the final
-    per-edge ``budgets_left``.
+    per-edge ``budgets_left``.  With ``telemetry=`` (see
+    ``make_sync_cell``) it gains a nested ``out["telemetry"]`` ring
+    subtree; without it the program is today's, bit-for-bit.
     """
     cell = make_sync_cell(
         model, edge_data, eval_set, cfg, lr=lr, batch=batch,
         n_samples=n_samples, metric_fn=metric_fn, metric_name=metric_name,
-        max_rounds=max_rounds, mesh=mesh)
+        max_rounds=max_rounds, mesh=mesh, telemetry=telemetry)
 
     def program(init_params: Params, rng: jax.Array,
                 knobs: Dict[str, jax.Array]):

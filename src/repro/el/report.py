@@ -43,6 +43,10 @@ class ELReport:
     arm_pulls: Optional[List[int]] = None
     elapsed_s: float = 0.0
     final_params: Any = None           # the trained global model
+    #: observability payload (``repro.obs``): ``"rings"`` holds the
+    #: in-graph telemetry buffers (numpy, when the run recorded them),
+    #: ``"cache"`` the driver's ``ProgramCache.stats()`` snapshot.
+    telemetry: Optional[Dict[str, Any]] = None
 
     def metric_at_consumption(self, budget_frac: float,
                               total_budget: float) -> float:
@@ -117,6 +121,11 @@ def report_from_out(out: Dict[str, Any], *, mode: str, policy: str,
                   else "max_events")
     else:
         reason = "max_rounds" if n >= horizon else "budget_exhausted"
+    telemetry = None
+    if "telemetry" in out:                 # the in-graph rings, to host
+        import jax
+        telemetry = {"rings": jax.tree.map(np.asarray,
+                                           dict(out["telemetry"]))}
     return ELReport(
         records=records,
         final_metric=float(final_metric),
@@ -129,4 +138,5 @@ def report_from_out(out: Dict[str, Any], *, mode: str, policy: str,
         arm_pulls=[int(c) for c in pulls],
         elapsed_s=elapsed_s,
         final_params=final_params,
+        telemetry=telemetry,
     )

@@ -357,6 +357,15 @@ class ELSession:
 
     # -- compiled fast path ---------------------------------------------------
 
+    def _attach_cache_stats(self, report: ELReport) -> ELReport:
+        """Fold the session's compile-cache counters into
+        ``report.telemetry["cache"]`` (always present on fast-path
+        reports — the cache exists whether or not rings were on)."""
+        tele = dict(report.telemetry or {})
+        tele["cache"] = self._programs.stats()
+        report.telemetry = tele
+        return report
+
     @staticmethod
     def _structural_cfg(cfg: OL4ELConfig) -> OL4ELConfig:
         """The config with the knob fields normalized away: ucb_c, budget,
@@ -446,7 +455,8 @@ class ELSession:
 
     def run_sync_ingraph(self, max_rounds: int = 512,
                          metric_fn: Optional[Callable] = None, *,
-                         mesh=None, donate: bool = False) -> ELReport:
+                         mesh=None, donate: bool = False,
+                         telemetry=None) -> ELReport:
         """Run the whole budgeted sync loop as ONE compiled XLA program.
 
         Numerically equivalent (up to RNG streams) to ``run_sync`` under
@@ -475,42 +485,56 @@ class ELSession:
         donates the initial params' buffers to the program (in-place
         fleet update); the caller must not reuse the passed-in params
         afterwards — the session detects a reuse attempt and raises.
+
+        ``telemetry=`` switches the in-graph observability rings on
+        (``repro.obs``: None/False off — today's program bit-for-bit;
+        True/int/``TelemetrySpec`` on).  The recorded rings land in
+        ``report.telemetry["rings"]``; the gate is part of the compile
+        cache key, so on/off runs never share a program slot.
         """
         from repro.el.ingraph import (KNOB_NAMES, make_sync_program,
                                       sync_knobs)
+        from repro.obs import rings as obs_rings, trace as obs_trace
         ex = self._require_executor()
         cfg = self._ingraph_cfg("run_sync_ingraph", mode="sync")
+        spec = obs_rings.as_spec(telemetry)
         t0 = time.perf_counter()
         key = ("sync", ex, self._structural_cfg(cfg), max_rounds,
                metric_fn, self.metric_name,
                None if self._n_samples is None else tuple(self._n_samples),
-               mesh, donate)
+               mesh, donate, spec)
         params = self._initial_params()
         program = self._programs.get(key)
         if program is None:
-            program = self._jit_ingraph(make_sync_program(
-                ex.model, ex.edge_data, ex.eval_set, cfg,
-                lr=ex.lr, batch=ex.batch, n_samples=self._n_samples,
-                metric_fn=metric_fn, metric_name=self.metric_name,
-                max_rounds=max_rounds, mesh=mesh),
-                KNOB_NAMES, mesh, donate, params)
-            self._cache_program(key, program)
+            with obs_trace.span("session.compile", mode="sync",
+                                telemetry=spec is not None):
+                program = self._jit_ingraph(make_sync_program(
+                    ex.model, ex.edge_data, ex.eval_set, cfg,
+                    lr=ex.lr, batch=ex.batch, n_samples=self._n_samples,
+                    metric_fn=metric_fn, metric_name=self.metric_name,
+                    max_rounds=max_rounds, mesh=mesh, telemetry=spec),
+                    KNOB_NAMES, mesh, donate, params)
+                self._cache_program(key, program)
         self._fastpath, self._fastpath_key = program, key
-        params, out = jax.block_until_ready(
-            program(params, jax.random.key(cfg.seed + 17),
-                    sync_knobs(cfg)))
+        with obs_trace.span("session.dispatch", mode="sync") as sp:
+            params, out = jax.block_until_ready(
+                program(params, jax.random.key(cfg.seed + 17),
+                        sync_knobs(cfg)))
+            sp["n_rounds"] = int(out["n_rounds"])
         records: List[RoundRecord] = []
         for rec in records_from_out(out, 0, int(out["n_rounds"])):
             self._emit(records, rec)
         final = ex.evaluate(params)[self.metric_name]
-        return report_from_out(
+        report = report_from_out(
             out, mode="sync", policy=cfg.policy, horizon=max_rounds,
             final_metric=final, final_params=params,
             elapsed_s=time.perf_counter() - t0, records=records)
+        return self._attach_cache_stats(report)
 
     def run_async_ingraph(self, max_events: Optional[int] = None,
                           metric_fn: Optional[Callable] = None, *,
-                          mesh=None, donate: bool = False) -> ELReport:
+                          mesh=None, donate: bool = False,
+                          telemetry=None) -> ELReport:
         """Run the whole budgeted async event loop as ONE compiled XLA
         program (``repro.el.events``): no host priority queue — finish
         times live in an ``[n_edges]`` array and each ``lax.while_loop``
@@ -529,12 +553,18 @@ class ELSession:
         mesh-less program — see ``make_async_program``); ``donate=True``
         donates the initial params' buffers (caller must not reuse them;
         the session detects reuse and raises).
+
+        ``telemetry=`` switches the in-graph observability rings on
+        (see ``run_sync_ingraph``; async rings additionally record the
+        merge ``alpha``/staleness and event inter-arrival times).
         """
         from repro.el.events import (ASYNC_KNOB_NAMES, async_knobs,
                                      make_async_program,
                                      padded_event_horizon)
+        from repro.obs import rings as obs_rings, trace as obs_trace
         ex = self._require_executor()
         cfg = self._ingraph_cfg("run_async_ingraph", mode="async")
+        spec = obs_rings.as_spec(telemetry)
         t0 = time.perf_counter()
         if max_events is None:
             # the padded (power-of-two) horizon: it is part of the
@@ -545,28 +575,34 @@ class ELSession:
         else:
             horizon = int(max_events)
         key = ("async", ex, self._structural_cfg(cfg), horizon, metric_fn,
-               self.metric_name, mesh, donate)
+               self.metric_name, mesh, donate, spec)
         params = self._initial_params()
         program = self._programs.get(key)
         if program is None:
-            program = self._jit_ingraph(make_async_program(
-                ex.model, ex.edge_data, ex.eval_set, cfg,
-                lr=ex.lr, batch=ex.batch, metric_fn=metric_fn,
-                metric_name=self.metric_name, max_events=horizon,
-                mesh=mesh), ASYNC_KNOB_NAMES, mesh, donate, params)
-            self._cache_program(key, program)
+            with obs_trace.span("session.compile", mode="async",
+                                telemetry=spec is not None):
+                program = self._jit_ingraph(make_async_program(
+                    ex.model, ex.edge_data, ex.eval_set, cfg,
+                    lr=ex.lr, batch=ex.batch, metric_fn=metric_fn,
+                    metric_name=self.metric_name, max_events=horizon,
+                    mesh=mesh, telemetry=spec),
+                    ASYNC_KNOB_NAMES, mesh, donate, params)
+                self._cache_program(key, program)
         self._async_fastpath, self._async_key = program, key
-        params, out = jax.block_until_ready(
-            program(params, jax.random.key(cfg.seed + 17),
-                    async_knobs(cfg)))
+        with obs_trace.span("session.dispatch", mode="async") as sp:
+            params, out = jax.block_until_ready(
+                program(params, jax.random.key(cfg.seed + 17),
+                        async_knobs(cfg)))
+            sp["n_events"] = int(out["n_rounds"])
         records: List[RoundRecord] = []
         for rec in records_from_out(out, 0, int(out["n_rounds"])):
             self._emit(records, rec)
         final = ex.evaluate(params)[self.metric_name]
-        return report_from_out(
+        report = report_from_out(
             out, mode="async", policy=cfg.policy, horizon=horizon,
             final_metric=final, final_params=params,
             elapsed_s=time.perf_counter() - t0, records=records)
+        return self._attach_cache_stats(report)
 
     # -- compiled ablation sweeps ---------------------------------------------
 
@@ -601,18 +637,23 @@ class ELSession:
         key = ("sweep", ex, self._structural_cfg(cfg), spec_shape,
                metric_fn, self.metric_name, mesh,
                None if self._n_samples is None else tuple(self._n_samples))
+        from repro.obs import trace as obs_trace
         program = self._programs.get(key)
         if program is None:
-            program = make_sweep_program(
-                ex.model, ex.edge_data, ex.eval_set, cfg, spec,
-                lr=ex.lr, batch=ex.batch, n_samples=self._n_samples,
-                metric_fn=metric_fn, metric_name=self.metric_name,
-                mesh=mesh)
-            self._cache_program(key, program)
+            with obs_trace.span("session.compile", mode="sweep",
+                                n_cells=spec.n_cells):
+                program = make_sweep_program(
+                    ex.model, ex.edge_data, ex.eval_set, cfg, spec,
+                    lr=ex.lr, batch=ex.batch, n_samples=self._n_samples,
+                    metric_fn=metric_fn, metric_name=self.metric_name,
+                    mesh=mesh)
+                self._cache_program(key, program)
         self._sweep_program, self._sweep_key = program, key
-        params, out = run_sweep_program(
-            program, self._initial_params(),
-            spec.cell_cfgs(cfg))
+        with obs_trace.span("session.dispatch", mode="sweep",
+                            n_cells=spec.n_cells):
+            params, out = run_sweep_program(
+                program, self._initial_params(),
+                spec.cell_cfgs(cfg))
         report = SweepReport(
             spec=spec, axes=spec.axes(cfg), cells=spec.cells(cfg),
             out=out, policy=cfg.policy,

@@ -171,7 +171,9 @@ def run_sweep_program(program, init_params: Params,
     knobs = stack_knobs(cell_cfgs)
     keys = cell_keys(cell_cfgs)
     params, out = jax.block_until_ready(program(init_params, keys, knobs))
-    return params, {k: np.asarray(v) for k, v in out.items()}
+    # tree.map (not a dict comprehension): ``out`` may carry a nested
+    # telemetry subtree when the program was built with telemetry on
+    return params, jax.tree.map(np.asarray, out)
 
 
 # ---------------------------------------------------------------------------
@@ -231,7 +233,7 @@ def make_cell_batch(model, edge_data, eval_set, cfg: OL4ELConfig, *,
                     metric_fn: Optional[Callable] = None,
                     metric_name: str = "accuracy",
                     horizon: int = 512,
-                    mesh=None) -> CellBatch:
+                    mesh=None, telemetry=None) -> CellBatch:
     """Build the steppable slot-batch engine for one structural config.
 
     ``cfg`` contributes only structure (mode, n_edges, arch, utility,
@@ -246,17 +248,24 @@ def make_cell_batch(model, edge_data, eval_set, cfg: OL4ELConfig, *,
     the cohort placement (:func:`repro.sharding.el_cohort_state_specs`)
     inside ``step``; PRNG-key-typed leaves are left to GSPMD (key
     arrays reject explicit layout constraints on some backends).
+
+    ``telemetry=`` gates the cell's in-graph rings (see
+    ``make_sync_cell``): the stacked carry gains a per-slot ``"telem"``
+    subtree and ``finalize_slot`` emits ``out["telemetry"]`` per
+    tenant; off (the default) the batch is today's, bit-for-bit.
     """
     if cfg.mode == "async":
         cell = make_async_cell(
             model, edge_data, eval_set, cfg, lr=lr, batch=batch,
             n_samples=n_samples, metric_fn=metric_fn,
-            metric_name=metric_name, max_events=horizon)
+            metric_name=metric_name, max_events=horizon,
+            telemetry=telemetry)
     else:
         cell = make_sync_cell(
             model, edge_data, eval_set, cfg, lr=lr, batch=batch,
             n_samples=n_samples, metric_fn=metric_fn,
-            metric_name=metric_name, max_rounds=horizon)
+            metric_name=metric_name, max_rounds=horizon,
+            telemetry=telemetry)
 
     def _constrain(stacked):
         if mesh is None:

@@ -36,6 +36,8 @@ from repro.config import CLASSIC_IDS
 from repro.el.fleet import FleetServer, ReportReady, RoundDelta, TenantRun
 from repro.launch.classic import classic_fixture
 from repro.launch.mesh import make_debug_mesh_for
+from repro.obs.cli import (add_metrics_args, begin_observability,
+                           finish_observability, telemetry_arg)
 
 #: the --demo manifest: 8 tenants across TWO structural cohorts — a sync
 #: SVM cohort and an async K-means cohort (the async budgets all pad to
@@ -135,17 +137,21 @@ def main() -> None:
                          "were compiled (CI: one per cohort)")
     ap.add_argument("--verbose", action="store_true",
                     help="print every streamed round delta")
+    add_metrics_args(ap)
+    telemetry_arg(ap)
     args = ap.parse_args()
 
     if args.demo == (args.manifest is not None):
         ap.error("pass exactly one of --demo / --manifest")
     manifest = DEMO_MANIFEST if args.demo else load_manifest(args.manifest)
 
+    begin_observability(args)
     mesh = None
     if args.mesh == "debug":
         mesh = make_debug_mesh_for(jax.device_count())
     server = FleetServer(n_slots=args.slots,
-                         rounds_per_wave=args.rounds_per_wave, mesh=mesh)
+                         rounds_per_wave=args.rounds_per_wave, mesh=mesh,
+                         telemetry=args.telemetry)
 
     def on_event(ev):
         if isinstance(ev, RoundDelta) and args.verbose:
@@ -178,7 +184,14 @@ def main() -> None:
               f"{r.terminated_reason}")
     print(f"\n{len(reports)}/{len(ids)} reports in {elapsed:.2f}s — "
           f"{st['cohorts']} cohorts, {st['compiles']} compiles "
-          f"({st['cache_hits']} cache hits), {st['waves']} waves")
+          f"({st['cache_hits']} cache hits, {st['cache_misses']} misses, "
+          f"{st['cache_evictions']} evictions), {st['waves']} waves")
+
+    registry = None
+    if args.metrics_out:
+        from repro.obs import registry_from_fleet
+        registry = registry_from_fleet(st)
+    finish_observability(args, registry)
 
     if len(reports) != len(ids):
         print("ERROR: missing tenant reports", file=sys.stderr)

@@ -34,6 +34,8 @@ from repro.el import ELSession
 from repro.el.sweep import spec_from_sequences
 from repro.launch.classic import classic_fixture
 from repro.launch.mesh import make_debug_mesh_for
+from repro.obs.cli import (add_metrics_args, begin_observability,
+                           finish_observability)
 
 
 def build_session(args) -> ELSession:
@@ -90,7 +92,9 @@ def main() -> None:
     ap.add_argument("--mesh", default="none", choices=["none", "debug"],
                     help="'debug': shard the sweep over a 2x2 host-device "
                          "mesh (the production placement, CPU-emulated)")
+    add_metrics_args(ap)
     args = ap.parse_args()
+    begin_observability(args)
 
     spec = spec_from_sequences(
         ucb_c=args.ucb_c, budget=args.budget,
@@ -132,6 +136,22 @@ def main() -> None:
               f"H={p['heterogeneity']:.1f}: metric={p['final_metric']:.4f} "
               f"@ consumed={p['total_consumed']:.0f}")
     print("\n" + report.summary())
+
+    registry = None
+    if args.metrics_out:
+        from repro.obs.metrics import MetricsRegistry
+        registry = MetricsRegistry()
+        registry.gauge("sweep_cells", "grid cells in the compiled sweep"
+                       ).set(report.n_cells)
+        registry.gauge("sweep_truncated_cells",
+                       "cells that hit the max-rounds cap"
+                       ).set(int(trunc.sum()))
+        hist = registry.histogram(
+            "sweep_final_metric", "per-cell final metric",
+            buckets=(0.25, 0.5, 0.75, 0.9, 0.95, 0.99, 1.0))
+        hist.observe_many([row["final_metric"]
+                           for row in report.to_rows()])
+    finish_observability(args, registry)
 
 
 if __name__ == "__main__":

@@ -39,6 +39,8 @@ from repro.data import SyntheticLMData
 from repro.el import ELSession
 from repro.federated import LMExecutor
 from repro.models import build_model
+from repro.obs.cli import (add_metrics_args, begin_observability,
+                           finish_observability, telemetry_arg)
 from repro.train import (checkpoint, init_train_state, make_train_step)
 
 
@@ -59,6 +61,7 @@ def train_standard(exp, args) -> None:
     if args.ckpt:
         checkpoint.save(args.ckpt, state, step=n_steps)
         print(f"saved checkpoint to {args.ckpt}")
+    return None
 
 
 def _build_mesh(args):
@@ -114,7 +117,7 @@ def train_classic_ol4el(exp, args) -> None:
     if ol.mode == "sync":
         report = session.run_sync_ingraph(
             max_rounds=args.steps if args.steps is not None else 256,
-            mesh=mesh, donate=args.donate)
+            mesh=mesh, donate=args.donate, telemetry=args.telemetry)
     else:
         # same announced-cap contract as train_ol4el: an explicit
         # --steps bounds the run at steps*edges events, never silently
@@ -125,7 +128,7 @@ def train_classic_ol4el(exp, args) -> None:
         report = session.run_async_ingraph(
             max_events=None if args.steps is None
             else args.steps * args.edges,
-            mesh=mesh, donate=args.donate)
+            mesh=mesh, donate=args.donate, telemetry=args.telemetry)
     print(f"done: {report.n_aggregations} aggregations, "
           f"final {metric} {report.final_metric:.4f}, "
           f"consumed {report.total_consumed:.0f} "
@@ -134,6 +137,7 @@ def train_classic_ol4el(exp, args) -> None:
         checkpoint.save(args.ckpt, report.final_params,
                         step=report.n_aggregations)
         print(f"saved EL checkpoint to {args.ckpt}")
+    return report
 
 
 def train_ol4el(exp, args) -> None:
@@ -180,6 +184,7 @@ def train_ol4el(exp, args) -> None:
         checkpoint.save(args.ckpt, report.final_params,
                         step=report.n_aggregations)
         print(f"saved EL checkpoint to {args.ckpt}")
+    return report
 
 
 def main(argv=None) -> None:
@@ -224,20 +229,31 @@ def main(argv=None) -> None:
                     help="K-means E-step engine for the local blocks "
                          "(pallas: the repro.kernels.kmeans_assign "
                          "kernel; interpret mode off-TPU)")
+    add_metrics_args(ap, trace_dir=True)
+    telemetry_arg(ap)
     args = ap.parse_args(argv)
 
     exp = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     classic_el = args.mode == "ol4el" and exp.model.family == "classic"
-    if not classic_el and (args.mesh != "none" or args.donate):
-        ap.error("--mesh/--donate drive the compiled single-run programs, "
-                 "which need a classic arch under --mode ol4el (LM archs "
-                 "and --mode standard run the host loops)")
+    if not classic_el and (args.mesh != "none" or args.donate
+                          or args.telemetry is not None):
+        ap.error("--mesh/--donate/--telemetry drive the compiled "
+                 "single-run programs, which need a classic arch under "
+                 "--mode ol4el (LM archs and --mode standard run the "
+                 "host loops)")
+    begin_observability(args)
     if args.mode == "standard":
-        train_standard(exp, args)
+        report = train_standard(exp, args)
     elif classic_el:
-        train_classic_ol4el(exp, args)
+        report = train_classic_ol4el(exp, args)
     else:
-        train_ol4el(exp, args)
+        report = train_ol4el(exp, args)
+    registry = None
+    if args.metrics_out and report is not None:
+        from repro.obs import registry_from_report
+        registry = registry_from_report(
+            report, labels={"arch": args.arch, "mode": report.mode})
+    finish_observability(args, registry)
 
 
 if __name__ == "__main__":

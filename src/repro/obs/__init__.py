@@ -1,0 +1,42 @@
+"""``repro.obs`` — observability for the compiled EL stack.
+
+Three substrates, one package:
+
+  * **in-graph telemetry rings** (:mod:`repro.obs.rings`) — fixed-size
+    metric buffers threaded through the compiled sync/async/cell-batch
+    carries, gated by a static ``telemetry=`` flag (off = today's
+    program bit-for-bit);
+  * **host span/trace layer** (:mod:`repro.obs.trace`) —
+    ``obs.span("cohort.wave")`` timed scopes with
+    ``jax.profiler.TraceAnnotation``, streamed as structured JSONL;
+  * **metrics registry + exposition** (:mod:`repro.obs.metrics`) —
+    counters/gauges/histograms rendered as Prometheus text + JSON via
+    ``ELReport.telemetry`` and the launchers' ``--metrics-out``.
+
+Plus the shared bench timing helpers (:mod:`repro.obs.timing`).
+``repro.obs`` never imports ``repro.el`` — the EL runtime imports obs
+(lazily where it is hot), so there is no cycle.
+"""
+
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               parse_prometheus, registry_from_fleet,
+                               registry_from_report, spans_into_registry,
+                               write_metrics_files)
+from repro.obs.rings import (TelemetrySpec, as_spec,
+                             async_reference_telemetry, ring_order,
+                             sync_reference_telemetry, unroll_ring)
+from repro.obs.timing import (TimedBlock, repeat_s, summarize_ns,
+                              time_block, timeit_us)
+from repro.obs.trace import (Tracer, configure, event, get_tracer,
+                             read_jsonl, span, use_tracer)
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "parse_prometheus", "registry_from_fleet", "registry_from_report",
+    "spans_into_registry", "write_metrics_files",
+    "TelemetrySpec", "as_spec", "async_reference_telemetry",
+    "ring_order", "sync_reference_telemetry", "unroll_ring",
+    "TimedBlock", "repeat_s", "summarize_ns", "time_block", "timeit_us",
+    "Tracer", "configure", "event", "get_tracer", "read_jsonl", "span",
+    "use_tracer",
+]

@@ -1,0 +1,81 @@
+"""argparse glue shared by the ``repro.launch`` CLIs.
+
+One flag set, one lifecycle, three launchers::
+
+    add_metrics_args(ap)                 # --metrics-out [--trace-dir]
+    begin_observability(args)            # arm the JSONL sink / profiler
+    ... run ...
+    finish_observability(args, registry) # flush + write the artifact set
+
+``--metrics-out PATH`` writes three files: ``PATH`` (Prometheus text
+exposition), ``PATH.json`` (the same registry as JSON) and
+``PATH.spans.jsonl`` (every span/event the tracer saw, streamed live).
+``--trace-dir DIR`` additionally captures a ``jax.profiler`` trace of
+the whole run — the ``obs.span`` scopes appear as ``TraceAnnotation``
+rows on the device timeline.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+
+def add_metrics_args(ap, *, trace_dir: bool = False) -> None:
+    """Add the observability flags to an ``argparse`` parser."""
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write run metrics to PATH (Prometheus text), "
+                         "PATH.json (JSON snapshot) and PATH.spans.jsonl "
+                         "(streamed tracer spans)")
+    if trace_dir:
+        ap.add_argument("--trace-dir", default=None, metavar="DIR",
+                        help="capture a jax.profiler trace of the run "
+                             "into DIR (inspect with TensorBoard or "
+                             "ui.perfetto.dev)")
+
+
+def begin_observability(args) -> bool:
+    """Arm the sinks BEFORE the run: swap in a tracer streaming to
+    ``PATH.spans.jsonl`` and (with ``--trace-dir``) start a profiler
+    trace.  Returns whether ``--metrics-out`` is active."""
+    if getattr(args, "metrics_out", None):
+        from repro.obs import trace
+        trace.configure(jsonl_path=args.metrics_out + ".spans.jsonl")
+    if getattr(args, "trace_dir", None):
+        import jax
+        jax.profiler.start_trace(args.trace_dir)
+    return bool(getattr(args, "metrics_out", None))
+
+
+def finish_observability(args, registry=None):
+    """Flush at the end of the run: stop the profiler trace, fold the
+    buffered spans/events into ``registry`` (a fresh one when ``None``)
+    and write the ``--metrics-out`` artifact set.  No-op for flags that
+    were not passed; returns the registry written (or ``None``)."""
+    if getattr(args, "trace_dir", None):
+        import jax
+        jax.profiler.stop_trace()
+        print(f"profiler trace written to {args.trace_dir}", flush=True)
+    if not getattr(args, "metrics_out", None):
+        return None
+    from repro.obs import spans_into_registry, write_metrics_files
+    from repro.obs.metrics import MetricsRegistry
+    from repro.obs.trace import get_tracer
+    reg = registry if registry is not None else MetricsRegistry()
+    tracer = get_tracer()
+    spans_into_registry(tracer.events(), registry=reg)
+    written = write_metrics_files(reg, args.metrics_out,
+                                  spans_jsonl=tracer.jsonl_path)
+    tracer.close()
+    print("metrics written: " + ", ".join(written), flush=True)
+    return reg
+
+
+def telemetry_arg(ap) -> None:
+    """Add ``--telemetry [N]``: switch the in-graph rings on, optionally
+    with an explicit ring size (rounds/events kept)."""
+    ap.add_argument("--telemetry", nargs="?", type=int, const=True,
+                    default=None, metavar="RING",
+                    help="record the in-graph telemetry rings (repro.obs."
+                         "rings; default off — the off path compiles "
+                         "bit-identically); optional RING sets the ring "
+                         "length (default 128)")

@@ -1,0 +1,336 @@
+"""In-graph telemetry rings for the compiled EL programs.
+
+Once ``run_sync_ingraph`` / ``run_async_ingraph`` / a fleet cohort enter
+their ``lax.while_loop``, the paper's whole online trade-off — bandit
+arm dynamics, budget burn, merge staleness — is invisible until the run
+ends.  This module adds fixed-size metric rings to the loop carries:
+each round/event writes its signals at ``t % ring_size``, so the last
+``ring_size`` rounds of every signal come back in the program's output
+dict (``out["telemetry"]``) with zero host synchronization during the
+run.
+
+The rings are **static-gated**: the cells take ``telemetry=None`` by
+default and then build *exactly* today's carry — no extra key, no extra
+op, the same traced program bit-for-bit.  With a :class:`TelemetrySpec`
+the carry gains one ``"telem"`` subtree and each body records under a
+``jax.named_scope("obs.telemetry")`` (so only the on-path HLO changes).
+The spec is frozen/hashable on purpose: it joins the session's
+compile-cache keys and the fleet's cohort keys, so on/off (and
+different ring sizes) never share or thrash a cache slot.
+
+Recorded signals (everything float32/int32, matching the programs'
+in-graph dtypes):
+
+  sync  (per round)   ``arm``, ``round_cost`` (the straggler slot),
+                      ``budget_resid`` (min residual after the charge),
+                      ``arm_counts``/``arm_utility`` ``[ring, K]`` (the
+                      bandit's post-update per-arm UCB statistics)
+  async (per event)   ``edge``, ``arm``, ``cost`` (the charge),
+                      ``budget_resid`` (the event edge's residual),
+                      ``alpha``/``staleness`` (the merge mix), and
+                      ``interarrival`` (event wall-time gap), plus the
+                      event edge's ``arm_counts``/``arm_utility``
+
+``sync_reference_telemetry`` / ``async_reference_telemetry`` replay the
+rings host-side in ``np.float32`` from the program's *history* arrays
+using the same op sequence the device used — the equivalence oracle the
+telemetry tests compare against bit-for-bit (fixed-cost mode).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple, Union
+
+import numpy as np
+
+#: default ring length: covers a whole default sync run (max_rounds=512
+#: rarely exceeds a few hundred charged rounds) at ~KB-scale state.
+DEFAULT_RING = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class TelemetrySpec:
+    """Static telemetry configuration of a compiled EL program.
+
+    Frozen + hashable so it participates in compile-cache keys and
+    cohort bucketing: two runs share a compiled program only when their
+    telemetry gating (and ring length) agree.
+    """
+
+    ring_size: int = DEFAULT_RING
+
+    def __post_init__(self):
+        if self.ring_size < 1:
+            raise ValueError(
+                f"ring_size must be >= 1, got {self.ring_size}")
+
+
+def as_spec(telemetry: Union[None, bool, int, TelemetrySpec]
+            ) -> Optional[TelemetrySpec]:
+    """Normalize the user-facing ``telemetry=`` flag.
+
+    ``None``/``False`` → off (the program compiles bit-identical to the
+    ungated one); ``True`` → default spec; an int → that ring size; a
+    :class:`TelemetrySpec` passes through.
+    """
+    if telemetry is None or telemetry is False:
+        return None
+    if telemetry is True:
+        return TelemetrySpec()
+    if isinstance(telemetry, TelemetrySpec):
+        return telemetry
+    if isinstance(telemetry, int):
+        return TelemetrySpec(ring_size=telemetry)
+    raise TypeError(
+        f"telemetry= expects None/bool/int/TelemetrySpec, got "
+        f"{type(telemetry).__name__}")
+
+
+# ---------------------------------------------------------------------------
+# Device-side ring init/record (called from the cell closures; jnp only
+# inside so importing this module never forces jax initialization)
+# ---------------------------------------------------------------------------
+
+
+def sync_ring_init(spec: TelemetrySpec, n_arms: int) -> Dict[str, Any]:
+    """The sync carry's ``"telem"`` subtree: empty ``[ring]`` /
+    ``[ring, K]`` buffers (``arm`` is -1 where nothing was recorded)."""
+    import jax.numpy as jnp
+    r = spec.ring_size
+    return {
+        "arm": jnp.full((r,), -1, jnp.int32),
+        "round_cost": jnp.zeros((r,), jnp.float32),
+        "budget_resid": jnp.zeros((r,), jnp.float32),
+        "arm_counts": jnp.zeros((r, n_arms), jnp.int32),
+        "arm_utility": jnp.zeros((r, n_arms), jnp.float32),
+    }
+
+
+def sync_ring_record(ring: Dict[str, Any], spec: TelemetrySpec, *,
+                     t, arm, round_cost, budget_resid,
+                     bstate: Dict[str, Any]) -> Dict[str, Any]:
+    """Write round ``t``'s signals at slot ``t % ring_size`` (values the
+    body already computed — recording adds scatters, never math)."""
+    import jax.numpy as jnp
+    i = jnp.mod(t, spec.ring_size)
+    return {
+        "arm": ring["arm"].at[i].set(arm.astype(jnp.int32)),
+        "round_cost": ring["round_cost"].at[i].set(round_cost),
+        "budget_resid": ring["budget_resid"].at[i].set(budget_resid),
+        "arm_counts": ring["arm_counts"].at[i].set(bstate["counts"]),
+        "arm_utility": ring["arm_utility"].at[i].set(
+            bstate["utility_sum"]),
+    }
+
+
+def async_ring_init(spec: TelemetrySpec, n_arms: int) -> Dict[str, Any]:
+    """The async carry's ``"telem"`` subtree (``edge``/``arm`` are -1
+    where nothing was recorded)."""
+    import jax.numpy as jnp
+    r = spec.ring_size
+    return {
+        "edge": jnp.full((r,), -1, jnp.int32),
+        "arm": jnp.full((r,), -1, jnp.int32),
+        "cost": jnp.zeros((r,), jnp.float32),
+        "budget_resid": jnp.zeros((r,), jnp.float32),
+        "alpha": jnp.zeros((r,), jnp.float32),
+        "staleness": jnp.zeros((r,), jnp.float32),
+        "interarrival": jnp.zeros((r,), jnp.float32),
+        "arm_counts": jnp.zeros((r, n_arms), jnp.int32),
+        "arm_utility": jnp.zeros((r, n_arms), jnp.float32),
+    }
+
+
+def async_ring_record(ring: Dict[str, Any], spec: TelemetrySpec, *,
+                      t, edge, arm, cost, budget_resid, alpha, staleness,
+                      interarrival, bstate_e: Dict[str, Any]
+                      ) -> Dict[str, Any]:
+    """Write event ``t``'s signals at slot ``t % ring_size``."""
+    import jax.numpy as jnp
+    i = jnp.mod(t, spec.ring_size)
+    return {
+        "edge": ring["edge"].at[i].set(edge.astype(jnp.int32)),
+        "arm": ring["arm"].at[i].set(arm.astype(jnp.int32)),
+        "cost": ring["cost"].at[i].set(cost),
+        "budget_resid": ring["budget_resid"].at[i].set(budget_resid),
+        "alpha": ring["alpha"].at[i].set(alpha),
+        "staleness": ring["staleness"].at[i].set(staleness),
+        "interarrival": ring["interarrival"].at[i].set(interarrival),
+        "arm_counts": ring["arm_counts"].at[i].set(bstate_e["counts"]),
+        "arm_utility": ring["arm_utility"].at[i].set(
+            bstate_e["utility_sum"]),
+    }
+
+
+def finalize_telemetry(telem: Dict[str, Any], t,
+                       spec: TelemetrySpec) -> Dict[str, Any]:
+    """The ``out["telemetry"]`` subtree a gated finalize emits: the raw
+    rings plus the write head (= rounds recorded) and the static ring
+    size, so hosts can unroll wraparound without out-of-band state."""
+    import jax.numpy as jnp
+    return {**telem, "head": t, "ring_size": jnp.int32(spec.ring_size)}
+
+
+# ---------------------------------------------------------------------------
+# Host-side ring reading
+# ---------------------------------------------------------------------------
+
+
+def ring_order(head: int, ring_size: int) -> List[Tuple[int, int]]:
+    """The ``(round_t, slot)`` pairs a ring holds, oldest first: rounds
+    ``max(0, head - ring_size) .. head - 1`` at slots ``t % ring_size``.
+    """
+    head, ring_size = int(head), int(ring_size)
+    return [(t, t % ring_size) for t in range(max(0, head - ring_size),
+                                              head)]
+
+
+def unroll_ring(telemetry: Dict[str, Any]) -> Dict[str, np.ndarray]:
+    """Reorder an ``out["telemetry"]`` dict's buffers into round order
+    (oldest retained round first), dropping never-written slots."""
+    order = ring_order(telemetry["head"], telemetry["ring_size"])
+    slots = [s for _, s in order]
+    return {k: np.asarray(v)[slots] for k, v in telemetry.items()
+            if k not in ("head", "ring_size")}
+
+
+# ---------------------------------------------------------------------------
+# Host-side reference replays (the equivalence oracle for the tests)
+# ---------------------------------------------------------------------------
+
+
+def _replay_bandit(arms: np.ndarray, utilities: np.ndarray,
+                   costs: np.ndarray, n_arms: int
+                   ) -> Tuple[np.ndarray, np.ndarray]:
+    """Replay ``jax_bandit_update`` for one bandit: per-step post-update
+    (counts, utility_sum) snapshots, accumulated in np.float32 in pull
+    order — the device's exact op sequence."""
+    counts = np.zeros(n_arms, np.int32)
+    usum = np.zeros(n_arms, np.float32)
+    out_c = np.zeros((len(arms), n_arms), np.int32)
+    out_u = np.zeros((len(arms), n_arms), np.float32)
+    for t, (a, u) in enumerate(zip(arms, utilities)):
+        counts[a] += 1
+        usum[a] = np.float32(usum[a] + np.float32(u))
+        out_c[t] = counts
+        out_u[t] = usum
+    del costs                      # cost_sum is not ring-recorded
+    return out_c, out_u
+
+
+def sync_reference_telemetry(out: Dict[str, Any],
+                             knobs: Dict[str, np.ndarray],
+                             n_arms: int) -> Dict[str, np.ndarray]:
+    """Replay the sync rings from the program's history arrays.
+
+    Valid for fixed-cost runs (``cost_noise == 0``, where the noise
+    multiplier is exactly 1.0): every replayed quantity repeats the
+    device's f32 op sequence on the same values —
+
+      * ``round_cost``  = ``max_e(interval * comp_e + comm_e)``;
+      * ``budget_resid``= ``budget - wall_t`` (in sync every edge's
+        consumed equals the cumulative straggler wall, accumulated by
+        the identical additions, so the device's ``min(budget -
+        consumed)`` is this very subtraction);
+      * the bandit statistics replay ``jax_bandit_update`` from the
+        (interval, utility) history.
+
+    Returns round-ordered arrays shaped like :func:`unroll_ring` of the
+    device telemetry.
+    """
+    tele = out["telemetry"]
+    head = int(np.asarray(tele["head"]))
+    ring = int(np.asarray(tele["ring_size"]))
+    interval = np.asarray(out["interval"])[:head]
+    utility = np.asarray(out["utility"])[:head].astype(np.float32)
+    wall = np.asarray(out["wall"])[:head].astype(np.float32)
+    comp = np.asarray(knobs["comp"], np.float32)
+    comm = np.asarray(knobs["comm"], np.float32)
+    budget = np.float32(knobs["budget"])
+
+    arms = (interval - 1).astype(np.int32)
+    round_cost = np.array(
+        [np.max(np.float32(i) * comp + comm) for i in
+         interval.astype(np.float32)], np.float32)
+    budget_resid = np.float32(budget - wall)
+    counts, usum = _replay_bandit(arms, utility, round_cost, n_arms)
+
+    lo = max(0, head - ring)
+    return {
+        "arm": arms[lo:head],
+        "round_cost": round_cost[lo:head],
+        "budget_resid": budget_resid[lo:head],
+        "arm_counts": counts[lo:head],
+        "arm_utility": usum[lo:head],
+    }
+
+
+def async_reference_telemetry(out: Dict[str, Any],
+                              knobs: Dict[str, np.ndarray],
+                              n_edges: int, n_arms: int
+                              ) -> Dict[str, np.ndarray]:
+    """Replay the async rings from the program's history arrays.
+
+    Replays the event loop's bookkeeping — per-edge budget
+    accumulation, the model-version / fetch-version staleness chain
+    (``staleness_alpha``'s exact f32 expression), event inter-arrival —
+    from the recorded (edge, interval, utility, cost, wall) history.
+    Valid whenever the history is (both cost modes: ``cost`` is the
+    realized charge).
+    """
+    tele = out["telemetry"]
+    head = int(np.asarray(tele["head"]))
+    ring = int(np.asarray(tele["ring_size"]))
+    edge = np.asarray(out["edge"])[:head].astype(np.int32)
+    interval = np.asarray(out["interval"])[:head].astype(np.int32)
+    utility = np.asarray(out["utility"])[:head].astype(np.float32)
+    cost = np.asarray(out["cost"])[:head].astype(np.float32)
+    wall = np.asarray(out["wall"])[:head].astype(np.float32)
+    budget = np.float32(knobs["budget"])
+    alpha0 = np.float32(knobs["async_alpha"])
+
+    arms = (interval - 1).astype(np.int32)
+    consumed = np.zeros(n_edges, np.float32)
+    fetch_ver = np.zeros(n_edges, np.int64)
+    version = 0
+    resid = np.zeros(head, np.float32)
+    alpha = np.zeros(head, np.float32)
+    stale = np.zeros(head, np.float32)
+    inter = np.zeros(head, np.float32)
+    # per-edge bandits: replay each edge's pull sequence independently
+    counts = np.zeros((n_edges, n_arms), np.int32)
+    usum = np.zeros((n_edges, n_arms), np.float32)
+    out_c = np.zeros((head, n_arms), np.int32)
+    out_u = np.zeros((head, n_arms), np.float32)
+    prev_wall = np.float32(0.0)
+    for t in range(head):
+        e = int(edge[t])
+        consumed[e] = np.float32(consumed[e] + cost[t])
+        resid[t] = np.float32(budget - consumed[e])
+        s = np.float32(np.float32(version - fetch_ver[e])
+                       / np.float32(max(n_edges, 1)))
+        stale[t] = s
+        alpha[t] = np.float32(alpha0 / np.float32(1.0 + s))
+        inter[t] = np.float32(wall[t] - prev_wall)
+        prev_wall = wall[t]
+        a = int(arms[t])
+        counts[e, a] += 1
+        usum[e, a] = np.float32(usum[e, a] + utility[t])
+        out_c[t] = counts[e]
+        out_u[t] = usum[e]
+        version += 1
+        fetch_ver[e] = version
+
+    lo = max(0, head - ring)
+    return {
+        "edge": edge[lo:head],
+        "arm": arms[lo:head],
+        "cost": cost[lo:head],
+        "budget_resid": resid[lo:head],
+        "alpha": alpha[lo:head],
+        "staleness": stale[lo:head],
+        "interarrival": inter[lo:head],
+        "arm_counts": out_c[lo:head],
+        "arm_utility": out_u[lo:head],
+    }

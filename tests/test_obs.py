@@ -1,0 +1,334 @@
+"""repro.obs: timing helpers, metrics registry + Prometheus exposition,
+the span tracer, and the in-graph telemetry rings — including the two
+load-bearing contracts: telemetry OFF leaves every program bit-identical
+(params, records, report scalars), and telemetry ON rings equal an
+independent host-side f32 replay of the run's history, bit for bit."""
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.el import ELSession, FleetServer, TenantRun
+from repro.launch.classic import classic_fixture
+from repro.obs import metrics as obs_metrics
+from repro.obs import rings as obs_rings
+from repro.obs import timing as obs_timing
+from repro.obs import trace as obs_trace
+
+
+@pytest.fixture(scope="module")
+def svm():
+    return classic_fixture("svm-wafer", samples=128, n_edges=4,
+                           alpha=100.0, data_seed=0)
+
+
+def _cfg(fx, mode, budget, seed=0):
+    return dataclasses.replace(
+        fx["exp"].ol4el, mode=mode, policy="ol4el", n_edges=4,
+        utility=fx["utility"], budget=float(budget), seed=seed)
+
+
+def _session(fx, cfg):
+    return (ELSession(cfg, metric_name=fx["metric"])
+            .with_executor(fx["executor"], init_params=fx["init_params"],
+                           n_samples=(fx["n_samples"]
+                                      if cfg.mode == "sync" else None)))
+
+
+def _assert_reports_equal(a, b):
+    assert a.final_metric == b.final_metric
+    assert a.n_aggregations == b.n_aggregations
+    assert a.total_consumed == b.total_consumed
+    assert a.wall_time == b.wall_time
+    assert a.terminated_reason == b.terminated_reason
+    assert a.arm_pulls == b.arm_pulls
+    assert len(a.records) == len(b.records)
+    for ra, rb in zip(a.records, b.records):
+        assert ra == rb
+    flat_a, _ = _flatten(a.final_params)
+    flat_b, _ = _flatten(b.final_params)
+    for xa, xb in zip(flat_a, flat_b):
+        np.testing.assert_array_equal(np.asarray(xa), np.asarray(xb))
+
+
+def _flatten(tree):
+    import jax
+    return jax.tree.flatten(tree)
+
+
+# -- timing -----------------------------------------------------------------
+
+
+def test_time_block_units():
+    with obs_timing.time_block() as tb:
+        x = sum(range(1000))
+    assert x == 499500
+    assert tb.ns > 0
+    assert tb.us == tb.ns / 1e3
+    assert tb.ms == tb.ns / 1e6
+    assert tb.s == tb.ns / 1e9
+
+
+def test_timeit_us_and_repeat_s():
+    calls = []
+    us = obs_timing.timeit_us(lambda: calls.append(1), n=10, warmup=2)
+    assert us >= 0.0
+    assert len(calls) == 12                    # warmup + timed
+    reps = obs_timing.repeat_s(lambda: None, 3)
+    assert len(reps) == 3 and all(r >= 0.0 for r in reps)
+
+
+def test_summarize_ns():
+    s = obs_timing.summarize_ns([4.0, 1.0, 3.0, 2.0])
+    assert s["count"] == 4
+    assert s["min"] == 1.0 and s["max"] == 4.0
+    assert s["mean"] == 2.5
+    assert s["p50"] == 2.5
+    assert obs_timing.summarize_ns([])["count"] == 0
+
+
+# -- metrics registry + Prometheus exposition -------------------------------
+
+
+def test_prometheus_render_parse_roundtrip():
+    reg = obs_metrics.MetricsRegistry()
+    reg.counter("req_total", "requests").inc(3, {"code": "200"})
+    reg.counter("req_total").inc(1, {"code": "500"})
+    reg.gauge("depth", "queue depth").set(7)
+    h = reg.histogram("lat_seconds", "latency", buckets=(0.1, 1.0))
+    h.observe_many([0.05, 0.5, 5.0])
+    text = reg.render_prometheus()
+    assert "# HELP req_total requests" in text
+    assert "# TYPE lat_seconds histogram" in text
+    parsed = obs_metrics.parse_prometheus(text)
+    by_code = {s["labels"]["code"]: s["value"]
+               for s in parsed["req_total"]}
+    assert by_code == {"200": 3.0, "500": 1.0}
+    assert parsed["depth"][0]["value"] == 7.0
+    buckets = {s["labels"]["le"]: s["value"]
+               for s in parsed["lat_seconds_bucket"]}
+    assert buckets["0.1"] == 1.0
+    assert buckets["1"] == 2.0
+    assert buckets["+Inf"] == 3.0
+    assert parsed["lat_seconds_count"][0]["value"] == 3.0
+    assert parsed["lat_seconds_sum"][0]["value"] == pytest.approx(5.55)
+
+
+def test_prometheus_parser_rejects_garbage():
+    with pytest.raises(ValueError):
+        obs_metrics.parse_prometheus("this is not { prometheus\n")
+
+
+def test_registry_type_conflicts_raise():
+    reg = obs_metrics.MetricsRegistry()
+    reg.counter("x_total")
+    with pytest.raises(TypeError):
+        reg.gauge("x_total")
+
+
+# -- tracer -----------------------------------------------------------------
+
+
+def test_tracer_span_event_and_jsonl(tmp_path):
+    path = str(tmp_path / "spans.jsonl")
+    tr = obs_trace.Tracer(jsonl_path=path)
+    with tr.span("unit.scope", tag="a") as sp:
+        sp["inner"] = 42
+    tr.event("unit.tick", n=np.int32(3))
+    tr.close()
+    evs = tr.events()
+    assert [e["name"] for e in evs] == ["unit.scope", "unit.tick"]
+    assert evs[0]["ev"] == "span" and evs[0]["dur_us"] >= 0.0
+    assert evs[0]["inner"] == 42 and evs[0]["tag"] == "a"
+    assert evs[1]["n"] == 3                    # numpy scalar coerced
+    disk = obs_trace.read_jsonl(path)
+    assert disk == evs
+    assert json.dumps(disk)                    # JSON-safe end to end
+
+
+def test_tracer_configure_swaps_process_tracer(tmp_path):
+    prev = obs_trace.get_tracer()
+    try:
+        tr = obs_trace.configure(
+            jsonl_path=str(tmp_path / "t.jsonl"))
+        obs_trace.event("cfg.check")
+        assert tr.events("cfg.check")
+    finally:
+        obs_trace.use_tracer(prev).close()
+
+
+# -- telemetry spec gating --------------------------------------------------
+
+
+def test_as_spec_normalization():
+    assert obs_rings.as_spec(None) is None
+    assert obs_rings.as_spec(False) is None
+    assert obs_rings.as_spec(True).ring_size == obs_rings.DEFAULT_RING
+    assert obs_rings.as_spec(16).ring_size == 16
+    spec = obs_rings.TelemetrySpec(ring_size=4)
+    assert obs_rings.as_spec(spec) is spec
+    with pytest.raises(ValueError):
+        obs_rings.TelemetrySpec(ring_size=0)
+    with pytest.raises(TypeError):
+        obs_rings.as_spec("on")
+
+
+def test_ring_order_wraparound():
+    assert obs_rings.ring_order(3, 8) == [(0, 0), (1, 1), (2, 2)]
+    assert obs_rings.ring_order(5, 3) == [(2, 2), (3, 0), (4, 1)]
+
+
+# -- telemetry-off bit-identity + telemetry-on reference replays ------------
+
+
+def test_sync_telemetry_off_bit_identical(svm):
+    cfg = _cfg(svm, "sync", budget=1200.0)
+    off = _session(svm, cfg).run_sync_ingraph(max_rounds=32)
+    on = _session(svm, cfg).run_sync_ingraph(max_rounds=32, telemetry=16)
+    _assert_reports_equal(off, on)
+    assert "rings" not in (off.telemetry or {})
+    assert "rings" in on.telemetry
+    rings = obs_rings.unroll_ring(on.telemetry["rings"])
+    n = min(on.n_aggregations, 16)
+    assert rings["arm"].shape == (n,)
+    assert np.all(rings["arm"] >= 0)
+
+
+def test_sync_reference_replay_bit_identical(svm):
+    import jax
+    from repro.el.ingraph import make_sync_program, sync_knobs
+    cfg = _cfg(svm, "sync", budget=1500.0)
+    ex = svm["executor"]
+    core = make_sync_program(
+        svm["model"], ex.edge_data, ex.eval_set, cfg, lr=ex.lr,
+        batch=ex.batch, n_samples=np.asarray(svm["n_samples"], np.float64),
+        max_rounds=32, telemetry=4)            # ring < rounds: wraps
+    knobs = sync_knobs(cfg)
+    _, out = jax.jit(core)(svm["init_params"],
+                           jax.random.key(cfg.seed + 17), knobs)
+    out = jax.tree.map(np.asarray, out)
+    assert int(out["telemetry"]["head"]) == int(out["n_rounds"])
+    dev = obs_rings.unroll_ring(out["telemetry"])
+    ref = obs_rings.sync_reference_telemetry(out, knobs,
+                                             n_arms=cfg.max_interval)
+    assert set(dev) == set(ref)
+    for k in ref:
+        np.testing.assert_array_equal(dev[k], ref[k], err_msg=k)
+
+
+def test_async_telemetry_off_bit_identical_and_replay(svm):
+    import jax
+    from repro.el.events import async_knobs, make_async_program
+    cfg = _cfg(svm, "async", budget=500.0)
+    off = _session(svm, cfg).run_async_ingraph(max_events=64)
+    on = _session(svm, cfg).run_async_ingraph(max_events=64, telemetry=8)
+    _assert_reports_equal(off, on)
+    assert "rings" in on.telemetry
+
+    ex = svm["executor"]
+    core = make_async_program(
+        svm["model"], ex.edge_data, ex.eval_set, cfg, lr=ex.lr,
+        batch=ex.batch, max_events=64, telemetry=8)
+    knobs = async_knobs(cfg)
+    _, out = jax.jit(core)(svm["init_params"],
+                           jax.random.key(cfg.seed + 17), knobs)
+    out = jax.tree.map(np.asarray, out)
+    head = int(out["telemetry"]["head"])
+    assert head == int(out["n_rounds"]) and head > 8   # wraps the ring
+    dev = obs_rings.unroll_ring(out["telemetry"])
+    ref = obs_rings.async_reference_telemetry(
+        out, knobs, n_edges=cfg.n_edges, n_arms=cfg.max_interval)
+    assert set(dev) == set(ref)
+    for k in ref:
+        np.testing.assert_array_equal(dev[k], ref[k], err_msg=k)
+    assert np.all(dev["alpha"] > 0.0)
+    assert np.all(dev["interarrival"] >= 0.0)
+
+
+def test_fleet_telemetry_off_bit_identical(svm):
+    runs = [TenantRun(cfg=_cfg(svm, "sync", budget=b, seed=s),
+                      executor=svm["executor"], tenant_id=f"t{s}",
+                      metric_name=svm["metric"],
+                      n_samples=svm["n_samples"],
+                      init_params=svm["init_params"], max_rounds=32)
+            for s, b in enumerate((600.0, 900.0, 1200.0))]
+    plain = FleetServer(n_slots=2, rounds_per_wave=4)
+    teled = FleetServer(n_slots=2, rounds_per_wave=4, telemetry=8)
+    for r in runs:
+        plain.submit(dataclasses.replace(r))
+        teled.submit(dataclasses.replace(r))
+    a, b = plain.drain(), teled.drain()
+    assert set(a) == set(b)
+    for tid in a:
+        _assert_reports_equal(a[tid], b[tid])
+        assert "rings" in b[tid].telemetry
+        rings = obs_rings.unroll_ring(b[tid].telemetry["rings"])
+        assert rings["arm"].shape[0] == min(a[tid].n_aggregations, 8)
+    plain.close(), teled.close()
+
+
+# -- cache stats + report folding -------------------------------------------
+
+
+def test_program_cache_stats(svm):
+    cfg = _cfg(svm, "sync", budget=900.0)
+    s = _session(svm, cfg)
+    s.run_sync_ingraph(max_rounds=32)
+    st = s.compile_cache.stats()
+    assert st["misses"] == 1 and st["hits"] == 0
+    assert st["entries"] == 1 and st["evictions"] == 0
+    s.run_sync_ingraph(max_rounds=32)
+    assert s.compile_cache.stats()["hits"] == 1
+
+
+def test_session_report_carries_cache_stats(svm):
+    cfg = _cfg(svm, "sync", budget=900.0)
+    rep = _session(svm, cfg).run_sync_ingraph(max_rounds=32)
+    assert rep.telemetry["cache"]["misses"] == 1
+
+
+def test_registry_from_report_and_files(svm, tmp_path):
+    cfg = _cfg(svm, "sync", budget=1200.0)
+    rep = _session(svm, cfg).run_sync_ingraph(max_rounds=32,
+                                              telemetry=16)
+    reg = obs_metrics.registry_from_report(rep, labels={"arch": "svm"})
+    text = reg.render_prometheus()
+    parsed = obs_metrics.parse_prometheus(text)
+    assert parsed["el_rounds_total"][0]["value"] == rep.n_aggregations
+    assert (parsed["el_round_cost_count"][0]["value"]
+            == min(rep.n_aggregations, 16))
+    pulls = sum(s["value"] for s in parsed["el_arm_pulls_total"])
+    assert pulls == sum(rep.arm_pulls)
+    assert parsed["el_program_cache_misses_total"][0]["value"] == 1
+
+    path = str(tmp_path / "run.prom")
+    written = obs_metrics.write_metrics_files(reg, path)
+    assert written == [path, path + ".json"]
+    assert obs_metrics.parse_prometheus(open(path).read())
+    assert json.load(open(path + ".json"))
+
+
+def test_spans_into_registry():
+    evs = [{"ev": "span", "name": "cohort.wave", "dur_us": 1500.0},
+           {"ev": "span", "name": "cohort.wave", "dur_us": 500.0},
+           {"ev": "event", "name": "cohort.refill"}]
+    reg = obs_metrics.spans_into_registry(evs)
+    parsed = obs_metrics.parse_prometheus(reg.render_prometheus())
+    assert parsed["obs_span_cohort_wave_seconds_count"][0]["value"] == 2
+    assert (parsed["obs_span_cohort_wave_seconds_sum"][0]["value"]
+            == pytest.approx(0.002))
+    assert parsed["obs_event_cohort_refill_total"][0]["value"] == 1
+
+
+def test_registry_from_fleet():
+    reg = obs_metrics.registry_from_fleet(
+        {"tenants_submitted": 8, "tenants_done": 8, "tenants_pending": 0,
+         "tenants_active": 0, "cohorts": 2, "compiles": 2,
+         "cache_hits": 0, "cache_misses": 2, "cache_evictions": 0,
+         "waves": 7})
+    parsed = obs_metrics.parse_prometheus(reg.render_prometheus())
+    assert parsed["fleet_tenants_done_total"][0]["value"] == 8
+    assert parsed["fleet_cohorts"][0]["value"] == 2
