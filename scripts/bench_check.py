@@ -1,0 +1,260 @@
+"""The bench-regression gate → exit codes CI can act on.
+
+Three modes over the committed bench artifacts (``BENCH_el.json``,
+``BENCH_fleet.json``) and the known-regression ledger
+(``BENCH_ledger.json``):
+
+  * **default** (no flags) — validate the committed baselines
+    themselves: every ledgered row is checked against its in-run
+    reference (within-run ratios are host-speed independent), and every
+    compiled EL row's recorded collective census / alias bytes is
+    checked against the declarative contracts (sharded rows
+    gather-before-reduce: ``all-reduce == 0``; donated rows alias the
+    param tree, non-donated rows alias nothing);
+  * ``--fresh FILE [--baseline FILE] --bench el|fleet`` — row-by-row
+    comparison of a fresh same-config run against a baseline with the
+    per-metric relative tolerances (``repro.obs.regress.
+    DEFAULT_TOLERANCES``), plus the ledger/contract checks on the
+    fresh rows;
+  * ``--smoke`` — the CI gate: run a small ``bench_el.py`` on the
+    debug mesh, check contracts + ledger on the fresh rows, and
+    compare WITHIN-RUN tier ratios (sharded/replicated,
+    donate/bare) against the committed baseline — sizes and host
+    speed differ between a CI smoke and the committed run, but a
+    sharded tier suddenly costing 3x when the baseline says 1.2x is
+    structural.  The smoke run is appended to ``BENCH_history.jsonl``.
+
+Exit codes: ``0`` ok · ``1`` regression (gate fails) · ``2`` usage/IO
+error · ``3`` failing-better (a ledgered regression is FIXED — remove
+the stale ``BENCH_ledger.json`` entry and keep the win).
+
+    PYTHONPATH=src python scripts/bench_check.py            # baselines
+    PYTHONPATH=src python scripts/bench_check.py --smoke    # CI gate
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+from typing import Any, Dict, List, Mapping, Optional, Sequence
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.obs.prof import (DEFAULT_GATHER_RANGE, CollectiveContract,
+                            ProgramProfile)
+from repro.obs.regress import (Finding, LedgerEntry, append_history,
+                               check_ledger, compare_ratios,
+                               compare_to_baseline, load_ledger,
+                               worst_exit_code)
+
+ROOT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..")
+
+#: within-run tier ratios the smoke gate tracks (row, reference); the
+#: us_per_aggregation ratio between these pairs is scale-robust
+SMOKE_PAIRS = (
+    ("el_sync_sharded", "el_sync_ingraph"),
+    ("el_sync_sharded_donate", "el_sync_ingraph"),
+    ("el_async_sharded", "el_async_ingraph"),
+    ("el_async_sharded_donate", "el_async_ingraph"),
+    ("el_sync_ingraph_telemetry", "el_sync_ingraph"),
+    ("el_async_ingraph_telemetry", "el_async_ingraph"),
+)
+
+
+def _row_profile(row: Mapping[str, Any]) -> ProgramProfile:
+    """Rehydrate the profile-shaped fields of a BENCH row (enough for a
+    :class:`CollectiveContract` check)."""
+    return ProgramProfile(
+        alias_bytes=row.get("alias_bytes"),
+        collectives=row.get("collectives") or {},
+    )
+
+
+def contract_findings(rows: Mapping[str, Mapping[str, Any]],
+                      *, bench: str = "el") -> List[Finding]:
+    """The declarative contracts over recorded BENCH rows.
+
+    * ``*_sharded*`` rows: gather-before-reduce — at least one
+      all-gather, zero all-reduce / reduce-scatter / all-to-all;
+    * other compiled rows: no collectives at all;
+    * ``*_donate`` rows: ``alias_bytes > 0`` and identical across every
+      donated row of the bench (one param tree — one alias size);
+    * non-donated rows: ``alias_bytes == 0``.
+
+    Host rows (no census recorded) are skipped.
+    """
+    findings: List[Finding] = []
+    donate_alias: Dict[str, int] = {}
+    for name in sorted(rows):
+        row = rows[name]
+        if "collectives" not in row:
+            continue                      # host rows carry no profile
+        donated = name.endswith("_donate")
+        if "sharded" in name:
+            counts = {"all-gather": DEFAULT_GATHER_RANGE,
+                      "all-reduce": 0, "reduce-scatter": 0,
+                      "all-to-all": 0}
+        else:
+            counts = {"all-gather": 0, "all-reduce": 0,
+                      "reduce-scatter": 0, "all-to-all": 0,
+                      "collective-permute": 0}
+        contract = CollectiveContract(
+            name=name, counts=counts,
+            alias_bytes=None if donated else 0)
+        for bad in contract.check(_row_profile(row)):
+            findings.append(Finding("regression", bench, name,
+                                    "contract", bad))
+        alias = row.get("alias_bytes")
+        if donated:
+            if not isinstance(alias, int) or alias <= 0:
+                findings.append(Finding(
+                    "regression", bench, name, "contract",
+                    f"donated row aliased {alias!r} bytes (expected the "
+                    "param tree > 0 — donation fell off)"))
+            else:
+                donate_alias[name] = alias
+    if len(set(donate_alias.values())) > 1:
+        findings.append(Finding(
+            "regression", bench, "/".join(sorted(donate_alias)),
+            "contract",
+            f"donated rows alias different byte counts: {donate_alias} "
+            "(one param tree must alias one size)"))
+    if not findings:
+        findings.append(Finding("ok", bench, "*", "contract",
+                                "census + alias contracts hold"))
+    return findings
+
+
+def _load_rows(path: str) -> Dict[str, Any]:
+    with open(path) as f:
+        return json.load(f)["rows"]
+
+
+def _report(findings: Sequence[Finding]) -> int:
+    for f in findings:
+        if f.kind != "ok":
+            print(f)
+    code = worst_exit_code(findings)
+    n_reg = sum(f.kind == "regression" for f in findings)
+    n_fix = sum(f.kind == "fixed" for f in findings)
+    n_known = sum(f.kind == "known" for f in findings)
+    verdict = {0: "OK", 1: "REGRESSION", 3: "FAILING-BETTER"}[code]
+    print(f"bench_check: {verdict} ({len(findings)} checks, "
+          f"{n_reg} regressions, {n_known} known, {n_fix} fixed)")
+    return code
+
+
+def check_baselines(args) -> int:
+    """Default mode: the committed artifacts must satisfy their own
+    ledger and contracts."""
+    ledger = load_ledger(args.ledger)
+    findings: List[Finding] = []
+    for bench, path in (("el", args.el), ("fleet", args.fleet)):
+        if not os.path.exists(path):
+            print(f"bench_check: missing {path}", file=sys.stderr)
+            return 2
+        rows = _load_rows(path)
+        findings += check_ledger(rows, ledger, bench=bench)
+        if bench == "el":
+            findings += contract_findings(rows, bench=bench)
+    return _report(findings)
+
+
+def check_fresh(args) -> int:
+    """Fresh-vs-baseline comparison (same-config runs)."""
+    baseline = args.baseline or (args.el if args.bench == "el"
+                                 else args.fleet)
+    for p in (args.fresh, baseline):
+        if not os.path.exists(p):
+            print(f"bench_check: missing {p}", file=sys.stderr)
+            return 2
+    ledger = load_ledger(args.ledger)
+    fresh = _load_rows(args.fresh)
+    findings = compare_to_baseline(
+        _load_rows(baseline), fresh, bench=args.bench, ledger=ledger)
+    findings += check_ledger(fresh, ledger, bench=args.bench)
+    if args.bench == "el":
+        findings += contract_findings(fresh, bench=args.bench)
+    return _report(findings)
+
+
+def run_smoke(args) -> int:
+    """The CI gate: a small fresh bench_el run on the debug mesh,
+    contract-checked and ratio-compared against the committed baseline."""
+    if not os.path.exists(args.el):
+        print(f"bench_check: missing baseline {args.el}", file=sys.stderr)
+        return 2
+    out = os.path.join(tempfile.mkdtemp(prefix="bench_smoke_"),
+                       "BENCH_el_smoke.json")
+    cmd = [sys.executable,
+           os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "bench_el.py"),
+           "--devices", str(args.devices), "--edges", "4",
+           "--samples", "512", "--batch", "64", "--budget", "300",
+           "--max-rounds", "16", "--max-events", "64", "--repeats", "2",
+           "--skip-host", "--no-history", "--out", out]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(ROOT, "src"), env.get("PYTHONPATH", "")])
+    print("bench_check: smoke run:", " ".join(cmd), flush=True)
+    proc = subprocess.run(cmd, env=env)
+    if proc.returncode != 0:
+        print("bench_check: smoke bench failed", file=sys.stderr)
+        return 2
+    with open(out) as f:
+        smoke = json.load(f)
+    ledger = load_ledger(args.ledger)
+    findings = contract_findings(smoke["rows"], bench="el")
+    findings += compare_ratios(
+        _load_rows(args.el), smoke["rows"], bench="el",
+        metric="us_per_aggregation", pairs=SMOKE_PAIRS, ledger=ledger,
+        slack=args.slack)
+    findings += check_ledger(smoke["rows"], ledger, bench="el")
+    if not args.no_history:
+        append_history(args.history, "el-smoke", smoke["meta"],
+                       smoke["rows"])
+        print(f"bench_check: appended smoke run to {args.history}")
+    return _report(findings)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="bench regression gate over BENCH_*.json")
+    ap.add_argument("--el", default=os.path.join(ROOT, "BENCH_el.json"))
+    ap.add_argument("--fleet",
+                    default=os.path.join(ROOT, "BENCH_fleet.json"))
+    ap.add_argument("--ledger",
+                    default=os.path.join(ROOT, "BENCH_ledger.json"))
+    ap.add_argument("--history",
+                    default=os.path.join(ROOT, "BENCH_history.jsonl"))
+    ap.add_argument("--fresh", help="fresh BENCH json to compare")
+    ap.add_argument("--baseline",
+                    help="baseline for --fresh (default: the committed "
+                         "artifact of --bench)")
+    ap.add_argument("--bench", choices=("el", "fleet"), default="el",
+                    help="which bench --fresh came from")
+    ap.add_argument("--smoke", action="store_true",
+                    help="run a small bench_el and gate on within-run "
+                         "tier ratios + contracts (the CI step)")
+    ap.add_argument("--devices", type=int, default=4,
+                    help="forced host devices for --smoke")
+    ap.add_argument("--slack", type=float, default=1.5,
+                    help="allowed relative worsening of within-run "
+                         "ratios in --smoke (1.5 = 150%%)")
+    ap.add_argument("--no-history", action="store_true",
+                    help="skip the BENCH_history.jsonl append in "
+                         "--smoke")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        return run_smoke(args)
+    if args.fresh:
+        return check_fresh(args)
+    return check_baselines(args)
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

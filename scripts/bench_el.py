@@ -22,12 +22,23 @@ of every execution tier:
                           ``repro.launch.mesh``;
   * ``sharded_donate``  — both.
 
-Peak live bytes come from XLA's ``memory_analysis`` of the compiled
-executable (arguments + outputs + temps − aliased), so the donation
-saving and the per-device sharding saving are visible even on CPU.
-Timings are CPU-host numbers — correctness-path costs, not TPU perf
-(the roofline models that) — but the sharded rows execute the real
-partitioned program on real (forced) devices.
+Every compiled row carries the tier's full ``repro.obs.prof``
+``ProgramProfile``: peak live bytes (arguments + outputs + temps −
+aliased, per device, from XLA's ``memory_analysis``), cost-analysis
+flops, and the HLO collective census — so the donation saving, the
+per-device sharding saving AND the sharded program's collective
+shape are visible (and regression-gated) even on CPU.  Timings are
+CPU-host numbers — correctness-path costs, not TPU perf (the roofline
+models that) — but the sharded rows execute the real partitioned
+program on real (forced) devices.
+
+Timing convention (shared with ``bench_fleet.py``): the scalar
+``wall_us`` is the MIN over ``--repeats`` (the floor is the honest
+cost on a shared host); the full min/mean/std/percentile spread is
+kept alongside as ``wall_us_stats`` (``repro.obs.timing.
+summarize_ns`` shape).  Each run also appends a schema-versioned
+entry to ``BENCH_history.jsonl`` (``--no-history`` to skip) for
+``scripts/bench_check.py``.
 
     PYTHONPATH=src python scripts/bench_el.py --devices 4 --out BENCH_el.json
 
@@ -62,7 +73,9 @@ from repro.el.events import ASYNC_KNOB_NAMES, async_knobs, make_async_program
 from repro.el.ingraph import KNOB_NAMES, make_sync_program, sync_knobs
 from repro.launch.classic import classic_fixture
 from repro.launch.mesh import make_debug_mesh_for
-from repro.obs.timing import repeat_s, time_block
+from repro.obs.prof import profile_jit
+from repro.obs.regress import append_history
+from repro.obs.timing import repeat_s, summarize_ns, time_block
 from repro.sharding import el_run_in_shardings
 
 
@@ -77,22 +90,25 @@ def _fixture(args):
     return fx["model"], fx["executor"], ol, fx["n_samples"]
 
 
-def _memory(jfn, example_args):
-    """Per-device peak live bytes of the compiled executable (None when
-    the backend cannot report it)."""
-    try:
-        ma = jfn.lower(*example_args).compile().memory_analysis()
-        peak = (ma.argument_size_in_bytes + ma.output_size_in_bytes
-                + ma.temp_size_in_bytes - ma.alias_size_in_bytes)
-        return {
-            "peak_live_bytes": int(peak),
-            "argument_bytes": int(ma.argument_size_in_bytes),
-            "output_bytes": int(ma.output_size_in_bytes),
-            "temp_bytes": int(ma.temp_size_in_bytes),
-            "alias_bytes": int(ma.alias_size_in_bytes),
-        }
-    except Exception as e:                     # pragma: no cover
-        return {"peak_live_bytes": None, "memory_error": str(e)[:120]}
+def _profile_row(jfn, example_args, donate):
+    """The tier's ``ProgramProfile`` flattened into BENCH-row fields
+    (the memory keys keep their historical names; the census and flops
+    are new with the performance observatory)."""
+    prof = profile_jit(jfn, *example_args, donated=donate)
+    row = {
+        "peak_live_bytes": prof.peak_live_bytes,
+        "argument_bytes": prof.argument_bytes,
+        "output_bytes": prof.output_bytes,
+        "temp_bytes": prof.temp_bytes,
+        "alias_bytes": prof.alias_bytes,
+        "flops": prof.flops,
+        "collectives": prof.collectives,
+        "collective_bytes": prof.collective_bytes,
+        "hlo_lines": prof.hlo_lines,
+    }
+    if prof.errors:
+        row["profile_errors"] = list(prof.errors)
+    return row
 
 
 def bench_compiled(model, ex, ol, ns, mode, mesh, donate, args,
@@ -136,10 +152,10 @@ def bench_compiled(model, ex, ol, ns, mode, mesh, donate, args,
         "n_aggregations": n_agg,
         "us_per_aggregation": dt_us / max(n_agg, 1),
         "wall_us": dt_us,
-        "wall_us_mean": float(np.mean(reps)),
+        "wall_us_stats": summarize_ns(reps),
     }
-    row.update(_memory(jfn, (jax.eval_shape(lambda p: p, params0), rng,
-                             knobs)))
+    row.update(_profile_row(
+        jfn, (jax.eval_shape(lambda p: p, params0), rng, knobs), donate))
     return row
 
 
@@ -180,6 +196,11 @@ def main(argv=None) -> None:
     ap.add_argument("--skip-host", action="store_true",
                     help="omit the slow host-loop baselines")
     ap.add_argument("--out", default="BENCH_el.json")
+    ap.add_argument("--history", default="BENCH_history.jsonl",
+                    help="append a schema-versioned entry here "
+                         "(scripts/bench_check.py reads it)")
+    ap.add_argument("--no-history", action="store_true",
+                    help="skip the BENCH_history.jsonl append")
     args = ap.parse_args(argv)
 
     n_dev = jax.device_count()
@@ -223,10 +244,13 @@ def main(argv=None) -> None:
             "batch": args.batch, "budget": args.budget,
             "max_rounds": args.max_rounds, "max_events": args.max_events,
             "devices": n_dev, "mesh": dict(mesh.shape),
+            "repeats": args.repeats,
             "backend": jax.default_backend(), "jax": jax.__version__,
-            "note": ("CPU-host correctness-path timings; peak bytes are "
-                     "per-device XLA memory_analysis (args+outputs+temps"
-                     "-aliased)"),
+            "note": ("CPU-host correctness-path timings; wall_us is "
+                     "min-of-repeats (wall_us_stats carries the spread); "
+                     "peak bytes are per-device XLA memory_analysis "
+                     "(args+outputs+temps-aliased); collectives are the "
+                     "optimized-HLO census (XLA-version dependent)"),
         },
         "rows": rows,
     }
@@ -234,6 +258,9 @@ def main(argv=None) -> None:
         json.dump(report, f, indent=1, sort_keys=True)
         f.write("\n")
     print(f"wrote {args.out}")
+    if not args.no_history:
+        append_history(args.history, "el", report["meta"], rows)
+        print(f"appended to {args.history}")
 
 
 if __name__ == "__main__":

@@ -56,7 +56,8 @@ from repro.el import ELSession, TenantRun
 from repro.el.cache import ProgramCache
 from repro.el.fleet import FleetServer
 from repro.launch.classic import classic_fixture
-from repro.obs.timing import repeat_s
+from repro.obs.regress import append_history
+from repro.obs.timing import repeat_s, summarize_ns
 
 #: per-tenant knob grids — every combination is the SAME structural
 #: config, so the whole population is one cohort / one compile
@@ -107,6 +108,7 @@ def bench_sequential(fx, base, n: int, args, ingraph: bool) -> dict:
     n_agg = last["n_agg"]
     wall = min(reps)
     return {"tenants": n, "wall_s": wall,
+            "wall_s_stats": summarize_ns(reps),
             "tenants_per_sec": n / wall,
             "n_aggregations": n_agg,
             "us_per_aggregation": wall * 1e6 / max(n_agg, 1)}
@@ -146,6 +148,7 @@ def bench_fleet(fx, base, n: int, args) -> dict:
     n_agg = sum(r.n_aggregations for r in last["reports"].values())
     wall = min(reps)
     return {"tenants": n, "wall_s": wall,
+            "wall_s_stats": summarize_ns(reps),
             "tenants_per_sec": n / wall,
             "n_aggregations": n_agg,
             "us_per_aggregation": wall * 1e6 / max(n_agg, 1),
@@ -174,6 +177,11 @@ def main(argv=None) -> None:
     ap.add_argument("--skip-host", action="store_true",
                     help="omit the slow host-loop sequential baseline")
     ap.add_argument("--out", default="BENCH_fleet.json")
+    ap.add_argument("--history", default="BENCH_history.jsonl",
+                    help="append a schema-versioned entry here "
+                         "(scripts/bench_check.py reads it)")
+    ap.add_argument("--no-history", action="store_true",
+                    help="skip the BENCH_history.jsonl append")
     args = ap.parse_args(argv)
     counts = [int(c) for c in args.tenants.split(",") if c]
 
@@ -214,7 +222,8 @@ def main(argv=None) -> None:
             "edges": args.edges, "samples": args.samples,
             "max_rounds": args.max_rounds, "repeats": args.repeats,
             "backend": jax.default_backend(), "jax": jax.__version__,
-            "note": ("CPU-host min-of-repeats wall clock; every tier "
+            "note": ("CPU-host wall clock: wall_s is min-of-repeats "
+                     "(wall_s_stats carries the spread); every tier "
                      "warm-compiled before timing and bit-identical by "
                      "the fleet test suite's contract; on CPU the "
                      "fleet's edge over ingraph is amortized dispatch + "
@@ -226,6 +235,9 @@ def main(argv=None) -> None:
         json.dump(report, f, indent=1, sort_keys=True)
         f.write("\n")
     print(f"wrote {args.out}")
+    if not args.no_history:
+        append_history(args.history, "fleet", report["meta"], rows)
+        print(f"appended to {args.history}")
 
 
 if __name__ == "__main__":

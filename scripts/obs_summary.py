@@ -69,6 +69,19 @@ def main(argv=None) -> None:
         more = f" (+{len(samples) - 4} more)" if len(samples) > 4 else ""
         print(f"  {name}: {vals}{more}")
 
+    prof_names = [n for n in metrics if n.startswith("el_profile_")]
+    if prof_names:
+        print("\nprogram profile (repro.obs.prof):")
+        for scalar in ("el_profile_flops", "el_profile_peak_live_bytes",
+                       "el_profile_alias_bytes",
+                       "el_profile_collective_bytes"):
+            if scalar in metrics:
+                v = metrics[scalar][0]["value"]
+                print(f"  {scalar.removeprefix('el_profile_')}: {v:g}")
+        for s in metrics.get("el_profile_collectives", []):
+            op = s["labels"].get("op", "?")
+            print(f"  collective {op}: x{s['value']:g}")
+
     spans_path = args.path + ".spans.jsonl"
     span_names = set()
     if os.path.exists(spans_path):

@@ -33,6 +33,11 @@ class ProgramCache:
     def __init__(self, max_entries: int = 8):
         self.max_entries = int(max_entries)
         self._entries: Dict[tuple, Any] = {}
+        # per-entry ProgramProfile side-store (repro.obs.prof): kept out
+        # of _entries so cached values stay bare callables — session
+        # internals (and the tests that poke them) treat entries as the
+        # programs themselves.  Evicted with the entry.
+        self._profiles: Dict[tuple, Any] = {}
         self.hits = 0
         self.misses = 0
         self.evictions = 0
@@ -55,19 +60,40 @@ class ProgramCache:
         from repro.obs import trace
         self._entries[key] = program
         while len(self._entries) > self.max_entries:
-            self._entries.pop(next(iter(self._entries)))
+            evicted = next(iter(self._entries))
+            self._entries.pop(evicted)
+            self._profiles.pop(evicted, None)
             self.evictions += 1
             trace.event("cache.evict", evictions=self.evictions)
         return program
 
+    def set_profile(self, key: tuple, profile: Any) -> Any:
+        """Attach a :class:`repro.obs.prof.ProgramProfile` to a cached
+        program (no-op for unknown keys — the entry may have been
+        evicted between compile and profile)."""
+        if key in self._entries:
+            self._profiles[key] = profile
+        return profile
+
+    def profile(self, key: tuple) -> Optional[Any]:
+        """The profile attached to a cached program (None when never
+        profiled, or evicted)."""
+        return self._profiles.get(key)
+
+    def profiles(self) -> Dict[tuple, Any]:
+        """Snapshot of every attached profile (key → ProgramProfile)."""
+        return dict(self._profiles)
+
     def stats(self) -> Dict[str, int]:
-        """Counter snapshot: entries/max_entries/hits/misses/evictions."""
+        """Counter snapshot: entries/max_entries/hits/misses/evictions
+        (+ how many entries carry a profile)."""
         return {
             "entries": len(self._entries),
             "max_entries": self.max_entries,
             "hits": self.hits,
             "misses": self.misses,
             "evictions": self.evictions,
+            "profiled": len(self._profiles),
         }
 
     def clear(self) -> int:
@@ -77,6 +103,7 @@ class ProgramCache:
         their aliases."""
         n = len(self._entries)
         self._entries.clear()
+        self._profiles.clear()
         return n
 
     # -- dict-compatible surface ---------------------------------------------

@@ -48,7 +48,8 @@ class Cohort:
     """Slot-batched continuous service of one structural config."""
 
     def __init__(self, key: tuple, batch: CellBatch,
-                 knobs_fn: Callable, n_samples: Optional[np.ndarray]):
+                 knobs_fn: Callable, n_samples: Optional[np.ndarray], *,
+                 profile: bool = False, cache=None):
         self.key = key
         self.batch = batch
         self.knobs_fn = knobs_fn
@@ -61,6 +62,13 @@ class Cohort:
         self._slots: List[Optional[_Active]] = [None] * batch.n_slots
         self._stacked = None                     # device carry [n_slots,...]
         self._knobs_np: Optional[Dict[str, np.ndarray]] = None
+        # performance-observatory hooks (repro.obs.prof): when armed,
+        # the first wave lazily profiles the compiled wave-step program
+        # (one extra AOT compile per cohort) and the snapshot joins
+        # every tenant report from this cohort
+        self.profile_requested = bool(profile)
+        self._cache = cache
+        self._profile = None
 
     # -- admission ----------------------------------------------------------
 
@@ -139,6 +147,8 @@ class Cohort:
             if not active.any():
                 sp["completed"] = 0
                 return []
+            if self.profile_requested and self._profile is None:
+                self._profile_step(active)
             self._stacked, running = self.batch.step(
                 self._stacked,
                 {k: jnp.asarray(v) for k, v in self._knobs_np.items()},
@@ -168,6 +178,22 @@ class Cohort:
             sp["completed"] = len(done)
             return done
 
+    def _profile_step(self, active: np.ndarray) -> None:
+        """Extract the cohort's :class:`repro.obs.prof.ProgramProfile`
+        from the compiled wave-step program, with the live carry as the
+        example arguments (``lower()`` reads shapes only — the donated
+        carry is not consumed).  Runs once per cohort; the snapshot is
+        also attached to the shared program cache entry."""
+        from repro.obs import prof as obs_prof, trace as obs_trace
+        with obs_trace.span("cohort.profile", mode=self.batch.mode):
+            prof = obs_prof.profile_jit(
+                self.batch.step, self._stacked,
+                {k: jnp.asarray(v) for k, v in self._knobs_np.items()},
+                jnp.asarray(active), donated=True)
+        self._profile = prof
+        if self._cache is not None:
+            self._cache.set_profile(self.key, prof)
+
     def _finalize(self, s: int, emit: EmitFn) -> Tuple[str, ELReport]:
         slot = self._slots[s]
         carry = self.batch.take_slot(self._stacked, jnp.int32(s))
@@ -183,6 +209,10 @@ class Cohort:
             final_params=params,
             elapsed_s=time.perf_counter() - slot.t0,
             records=slot.records)
+        if self._profile is not None:
+            tele = dict(report.telemetry or {})
+            tele["profile"] = self._profile.to_json()
+            report.telemetry = tele
         self._slots[s] = None                    # frees the row; the mask
         self.completed += 1                      # keeps it inert until reuse
         emit(ReportReady(slot.tenant_id, report))

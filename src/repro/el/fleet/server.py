@@ -54,11 +54,21 @@ class FleetServer:
     today's programs bit-for-bit).  Each tenant's report then carries
     its own ring snapshot in ``report.telemetry["rings"]``.  The gate
     joins the cohort key, so on/off tenants never share a cohort.
+
+    ``profile=`` arms the performance observatory
+    (``repro.obs.prof``): each cohort lazily extracts a
+    ``ProgramProfile`` of its compiled wave-step program (XLA
+    cost/memory analysis + the HLO collective census) at its first
+    wave — one extra AOT compile per cohort — and every tenant report
+    from that cohort carries it as ``report.telemetry["profile"]``.
+    ``REPRO_EL_PROFILE=1`` arms it process-wide.
     """
 
     def __init__(self, *, n_slots: int = 4, rounds_per_wave: int = 32,
                  mesh=None, cache: Optional[ProgramCache] = None,
-                 max_cached: int = 8, telemetry=None):
+                 max_cached: int = 8, telemetry=None,
+                 profile: bool = False):
+        import os
         from repro.obs.rings import as_spec
         if n_slots < 1:
             raise ValueError(f"n_slots must be >= 1, got {n_slots}")
@@ -66,6 +76,8 @@ class FleetServer:
         self.rounds_per_wave = int(rounds_per_wave)
         self.mesh = mesh
         self.telemetry = as_spec(telemetry)
+        self.profile = bool(profile
+                            or os.environ.get("REPRO_EL_PROFILE"))
         self._owns_cache = cache is None
         self._cache = ProgramCache(max_cached) if cache is None else cache
         self._cohorts: Dict[tuple, Cohort] = {}
@@ -133,7 +145,8 @@ class FleetServer:
         if cohort is None:
             cohort = Cohort(key, self._batch_for(run, horizon),
                             self._knobs_fn(run),
-                            self._n_samples_of(run))
+                            self._n_samples_of(run),
+                            profile=self.profile, cache=self._cache)
             self._cohorts[key] = cohort
         cohort.submit(tenant_id, run)
         return tenant_id

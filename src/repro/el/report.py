@@ -45,7 +45,9 @@ class ELReport:
     final_params: Any = None           # the trained global model
     #: observability payload (``repro.obs``): ``"rings"`` holds the
     #: in-graph telemetry buffers (numpy, when the run recorded them),
-    #: ``"cache"`` the driver's ``ProgramCache.stats()`` snapshot.
+    #: ``"cache"`` the driver's ``ProgramCache.stats()`` snapshot, and
+    #: ``"profile"`` the compiled program's ``ProgramProfile.to_json()``
+    #: (XLA cost/memory analysis + collective census, when profiled).
     telemetry: Optional[Dict[str, Any]] = None
 
     def metric_at_consumption(self, budget_frac: float,

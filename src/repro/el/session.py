@@ -357,14 +357,62 @@ class ELSession:
 
     # -- compiled fast path ---------------------------------------------------
 
-    def _attach_cache_stats(self, report: ELReport) -> ELReport:
+    def _attach_cache_stats(self, report: ELReport,
+                            key: Optional[tuple] = None) -> ELReport:
         """Fold the session's compile-cache counters into
         ``report.telemetry["cache"]`` (always present on fast-path
-        reports — the cache exists whether or not rings were on)."""
+        reports — the cache exists whether or not rings were on).  When
+        ``key`` names a cached program that has been profiled, its
+        :class:`repro.obs.prof.ProgramProfile` snapshot joins as
+        ``report.telemetry["profile"]``."""
         tele = dict(report.telemetry or {})
         tele["cache"] = self._programs.stats()
+        if key is not None:
+            prof = self._programs.profile(key)
+            if prof is not None:
+                tele["profile"] = prof.to_json()
         report.telemetry = tele
         return report
+
+    def _profile_program(self, key: tuple, program: Any,
+                         example_args: tuple, *, mode: str, mesh,
+                         donate: bool, profile: bool, contract) -> Any:
+        """The dispatch-time half of the performance observatory
+        (``repro.obs.prof``): lazily extract a ``ProgramProfile`` for
+        the cached program (once per cache entry — the AOT compile
+        behind it does not share the jit dispatch cache, so this is
+        strictly opt-in) and, when a contract is armed, enforce it.
+
+        ``profile`` / ``contract`` are the per-call opt-ins;
+        ``REPRO_EL_PROFILE=1`` / ``REPRO_EL_CONTRACTS=1`` arm them
+        process-wide.  ``contract=True`` checks the mode's
+        ``default_contract`` (collective census + donation aliasing);
+        a ``CollectiveContract`` instance checks that.  Violations
+        raise ``repro.obs.prof.ContractViolation`` before dispatch.
+        """
+        import os
+        from repro.obs import prof as obs_prof, trace as obs_trace
+        if contract is None and os.environ.get("REPRO_EL_CONTRACTS"):
+            contract = True
+        want_profile = (profile or bool(contract)
+                        or bool(os.environ.get("REPRO_EL_PROFILE")))
+        if not want_profile:
+            return self._programs.profile(key)
+        prof = self._programs.profile(key)
+        if prof is None:
+            with obs_trace.span("session.profile", mode=mode):
+                prof = obs_prof.profile_jit(program, *example_args,
+                                            donated=donate)
+                self._programs.set_profile(key, prof)
+        if contract:
+            c = contract
+            if c is True:
+                c = obs_prof.default_contract(
+                    mesh=mesh, donated=donate, mode=mode,
+                    param_bytes=obs_prof.param_tree_bytes(
+                        example_args[0]))
+            c.enforce(prof)
+        return prof
 
     @staticmethod
     def _structural_cfg(cfg: OL4ELConfig) -> OL4ELConfig:
@@ -456,7 +504,8 @@ class ELSession:
     def run_sync_ingraph(self, max_rounds: int = 512,
                          metric_fn: Optional[Callable] = None, *,
                          mesh=None, donate: bool = False,
-                         telemetry=None) -> ELReport:
+                         telemetry=None, profile: bool = False,
+                         contract=None) -> ELReport:
         """Run the whole budgeted sync loop as ONE compiled XLA program.
 
         Numerically equivalent (up to RNG streams) to ``run_sync`` under
@@ -491,6 +540,18 @@ class ELSession:
         True/int/``TelemetrySpec`` on).  The recorded rings land in
         ``report.telemetry["rings"]``; the gate is part of the compile
         cache key, so on/off runs never share a program slot.
+
+        ``profile=True`` extracts a ``repro.obs.prof.ProgramProfile``
+        for the compiled program (XLA cost/memory analysis + the HLO
+        collective census) — computed once per cached program, attached
+        to the cache entry and surfaced as
+        ``report.telemetry["profile"]``.  ``contract=`` additionally
+        enforces a ``CollectiveContract`` at dispatch time (``True``:
+        the mode's ``default_contract`` — gather-before-reduce census
+        plus donation alias bytes; or a contract instance).
+        ``REPRO_EL_PROFILE=1`` / ``REPRO_EL_CONTRACTS=1`` arm these
+        process-wide; both default off (profiling costs one extra AOT
+        compile per program).
         """
         from repro.el.ingraph import (KNOB_NAMES, make_sync_program,
                                       sync_knobs)
@@ -516,6 +577,12 @@ class ELSession:
                     KNOB_NAMES, mesh, donate, params)
                 self._cache_program(key, program)
         self._fastpath, self._fastpath_key = program, key
+        self._profile_program(
+            key, program,
+            (jax.eval_shape(lambda p: p, params),
+             jax.random.key(cfg.seed + 17), sync_knobs(cfg)),
+            mode="sync", mesh=mesh, donate=donate, profile=profile,
+            contract=contract)
         with obs_trace.span("session.dispatch", mode="sync") as sp:
             params, out = jax.block_until_ready(
                 program(params, jax.random.key(cfg.seed + 17),
@@ -529,12 +596,13 @@ class ELSession:
             out, mode="sync", policy=cfg.policy, horizon=max_rounds,
             final_metric=final, final_params=params,
             elapsed_s=time.perf_counter() - t0, records=records)
-        return self._attach_cache_stats(report)
+        return self._attach_cache_stats(report, key)
 
     def run_async_ingraph(self, max_events: Optional[int] = None,
                           metric_fn: Optional[Callable] = None, *,
                           mesh=None, donate: bool = False,
-                          telemetry=None) -> ELReport:
+                          telemetry=None, profile: bool = False,
+                          contract=None) -> ELReport:
         """Run the whole budgeted async event loop as ONE compiled XLA
         program (``repro.el.events``): no host priority queue — finish
         times live in an ``[n_edges]`` array and each ``lax.while_loop``
@@ -557,6 +625,10 @@ class ELSession:
         ``telemetry=`` switches the in-graph observability rings on
         (see ``run_sync_ingraph``; async rings additionally record the
         merge ``alpha``/staleness and event inter-arrival times).
+        ``profile=`` / ``contract=`` attach a ``ProgramProfile`` and
+        enforce dispatch-time collective contracts exactly as in
+        ``run_sync_ingraph`` (the async default contract uses the same
+        gather-before-reduce census).
         """
         from repro.el.events import (ASYNC_KNOB_NAMES, async_knobs,
                                      make_async_program,
@@ -589,6 +661,12 @@ class ELSession:
                     ASYNC_KNOB_NAMES, mesh, donate, params)
                 self._cache_program(key, program)
         self._async_fastpath, self._async_key = program, key
+        self._profile_program(
+            key, program,
+            (jax.eval_shape(lambda p: p, params),
+             jax.random.key(cfg.seed + 17), async_knobs(cfg)),
+            mode="async", mesh=mesh, donate=donate, profile=profile,
+            contract=contract)
         with obs_trace.span("session.dispatch", mode="async") as sp:
             params, out = jax.block_until_ready(
                 program(params, jax.random.key(cfg.seed + 17),
@@ -602,12 +680,12 @@ class ELSession:
             out, mode="async", policy=cfg.policy, horizon=horizon,
             final_metric=final, final_params=params,
             elapsed_s=time.perf_counter() - t0, records=records)
-        return self._attach_cache_stats(report)
+        return self._attach_cache_stats(report, key)
 
     # -- compiled ablation sweeps ---------------------------------------------
 
     def sweep(self, spec, *, mesh=None,
-              metric_fn: Optional[Callable] = None):
+              metric_fn: Optional[Callable] = None, telemetry=None):
         """Run a whole ablation grid as ONE compiled, vmapped program.
 
         ``spec`` is a :class:`repro.el.sweep.SweepSpec` — grids over
@@ -620,13 +698,18 @@ class ELSession:
         ``run_async_ingraph`` with that cell's config (same RNG
         streams), and the same support matrix applies.  With ``mesh=``
         the sweep dim shards over the mesh's (``pod``, ``data``) axes.
-        Returns a :class:`repro.el.sweep.SweepReport`.
+        ``telemetry=`` switches the per-cell in-graph rings on (see
+        ``run_sync_ingraph``); each cell's rings land stacked in the
+        report's ``out["telemetry"]`` leaves.  Returns a
+        :class:`repro.el.sweep.SweepReport`.
         """
         from repro.el.sweep.engine import (make_sweep_program,
                                            run_sweep_program)
         from repro.el.sweep.report import SweepReport
+        from repro.obs import rings as obs_rings
         ex = self._require_executor()
         cfg = self._ingraph_cfg("ELSession.sweep")
+        tele_spec = obs_rings.as_spec(telemetry)
         t0 = time.perf_counter()
         # the jitted vmapped program only depends on the structural config,
         # the grid SHAPE (axis lengths fix the [n_cells] dim and, with a
@@ -636,7 +719,8 @@ class ELSession:
                       spec.max_rounds)
         key = ("sweep", ex, self._structural_cfg(cfg), spec_shape,
                metric_fn, self.metric_name, mesh,
-               None if self._n_samples is None else tuple(self._n_samples))
+               None if self._n_samples is None else tuple(self._n_samples),
+               tele_spec)
         from repro.obs import trace as obs_trace
         program = self._programs.get(key)
         if program is None:
@@ -646,7 +730,7 @@ class ELSession:
                     ex.model, ex.edge_data, ex.eval_set, cfg, spec,
                     lr=ex.lr, batch=ex.batch, n_samples=self._n_samples,
                     metric_fn=metric_fn, metric_name=self.metric_name,
-                    mesh=mesh)
+                    mesh=mesh, telemetry=tele_spec)
                 self._cache_program(key, program)
         self._sweep_program, self._sweep_key = program, key
         with obs_trace.span("session.dispatch", mode="sweep",

@@ -137,7 +137,7 @@ def make_sweep_program(model, edge_data, eval_set, cfg: OL4ELConfig,
                        n_samples: Optional[np.ndarray] = None,
                        metric_fn: Optional[Callable] = None,
                        metric_name: str = "accuracy",
-                       mesh=None):
+                       mesh=None, telemetry=None):
     """Compile the sweep: ``program(init_params, keys, knobs)`` →
     ``(params_stacked, out_stacked)`` with every output carrying a
     leading ``[n_cells]`` axis.
@@ -145,7 +145,9 @@ def make_sweep_program(model, edge_data, eval_set, cfg: OL4ELConfig,
     The per-cell computation is ``jax.vmap`` of the very same program
     ``run_sync_ingraph`` / ``run_async_ingraph`` drives (picked by
     ``cfg.mode``), so each cell is bit-identical to an independent run
-    with that cell's config.
+    with that cell's config.  ``telemetry=`` gates the per-cell rings
+    (see ``make_sync_program``) — each cell's recorded rings come back
+    stacked under ``out["telemetry"]``.
     """
     cfgs = spec.cell_cfgs(cfg)
     # structural fields (n_edges, utility, mode, ...) are identical
@@ -155,6 +157,7 @@ def make_sweep_program(model, edge_data, eval_set, cfg: OL4ELConfig,
     core = make_program(
         model, edge_data, eval_set, cfgs[0], lr=lr, batch=batch,
         n_samples=n_samples, metric_fn=metric_fn, metric_name=metric_name,
+        telemetry=telemetry,
         **({"max_events": spec.max_rounds} if cfg.mode == "async"
            else {"max_rounds": spec.max_rounds}))
     vmapped = jax.vmap(core, in_axes=(None, 0, 0))

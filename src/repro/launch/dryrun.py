@@ -30,7 +30,6 @@ Step per shape kind:
 import argparse
 import dataclasses
 import json
-import re
 import sys
 import time
 from typing import Any, Dict, Optional
@@ -50,84 +49,14 @@ from repro.train.optimizer import init_opt_state
 from repro.train.state import (TrainState, make_prefill_step,
                                make_train_step)
 
-COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
-               "collective-permute")
-
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
-    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
-    "c128": 16,
-}
-
-_SHAPE_RE = re.compile(r"(pred|bf16|f16|f32|f64|s8|u8|s16|u16|s32|u32|s64|"
-                       r"u64|c64|c128)\[([0-9,]*)\]")
-
-
-def _type_bytes(type_str: str) -> int:
-    total = 0
-    for m in _SHAPE_RE.finditer(type_str):
-        dt, dims = m.group(1), m.group(2)
-        n = 1
-        if dims:
-            for d in dims.split(","):
-                n *= int(d)
-        total += n * _DTYPE_BYTES[dt]
-    return total
-
-
-def parse_collectives(hlo_text: str) -> Dict[str, Any]:
-    """Sum the bytes moved by every collective op in the optimized HLO.
-
-    Post-optimization HLO prints operands without types, so we meter the
-    RESULT type of each collective: for all-reduce / all-to-all /
-    collective-permute the result equals the operand; for all-gather the
-    result is the gathered (received) payload per device; for
-    reduce-scatter we scale the result back up by the shrink factor when
-    derivable.  Shapes in the partitioned module are per-device.
-    ``-start`` async forms are counted once (the ``-done`` op has a
-    different result structure and is skipped via the op-name match).
-    """
-    per_op: Dict[str, Dict[str, float]] = {}
-    for line in hlo_text.splitlines():
-        m = re.search(
-            r"=\s+(\(?[a-z0-9\[\],{}\s]+?\)?)\s+"
-            r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
-            r"collective-permute)(?:-start)?\(", line)
-        if not m:
-            continue
-        result_type, op = m.group(1), m.group(2)
-        nbytes = _type_bytes(result_type)
-        d = per_op.setdefault(op, {"count": 0, "bytes": 0})
-        d["count"] += 1
-        d["bytes"] += nbytes
-    total = sum(d["bytes"] for d in per_op.values())
-    return {"per_op": per_op, "bytes_per_device": total}
-
-
-def _mem_dict(compiled) -> Dict[str, float]:
-    try:
-        ma = compiled.memory_analysis()
-    except Exception as e:                                  # pragma: no cover
-        return {"error": str(e)}
-    out = {}
-    for k in ("argument_size_in_bytes", "output_size_in_bytes",
-              "temp_size_in_bytes", "generated_code_size_in_bytes",
-              "alias_size_in_bytes"):
-        v = getattr(ma, k, None)
-        if v is not None:
-            out[k] = int(v)
-    return out
-
-
-def _cost_dict(compiled) -> Dict[str, float]:
-    try:
-        ca = compiled.cost_analysis()
-    except Exception as e:                                  # pragma: no cover
-        return {"error": str(e)}
-    if isinstance(ca, (list, tuple)):
-        ca = ca[0]
-    return {k: float(v) for k, v in ca.items()
-            if k in ("flops", "bytes accessed", "transcendentals")}
+# the HLO collective parser and the memory/cost readers live in
+# repro.obs.prof now (nothing observability-side may import THIS module
+# — the XLA_FLAGS mutation above locks the device count); re-exported
+# here for back-compat with existing imports.
+from repro.obs.prof import (COLLECTIVES, _DTYPE_BYTES,  # noqa: F401
+                            _SHAPE_RE, _type_bytes, parse_collectives)
+from repro.obs.prof import cost_dict as _cost_dict
+from repro.obs.prof import memory_dict as _mem_dict
 
 
 # ---------------------------------------------------------------------------

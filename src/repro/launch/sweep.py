@@ -35,7 +35,7 @@ from repro.el.sweep import spec_from_sequences
 from repro.launch.classic import classic_fixture
 from repro.launch.mesh import make_debug_mesh_for
 from repro.obs.cli import (add_metrics_args, begin_observability,
-                           finish_observability)
+                           finish_observability, telemetry_arg)
 
 
 def build_session(args) -> ELSession:
@@ -93,6 +93,7 @@ def main() -> None:
                     help="'debug': shard the sweep over a 2x2 host-device "
                          "mesh (the production placement, CPU-emulated)")
     add_metrics_args(ap)
+    telemetry_arg(ap)
     args = ap.parse_args()
     begin_observability(args)
 
@@ -111,7 +112,7 @@ def main() -> None:
           + (f" on mesh {tuple(mesh.shape.items())}" if mesh else ""),
           flush=True)
 
-    report = session.sweep(spec, mesh=mesh)
+    report = session.sweep(spec, mesh=mesh, telemetry=args.telemetry)
 
     print(f"\n{'ucb_c':>6s} {'budget':>8s} {'H':>5s} {'noise':>6s} "
           f"{'alpha':>6s} {'seed':>5s} "
@@ -136,6 +137,10 @@ def main() -> None:
               f"H={p['heterogeneity']:.1f}: metric={p['final_metric']:.4f} "
               f"@ consumed={p['total_consumed']:.0f}")
     print("\n" + report.summary())
+    cache = session.compile_cache.stats()
+    print(f"compile cache: {cache['entries']} programs "
+          f"({cache['hits']} hits, {cache['misses']} misses, "
+          f"{cache['evictions']} evictions)", flush=True)
 
     registry = None
     if args.metrics_out:

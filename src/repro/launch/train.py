@@ -133,6 +133,11 @@ def train_classic_ol4el(exp, args) -> None:
           f"final {metric} {report.final_metric:.4f}, "
           f"consumed {report.total_consumed:.0f} "
           f"({report.terminated_reason}); arm pulls {report.arm_pulls}")
+    cache = (report.telemetry or {}).get("cache")
+    if cache:
+        print(f"compile cache: {cache['entries']} programs "
+              f"({cache['hits']} hits, {cache['misses']} misses, "
+              f"{cache['evictions']} evictions)", flush=True)
     if args.ckpt:
         checkpoint.save(args.ckpt, report.final_params,
                         step=report.n_aggregations)

@@ -13,15 +13,30 @@ Three substrates, one package:
     counters/gauges/histograms rendered as Prometheus text + JSON via
     ``ELReport.telemetry`` and the launchers' ``--metrics-out``.
 
-Plus the shared bench timing helpers (:mod:`repro.obs.timing`).
-``repro.obs`` never imports ``repro.el`` — the EL runtime imports obs
-(lazily where it is hot), so there is no cycle.
+Plus the perf half: **program profiles + collective contracts**
+(:mod:`repro.obs.prof` — XLA cost/memory analysis and the HLO
+collective census of every compiled EL program, with declarative
+dispatch-time contracts), **bench-regression bookkeeping**
+(:mod:`repro.obs.regress` — ``BENCH_history.jsonl``, baselines,
+tolerances and the known-regression ledger behind
+``scripts/bench_check.py``), and the shared bench timing helpers
+(:mod:`repro.obs.timing`).  ``repro.obs`` never imports ``repro.el``
+— the EL runtime imports obs (lazily where it is hot), so there is no
+cycle.
 """
 
 from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
                                parse_prometheus, registry_from_fleet,
                                registry_from_report, spans_into_registry,
                                write_metrics_files)
+from repro.obs.prof import (CollectiveContract, ContractViolation,
+                            ProgramProfile, default_contract,
+                            param_tree_bytes, parse_collectives,
+                            profile_compiled, profile_jit)
+from repro.obs.regress import (Finding, LedgerEntry, append_history,
+                               check_ledger, compare_ratios,
+                               compare_to_baseline, load_history,
+                               load_ledger, worst_exit_code)
 from repro.obs.rings import (TelemetrySpec, as_spec,
                              async_reference_telemetry, ring_order,
                              sync_reference_telemetry, unroll_ring)
@@ -34,6 +49,12 @@ __all__ = [
     "Counter", "Gauge", "Histogram", "MetricsRegistry",
     "parse_prometheus", "registry_from_fleet", "registry_from_report",
     "spans_into_registry", "write_metrics_files",
+    "CollectiveContract", "ContractViolation", "ProgramProfile",
+    "default_contract", "param_tree_bytes", "parse_collectives",
+    "profile_compiled", "profile_jit",
+    "Finding", "LedgerEntry", "append_history", "check_ledger",
+    "compare_ratios", "compare_to_baseline", "load_history",
+    "load_ledger", "worst_exit_code",
     "TelemetrySpec", "as_spec", "async_reference_telemetry",
     "ring_order", "sync_reference_telemetry", "unroll_ring",
     "TimedBlock", "repeat_s", "summarize_ns", "time_block", "timeit_us",

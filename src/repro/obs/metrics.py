@@ -38,8 +38,30 @@ def _labels_key(labels: Optional[Mapping[str, str]]
                         for k, v in (labels or {}).items()))
 
 
+def _escape_label(v: str) -> str:
+    """Prometheus label-value escaping: backslash, double-quote and
+    newline (exposition-format spec, in that order so the escapes
+    themselves survive)."""
+    return v.replace("\\", "\\\\").replace('"', '\\"').replace("\n", "\\n")
+
+
+def _unescape_label(v: str) -> str:
+    out: List[str] = []
+    i = 0
+    while i < len(v):
+        c = v[i]
+        if c == "\\" and i + 1 < len(v):
+            nxt = v[i + 1]
+            out.append({"n": "\n", '"': '"', "\\": "\\"}.get(nxt, c + nxt))
+            i += 2
+        else:
+            out.append(c)
+            i += 1
+    return "".join(out)
+
+
 def _fmt_labels(items: Tuple[Tuple[str, str], ...], extra: str = "") -> str:
-    parts = [f'{k}="{v}"' for k, v in items]
+    parts = [f'{k}="{_escape_label(v)}"' for k, v in items]
     if extra:
         parts.append(extra)
     return "{" + ",".join(parts) + "}" if parts else ""
@@ -222,7 +244,7 @@ class MetricsRegistry:
 _SAMPLE_RE = re.compile(
     r"^(?P<name>[a-zA-Z_:][a-zA-Z0-9_:]*)"
     r"(?:\{(?P<labels>[^}]*)\})?\s+(?P<value>\S+)\s*$")
-_LABEL_RE = re.compile(r'([a-zA-Z_][a-zA-Z0-9_]*)="([^"]*)"')
+_LABEL_RE = re.compile(r'([a-zA-Z_][a-zA-Z0-9_]*)="((?:[^"\\]|\\.)*)"')
 
 
 def parse_prometheus(text: str) -> Dict[str, List[Dict[str, Any]]]:
@@ -245,7 +267,8 @@ def parse_prometheus(text: str) -> Dict[str, List[Dict[str, Any]]]:
         raw = m.group("value")
         value = float("inf") if raw == "+Inf" else (
             float("-inf") if raw == "-Inf" else float(raw))
-        labels = dict(_LABEL_RE.findall(m.group("labels") or ""))
+        labels = {k: _unescape_label(v)
+                  for k, v in _LABEL_RE.findall(m.group("labels") or "")}
         samples.setdefault(m.group("name"), []).append(
             {"labels": labels, "value": value})
     return samples
@@ -264,9 +287,11 @@ def registry_from_report(report, *, registry: Optional[MetricsRegistry]
 
     Emits run-level gauges/counters (rounds, final metric, consumption,
     wall time, per-arm pulls), the compile-cache counters when
-    ``report.telemetry['cache']`` is present, and ring-derived series
-    (budget remaining, per-round cost / merge-α histograms) when the run
-    recorded in-graph telemetry.
+    ``report.telemetry['cache']`` is present, program-profile gauges
+    (``el_profile_*``: flops, peak live bytes, the per-op collective
+    census) when ``report.telemetry['profile']`` is present, and
+    ring-derived series (budget remaining, per-round cost / merge-α
+    histograms) when the run recorded in-graph telemetry.
     """
     reg = registry if registry is not None else MetricsRegistry()
     labels = dict(labels or {})
@@ -300,6 +325,35 @@ def registry_from_report(report, *, registry: Optional[MetricsRegistry]
             reg.gauge("el_program_cache_entries",
                       "compiled programs cached").set(
                 cache["entries"], labels)
+    prof = tele.get("profile")
+    if prof:
+        _profile_gauges = (
+            ("flops", "XLA cost-analysis flops per dispatch"),
+            ("bytes_accessed", "XLA cost-analysis bytes accessed"),
+            ("argument_bytes", "per-device argument bytes"),
+            ("output_bytes", "per-device output bytes"),
+            ("temp_bytes", "per-device temp bytes"),
+            ("alias_bytes", "donated/aliased input bytes"),
+            ("peak_live_bytes",
+             "arguments + outputs + temps - aliased, per device"),
+            ("generated_code_bytes", "compiled executable code size"),
+            ("collective_bytes",
+             "per-device bytes moved by collectives per dispatch"),
+            ("hlo_lines", "optimized HLO line count"),
+        )
+        for field, help_ in _profile_gauges:
+            v = prof.get(field)
+            if v is not None:
+                reg.gauge(f"el_profile_{field}", help_).set(
+                    float(v), base)
+        for op, d in sorted((prof.get("collectives") or {}).items()):
+            op_labels = {**base, "op": op}
+            reg.gauge("el_profile_collectives",
+                      "collective op census of the compiled program"
+                      ).set(float(d.get("count", 0)), op_labels)
+            reg.gauge("el_profile_collective_op_bytes",
+                      "per-device result bytes of one collective op"
+                      ).set(float(d.get("bytes", 0)), op_labels)
     rings = tele.get("rings")
     if rings:
         from repro.obs.rings import unroll_ring

@@ -94,16 +94,21 @@ def _percentile(sorted_vals: Sequence[float], q: float) -> float:
 
 def summarize_ns(samples_ns: Sequence[float]) -> Dict[str, float]:
     """Summary statistics of raw duration samples (any unit — the name
-    records the convention the span layer emits): min/mean/p50/p90/max
-    plus the sample count."""
+    records the convention the span layer emits): min/mean/std/p50/p90/
+    max plus the sample count.  ``std`` is the population standard
+    deviation (0 for a single sample) — the BENCH rows' spread
+    convention."""
     if not samples_ns:
-        return {"count": 0, "min": 0.0, "mean": 0.0, "p50": 0.0,
-                "p90": 0.0, "max": 0.0}
+        return {"count": 0, "min": 0.0, "mean": 0.0, "std": 0.0,
+                "p50": 0.0, "p90": 0.0, "max": 0.0}
     vals = sorted(float(x) for x in samples_ns)
+    mean = sum(vals) / len(vals)
+    var = sum((x - mean) ** 2 for x in vals) / len(vals)
     return {
         "count": len(vals),
         "min": vals[0],
-        "mean": sum(vals) / len(vals),
+        "mean": mean,
+        "std": var ** 0.5,
         "p50": _percentile(vals, 50.0),
         "p90": _percentile(vals, 90.0),
         "max": vals[-1],

@@ -129,6 +129,40 @@ def test_registry_type_conflicts_raise():
         reg.gauge("x_total")
 
 
+def test_prometheus_label_value_escaping_roundtrip():
+    # backslash, quote and newline in label VALUES must survive the
+    # exposition format (spec escapes: \\ \" \n)
+    nasty = 'a\\b"c\nd'
+    reg = obs_metrics.MetricsRegistry()
+    reg.counter("esc_total", "escaping").inc(2, {"path": nasty,
+                                                "plain": "ok"})
+    text = reg.render_prometheus()
+    assert '\\\\' in text and '\\"' in text and '\\n' in text
+    assert "c\nd" not in text          # the newline itself never leaks
+    parsed = obs_metrics.parse_prometheus(text)
+    s, = parsed["esc_total"]
+    assert s["labels"] == {"path": nasty, "plain": "ok"}
+    assert s["value"] == 2.0
+
+
+def test_prometheus_empty_registry_renders_and_parses():
+    text = obs_metrics.MetricsRegistry().render_prometheus()
+    assert obs_metrics.parse_prometheus(text) == {}
+    assert obs_metrics.parse_prometheus("") == {}
+
+
+def test_prometheus_inf_bucket_and_values_parse():
+    text = ('# TYPE lat_bucket counter\n'
+            'lat_bucket{le="+Inf"} 7\n'
+            'peak_ratio +Inf\n'
+            'neg_headroom -Inf\n')
+    parsed = obs_metrics.parse_prometheus(text)
+    s, = parsed["lat_bucket"]
+    assert s["labels"]["le"] == "+Inf" and s["value"] == 7.0
+    assert parsed["peak_ratio"][0]["value"] == float("inf")
+    assert parsed["neg_headroom"][0]["value"] == float("-inf")
+
+
 # -- tracer -----------------------------------------------------------------
 
 
@@ -147,6 +181,37 @@ def test_tracer_span_event_and_jsonl(tmp_path):
     disk = obs_trace.read_jsonl(path)
     assert disk == evs
     assert json.dumps(disk)                    # JSON-safe end to end
+
+
+def test_tracer_jsonl_flushes_span_on_exception(tmp_path):
+    # a span whose body raises still times and streams its record (the
+    # emit sits in a finally), so crashed dispatches stay observable
+    path = str(tmp_path / "boom.jsonl")
+    tr = obs_trace.Tracer(jsonl_path=path)
+    with pytest.raises(RuntimeError, match="boom"):
+        with tr.span("unit.crash", tag="x"):
+            raise RuntimeError("boom")
+    disk = obs_trace.read_jsonl(path)   # flushed before close()
+    assert [e["name"] for e in disk] == ["unit.crash"]
+    assert disk[0]["ev"] == "span" and disk[0]["tag"] == "x"
+    tr.close()
+    tr.close()                          # close is idempotent
+
+
+def test_tracer_reentrant_spans_nest_and_order(tmp_path):
+    path = str(tmp_path / "nest.jsonl")
+    tr = obs_trace.Tracer(jsonl_path=path)
+    with tr.span("outer"):
+        with tr.span("inner", depth=2):
+            pass
+        with tr.span("inner", depth=2):
+            pass
+    tr.close()
+    evs = tr.events()
+    # inner scopes finish (and emit) before the enclosing outer span
+    assert [e["name"] for e in evs] == ["inner", "inner", "outer"]
+    assert all(e["dur_us"] <= evs[-1]["dur_us"] for e in evs[:-1])
+    assert obs_trace.read_jsonl(path) == evs
 
 
 def test_tracer_configure_swaps_process_tracer(tmp_path):

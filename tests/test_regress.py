@@ -1,0 +1,264 @@
+"""repro.obs.regress + scripts/bench_check.py: the bench-regression
+gate — schema-versioned history JSONL, the known-regression ledger,
+direction-aware baseline comparison, within-run ratio checks, recorded
+census/alias contracts over BENCH rows, and the gate's exit codes
+(including "failing better" when a ledgered regression is fixed)."""
+
+import importlib.util
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.obs import regress
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.fixture(scope="module")
+def bench_check():
+    spec = importlib.util.spec_from_file_location(
+        "bench_check", os.path.join(REPO, "scripts", "bench_check.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+# -- history ----------------------------------------------------------------
+
+
+def test_history_append_load_roundtrip(tmp_path):
+    path = str(tmp_path / "hist.jsonl")
+    assert regress.load_history(path) == []          # missing file: empty
+    e1 = regress.append_history(path, "el", {"edges": 8},
+                                {"r": {"wall_us": 10.0}}, commit="abc123")
+    regress.append_history(path, "fleet", {"n": 64},
+                           {"f": {"tenants_per_sec": 5.0}}, commit="abc123")
+    assert e1["schema"] == regress.SCHEMA_VERSION
+    assert e1["commit"] == "abc123" and e1["timestamp"] > 0
+    entries = regress.load_history(path)
+    assert [e["kind"] for e in entries] == ["el", "fleet"]
+    only_el = regress.load_history(path, kind="el")
+    assert len(only_el) == 1
+    assert only_el[0]["rows"]["r"]["wall_us"] == 10.0
+
+
+# -- ledger -----------------------------------------------------------------
+
+
+def _ledger_entry(**kw):
+    base = dict(bench="el", row="slow", metric="us_per_aggregation",
+                reference="fast", max_ratio=6.0, fixed_below_ratio=1.5)
+    base.update(kw)
+    return regress.LedgerEntry(**base)
+
+
+def test_load_ledger_and_lookup(tmp_path):
+    assert regress.load_ledger(str(tmp_path / "nope.json")) == []
+    path = str(tmp_path / "ledger.json")
+    path_doc = {"schema": 1, "known": [
+        {"bench": "el", "row": "slow", "metric": "us_per_aggregation",
+         "reference": "fast", "max_ratio": 6.0, "reason": "known-slow",
+         "unknown_future_field": True}]}
+    with open(path, "w") as f:
+        json.dump(path_doc, f)
+    entries = regress.load_ledger(path)   # unknown fields are ignored
+    assert len(entries) == 1 and entries[0].max_ratio == 6.0
+    assert regress.ledgered(entries, "el", "slow",
+                            "us_per_aggregation") is entries[0]
+    assert regress.ledgered(entries, "fleet", "slow",
+                            "us_per_aggregation") is None
+
+
+def test_check_ledger_known_worse_fixed_missing():
+    ledger = [_ledger_entry()]
+
+    def kinds(rows):
+        return [f.kind for f in regress.check_ledger(rows, ledger,
+                                                     bench="el")]
+
+    rows = {"fast": {"us_per_aggregation": 100.0}}
+    assert kinds({**rows, "slow": {"us_per_aggregation": 400.0}}) \
+        == ["known"]                                  # 4x <= 6x
+    assert kinds({**rows, "slow": {"us_per_aggregation": 700.0}}) \
+        == ["regression"]                             # got worse
+    assert kinds({**rows, "slow": {"us_per_aggregation": 120.0}}) \
+        == ["fixed"]                                  # failing better
+    assert kinds(rows) == ["regression"]              # row vanished
+    assert kinds({**rows, "slow": {}}) == ["regression"]   # metric gone
+
+    # direction-aware: for higher-is-better metrics the ratio inverts
+    inv = [_ledger_entry(metric="tenants_per_sec")]
+    f, = regress.check_ledger(
+        {"fast": {"tenants_per_sec": 100.0},
+         "slow": {"tenants_per_sec": 25.0}}, inv, bench="el")
+    assert f.kind == "known" and "4.00x" in f.detail
+
+
+# -- fresh-vs-baseline comparison -------------------------------------------
+
+
+def test_compare_to_baseline_direction_aware_tolerances():
+    base = {"r": {"us_per_aggregation": 100.0, "tenants_per_sec": 100.0,
+                  "note": "strings are skipped"}}
+
+    def find(fresh_row):
+        return regress.compare_to_baseline(base, {"r": fresh_row},
+                                           bench="el")
+
+    assert find({"us_per_aggregation": 120.0}) == []       # within 25%
+    bad = find({"us_per_aggregation": 130.0})              # 30% slower
+    assert [f.kind for f in bad] == ["regression"]
+    assert "30%" in bad[0].detail
+    # higher-is-better: throughput DROPPING is the regression
+    assert find({"tenants_per_sec": 130.0}) == []
+    assert [f.kind for f in find({"tenants_per_sec": 70.0})] \
+        == ["regression"]
+    # a ledgered (row, metric) downgrades to "known"
+    known = regress.compare_to_baseline(
+        base, {"r": {"us_per_aggregation": 200.0}}, bench="el",
+        ledger=[_ledger_entry(row="r")])
+    assert [f.kind for f in known] == ["known"]
+
+
+def test_compare_ratios_within_run_drift():
+    base = {"a": {"us_per_aggregation": 200.0},
+            "ref": {"us_per_aggregation": 100.0}}   # baseline ratio 2x
+
+    def find(fresh_a, **kw):
+        fresh = {"a": {"us_per_aggregation": fresh_a},
+                 "ref": {"us_per_aggregation": 100.0}}
+        return regress.compare_ratios(
+            base, fresh, bench="el", metric="us_per_aggregation",
+            pairs=[("a", "ref")], **kw)
+
+    ok, = find(300.0, slack=1.5)          # 3x < 2x * 2.5
+    assert ok.kind == "ok"
+    bad, = find(600.0, slack=1.5)         # 6x > 5x
+    assert bad.kind == "regression" and "6.00x" in bad.detail
+    known, = find(600.0, slack=1.5,
+                  ledger=[_ledger_entry(row="a", reference="ref")])
+    assert known.kind == "known"
+    # rows missing on either side are skipped, not failed
+    assert regress.compare_ratios(
+        base, {"ref": {"us_per_aggregation": 1.0}}, bench="el",
+        metric="us_per_aggregation", pairs=[("a", "ref")]) == []
+
+
+def test_worst_exit_code():
+    F = regress.Finding
+    mk = lambda kind: F(kind, "el", "r", "m", "")
+    assert regress.worst_exit_code([]) == 0
+    assert regress.worst_exit_code([mk("ok"), mk("known")]) == 0
+    assert regress.worst_exit_code([mk("ok"), mk("fixed")]) == 3
+    assert regress.worst_exit_code([mk("fixed"), mk("regression")]) == 1
+
+
+# -- bench_check: recorded-census contracts over BENCH rows -----------------
+
+
+def _good_rows():
+    return {
+        "host_loop": {"us_per_aggregation": 900.0},   # no census: skipped
+        "el_sync_ingraph": {"alias_bytes": 0, "collectives": {}},
+        "el_sync_sharded": {
+            "alias_bytes": 0,
+            "collectives": {"all-gather": {"count": 2, "bytes": 15360}}},
+        "el_sync_sharded_donate": {
+            "alias_bytes": 1920,
+            "collectives": {"all-gather": {"count": 2, "bytes": 15360}}},
+        "el_async_sharded_donate": {
+            "alias_bytes": 1920,
+            "collectives": {"all-gather": {"count": 2, "bytes": 15360}}},
+    }
+
+
+def test_contract_findings_pass_on_clean_rows(bench_check):
+    findings = bench_check.contract_findings(_good_rows())
+    assert [f.kind for f in findings] == ["ok"]
+
+
+def test_contract_findings_flag_census_and_alias_breaks(bench_check):
+    # an all-reduce sneaking into a sharded program is a regression
+    rows = _good_rows()
+    rows["el_sync_sharded"]["collectives"]["all-reduce"] = \
+        {"count": 1, "bytes": 40}
+    bad = bench_check.contract_findings(rows)
+    assert any(f.kind == "regression" and "all-reduce" in f.detail
+               for f in bad)
+
+    # a replicated program must not issue collectives at all
+    rows = _good_rows()
+    rows["el_sync_ingraph"]["collectives"] = \
+        {"all-gather": {"count": 1, "bytes": 8}}
+    assert any(f.kind == "regression"
+               for f in bench_check.contract_findings(rows))
+
+    # donation falling off (alias 0) is a regression
+    rows = _good_rows()
+    rows["el_sync_sharded_donate"]["alias_bytes"] = 0
+    assert any("donation fell off" in f.detail
+               for f in bench_check.contract_findings(rows))
+
+    # two donated rows aliasing different sizes: one param tree, one size
+    rows = _good_rows()
+    rows["el_async_sharded_donate"]["alias_bytes"] = 64
+    assert any("different byte counts" in f.detail
+               for f in bench_check.contract_findings(rows))
+
+    # a non-donated row that aliases anything is a violation too
+    rows = _good_rows()
+    rows["el_sync_sharded"]["alias_bytes"] = 1920
+    assert any(f.kind == "regression"
+               for f in bench_check.contract_findings(rows))
+
+
+# -- the gate end-to-end on the committed artifacts -------------------------
+
+
+def _run_gate(*argv):
+    return subprocess.run(
+        [sys.executable, os.path.join(REPO, "scripts", "bench_check.py"),
+         *argv],
+        capture_output=True, text=True, timeout=120,
+        env=dict(os.environ,
+                 PYTHONPATH=os.path.join(REPO, "src")))
+
+
+def test_gate_passes_on_committed_baselines():
+    r = _run_gate()
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "bench_check: OK" in r.stdout
+    # the async-sharded rows surface as ledgered, not silently passed
+    assert "[known] el:el_async_sharded" in r.stdout
+
+
+def test_gate_fails_on_injected_regression(tmp_path):
+    with open(os.path.join(REPO, "BENCH_el.json")) as f:
+        doc = json.load(f)
+    doc["rows"]["el_sync_ingraph"]["us_per_aggregation"] *= 2.0
+    fresh = str(tmp_path / "BENCH_el_fresh.json")
+    with open(fresh, "w") as f:
+        json.dump(doc, f)
+    r = _run_gate("--fresh", fresh, "--bench", "el")
+    assert r.returncode == 1, r.stdout + r.stderr
+    assert "REGRESSION" in r.stdout
+    assert "el_sync_ingraph.us_per_aggregation" in r.stdout
+
+
+def test_gate_fails_better_when_ledgered_row_is_fixed(tmp_path):
+    with open(os.path.join(REPO, "BENCH_el.json")) as f:
+        doc = json.load(f)
+    # "fix" the known async-sharded regression: ratio drops under 1.5x
+    base = doc["rows"]["el_async_ingraph"]["us_per_aggregation"]
+    for row in ("el_async_sharded", "el_async_sharded_donate"):
+        doc["rows"][row]["us_per_aggregation"] = base * 1.1
+    fixed = str(tmp_path / "BENCH_el_fixed.json")
+    with open(fixed, "w") as f:
+        json.dump(doc, f)
+    r = _run_gate("--fresh", fixed, "--bench", "el")
+    assert r.returncode == 3, r.stdout + r.stderr
+    assert "FAILING-BETTER" in r.stdout
+    assert "remove the stale" in r.stdout
