@@ -10,7 +10,9 @@ Three modes over the committed bench artifacts (``BENCH_el.json``,
     compiled EL row's recorded collective census / alias bytes is
     checked against the declarative contracts (sharded rows
     gather-before-reduce: ``all-reduce == 0``; donated rows alias the
-    param tree, non-donated rows alias nothing);
+    param tree, non-donated rows alias nothing), and every telemetry
+    tier's recorded within-run overhead must sit under the
+    ``repro.obs`` acceptance bound (<10%/aggregation);
   * ``--fresh FILE [--baseline FILE] --bench el|fleet`` — row-by-row
     comparison of a fresh same-config run against a baseline with the
     per-metric relative tolerances (``repro.obs.regress.
@@ -62,7 +64,35 @@ SMOKE_PAIRS = (
     ("el_async_sharded_donate", "el_async_ingraph"),
     ("el_sync_ingraph_telemetry", "el_sync_ingraph"),
     ("el_async_ingraph_telemetry", "el_async_ingraph"),
+    ("el_async_ingraph_batched", "el_async_ingraph"),
 )
+
+#: the repro.obs acceptance bound: the in-graph telemetry rings may
+#: cost at most this much per aggregation over the bare program
+#: (a within-run percentage, so host-speed independent)
+TELEMETRY_OVERHEAD_PCT = 10.0
+
+
+def telemetry_findings(rows: Mapping[str, Mapping[str, Any]],
+                       *, bench: str = "el") -> List[Finding]:
+    """The telemetry-overhead tolerance row: every ``*_telemetry`` tier
+    that recorded its within-run ``overhead_vs_ingraph_pct`` must sit
+    under :data:`TELEMETRY_OVERHEAD_PCT`."""
+    findings: List[Finding] = []
+    for name in sorted(rows):
+        pct = rows[name].get("overhead_vs_ingraph_pct")
+        if pct is None:
+            continue
+        if pct > TELEMETRY_OVERHEAD_PCT:
+            findings.append(Finding(
+                "regression", bench, name, "telemetry_overhead",
+                f"telemetry rings cost {pct:+.2f}%/agg over the bare "
+                f"program (bound: +{TELEMETRY_OVERHEAD_PCT:.0f}%)"))
+        else:
+            findings.append(Finding(
+                "ok", bench, name, "telemetry_overhead",
+                f"{pct:+.2f}% <= +{TELEMETRY_OVERHEAD_PCT:.0f}%"))
+    return findings
 
 
 def _row_profile(row: Mapping[str, Any]) -> ProgramProfile:
@@ -161,6 +191,7 @@ def check_baselines(args) -> int:
         findings += check_ledger(rows, ledger, bench=bench)
         if bench == "el":
             findings += contract_findings(rows, bench=bench)
+            findings += telemetry_findings(rows, bench=bench)
     return _report(findings)
 
 
@@ -179,6 +210,7 @@ def check_fresh(args) -> int:
     findings += check_ledger(fresh, ledger, bench=args.bench)
     if args.bench == "el":
         findings += contract_findings(fresh, bench=args.bench)
+        findings += telemetry_findings(fresh, bench=args.bench)
     return _report(findings)
 
 

@@ -15,6 +15,11 @@ of every execution tier:
                           telemetry rings recording every round; against
                           the bare ``ingraph`` row this bounds the
                           observability overhead (acceptance: <10%);
+  * ``ingraph_batched`` — (async only) the K-event wave program with an
+                          explicit ``--async-batch-k`` wave width: K
+                          completions pop, dispatch and merge per
+                          while-loop step — order-equivalent to K=1,
+                          fewer loop iterations;
   * ``sharded``         — the program pjit-sharded over a debug mesh
                           built from forced host devices (edge dim over
                           ``data``, model tensors over ``model``), the
@@ -69,7 +74,8 @@ import jax
 import numpy as np
 
 from repro.el import ELSession
-from repro.el.events import ASYNC_KNOB_NAMES, async_knobs, make_async_program
+from repro.el.events import (ASYNC_KNOB_NAMES, async_knobs,
+                             make_async_program, resolve_async_batch_k)
 from repro.el.ingraph import KNOB_NAMES, make_sync_program, sync_knobs
 from repro.launch.classic import classic_fixture
 from repro.launch.mesh import make_debug_mesh_for
@@ -112,9 +118,11 @@ def _profile_row(jfn, example_args, donate):
 
 
 def bench_compiled(model, ex, ol, ns, mode, mesh, donate, args,
-                   telemetry=None):
+                   telemetry=None, batch_k=None):
     """Time one compiled-program tier and read its memory analysis."""
     cfg = dataclasses.replace(ol, mode=mode)
+    if batch_k is not None:
+        cfg = dataclasses.replace(cfg, async_batch_k=int(batch_k))
     if mode == "sync":
         core = make_sync_program(
             model, ex.edge_data, ex.eval_set, cfg, lr=ex.lr, batch=ex.batch,
@@ -190,6 +198,10 @@ def main(argv=None) -> None:
     ap.add_argument("--max-rounds", type=int, default=64)
     ap.add_argument("--max-events", type=int, default=256)
     ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--async-batch-k", type=int, default=4,
+                    help="explicit K of the el_async_ingraph_batched "
+                         "tier (the replicated K-event wave program; "
+                         "sharded tiers auto-tune K from the mesh)")
     ap.add_argument("--telemetry-ring", type=int, default=64,
                     help="ring length of the el_*_ingraph_telemetry "
                          "tiers (repro.obs in-graph rings)")
@@ -208,20 +220,26 @@ def main(argv=None) -> None:
     model, ex, ol, ns = _fixture(args)
 
     rows = {}
-    tiers = [("ingraph", None, False, None),
-             ("ingraph_donate", None, True, None),
-             ("ingraph_telemetry", None, False, args.telemetry_ring),
-             ("sharded", mesh, False, None),
-             ("sharded_donate", mesh, True, None)]
+    # (name, mesh, donate, telemetry, batch_k) — batch_k is async-only:
+    # the batched tier pins an explicit K-event wave width on the
+    # replicated program; sharded tiers auto-tune K from the mesh
+    tiers = [("ingraph", None, False, None, None),
+             ("ingraph_donate", None, True, None, None),
+             ("ingraph_telemetry", None, False, args.telemetry_ring, None),
+             ("ingraph_batched", None, False, None, args.async_batch_k),
+             ("sharded", mesh, False, None, None),
+             ("sharded_donate", mesh, True, None, None)]
     for mode in ("sync", "async"):
         if not args.skip_host:
             rows[f"el_{mode}_host"] = bench_host(model, ex, ol, ns, mode)
             print(f"el_{mode}_host: "
                   f"{rows[f'el_{mode}_host']['us_per_aggregation']:.0f} "
                   "us/agg", flush=True)
-        for name, m, donate, telem in tiers:
+        for name, m, donate, telem, batch_k in tiers:
+            if batch_k is not None and mode != "async":
+                continue
             row = bench_compiled(model, ex, ol, ns, mode, m, donate, args,
-                                 telemetry=telem)
+                                 telemetry=telem, batch_k=batch_k)
             rows[f"el_{mode}_{name}"] = row
             peak = row.get("peak_live_bytes")
             print(f"el_{mode}_{name}: {row['us_per_aggregation']:.0f} "
@@ -245,6 +263,11 @@ def main(argv=None) -> None:
             "max_rounds": args.max_rounds, "max_events": args.max_events,
             "devices": n_dev, "mesh": dict(mesh.shape),
             "repeats": args.repeats,
+            "async_batch_k": {
+                "batched_tier": int(args.async_batch_k),
+                "sharded_auto": resolve_async_batch_k(
+                    dataclasses.replace(ol, mode="async"), mesh),
+            },
             "backend": jax.default_backend(), "jax": jax.__version__,
             "note": ("CPU-host correctness-path timings; wall_us is "
                      "min-of-repeats (wall_us_stats carries the spread); "

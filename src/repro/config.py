@@ -237,6 +237,9 @@ class OL4ELConfig:
     cost_noise: float = 0.0              # rel. std for variable-cost mode
     utility: str = "param_delta"         # param_delta | eval_gain | loss_delta
     async_alpha: float = 0.5             # async staleness-mix base rate
+    async_batch_k: int = 0               # K-event wave width for the async
+                                         # engine; 0 = auto (1 replicated,
+                                         # mesh-tuned when sharded)
     ucb_c: float = 2.0                   # exploration constant (sqrt(c ln t / n))
     eps: float = 0.1                     # for eps_greedy ablation
     n_edges: int = 4

@@ -22,8 +22,10 @@ Front doors: ``ELSession.run_async_ingraph()`` and async
 """
 
 from repro.el.events.knobs import (ASYNC_KNOB_NAMES, async_knobs,
+                                   bucket_event_horizon,
                                    default_event_horizon,
-                                   padded_event_horizon)
+                                   padded_event_horizon,
+                                   resolve_async_batch_k)
 from repro.el.events.program import (make_async_cell, make_async_kernels,
                                      make_async_program)
 from repro.el.events.reference import run_async_reference
@@ -34,8 +36,9 @@ from repro.el.events.state import (bandit_fleet_init, bandit_place,
                                    bandit_slice)
 
 __all__ = [
-    "ASYNC_KNOB_NAMES", "async_knobs", "default_event_horizon",
-    "padded_event_horizon", "make_async_cell",
+    "ASYNC_KNOB_NAMES", "async_knobs", "bucket_event_horizon",
+    "default_event_horizon", "padded_event_horizon",
+    "resolve_async_batch_k", "make_async_cell",
     "make_async_program", "make_async_kernels", "run_async_reference",
     "schedule_block", "split_event_keys", "split_init_keys",
     "staleness_alpha", "staleness_merge",

@@ -23,11 +23,15 @@ from repro.el.ingraph import base_cost_knobs
 
 #: Traced inputs of ``make_async_program`` (the async analogue of
 #: ``repro.el.ingraph.KNOB_NAMES``): scalars ``ucb_c`` / ``budget`` /
-#: ``cost_noise`` / ``async_alpha``, per-edge ``comp`` / ``comm`` /
+#: ``cost_noise`` / ``async_alpha``, the int32 ``event_cap`` (the exact
+#: event budget of the run — the STATIC history length is bucketed to a
+#: power of two, this traced cap is what terminates the loop, so nearby
+#: caps share one executable), per-edge ``comp`` / ``comm`` /
 #: ``min_edge_cost`` ``[E]``, and the per-edge arm costs ``costs_ek``
 #: ``[E, K]``.
 ASYNC_KNOB_NAMES = ("ucb_c", "budget", "comp", "comm", "costs_ek",
-                    "min_edge_cost", "cost_noise", "async_alpha")
+                    "min_edge_cost", "cost_noise", "async_alpha",
+                    "event_cap")
 
 
 def async_knobs(cfg: OL4ELConfig) -> Dict[str, np.ndarray]:
@@ -44,6 +48,10 @@ def async_knobs(cfg: OL4ELConfig) -> Dict[str, np.ndarray]:
     knobs["costs_ek"] = (intervals_f[None, :] * knobs["comp"][:, None]
                          + knobs["comm"][:, None])                  # [E, K]
     knobs["async_alpha"] = np.float32(cfg.async_alpha)
+    # the exact (un-bucketed) event budget; the loop stops at
+    # min(static horizon, event_cap) so a bucketed history never runs
+    # past the caller's cap
+    knobs["event_cap"] = np.int32(default_event_horizon(cfg))
     return knobs
 
 
@@ -75,3 +83,37 @@ def padded_event_horizon(cfg: OL4ELConfig) -> int:
     the fleet's async cohort bucketing, so a tenant's cohort program has
     exactly the horizon its independent verification run uses."""
     return max(64, 1 << (default_event_horizon(cfg) - 1).bit_length())
+
+
+def bucket_event_horizon(cap: int) -> int:
+    """An explicit event cap's STATIC history length: the next power of
+    two (floor 64).  ``run_async_ingraph(max_events=...)`` sizes its
+    compiled history arrays at this bucket and passes the exact cap as
+    the traced ``event_cap`` knob, so nearby caps share one executable
+    instead of recompiling per value."""
+    return max(64, 1 << (max(int(cap), 1) - 1).bit_length())
+
+
+def resolve_async_batch_k(cfg: OL4ELConfig, mesh=None) -> int:
+    """The async engine's K-event wave width for this (config, mesh).
+
+    ``cfg.async_batch_k > 0`` pins it (clamped to ``n_edges`` — waves
+    pop distinct edges, so wider is meaningless).  ``0`` auto-tunes:
+    replicated runs keep the single-event program (``K=1`` — the
+    argmin-pop loop is already the fast path on one device), sharded
+    runs batch up to 4 events per wave (the per-wave dispatch cost is
+    what serializes the sharded control plane; batching amortizes it
+    while the safe-gap criterion keeps event order exact).  At the
+    bench scale (8 heterogeneous edges) K=4 waves measure ~3.5 events
+    per loop step, and K in {2, 4} both beat K=1 on the 2x2 debug mesh;
+    4 is kept as the auto width because real multi-host meshes amortize
+    per-step latency further, where emulated CPU devices cannot.
+    """
+    if cfg.async_batch_k > 0:
+        return max(1, min(int(cfg.async_batch_k), cfg.n_edges))
+    n_dev = 1
+    if mesh is not None:
+        n_dev = int(np.asarray(mesh.devices).size)
+    if n_dev <= 1:
+        return 1
+    return max(1, min(4, cfg.n_edges))

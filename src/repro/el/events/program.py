@@ -20,6 +20,23 @@ is reached.  An entire async run — hundreds of events — is ONE compiled
 program with zero host synchronization, the async half of the paper's
 headline claim joining the fast path.
 
+**K-event waves** (``batch_k > 1``, the sharded fast path): instead of
+one argmin pop per loop step, a wave pops the K earliest completions
+with ``lax.top_k``, accepts the prefix of lanes that provably precede
+any block an earlier lane could reschedule (``wave_safe_gap`` — a
+rescheduled block costs at least ``fl(min_edge_cost · mult_floor)``, so
+every lane with ``f_(j) < fl(f_(0) + gap)`` is order-safe), runs the
+accepted lanes' local blocks as ONE vmapped dispatch over a slice-local
+``[K, ...]`` gather of the fetched-params stack, and replays the merge /
+bandit / schedule control plane sequentially per lane (masked
+``lax.cond``) so every computed value equals the one-event program's.
+Wave lanes are always DISTINCT edges (one in-flight block per edge), the
+per-event RNG chain advances exactly ``n_batch`` splits, and history /
+telemetry writes coalesce into one drop-mode vector scatter per field —
+the processed event order, merge values, charged costs and arm pulls are
+identical to ``batch_k=1`` (tested), while the while-loop iterates ~K
+times fewer, amortizing the sharded control plane's per-step collectives.
+
 Like the sync program, the control-plane knobs (``ASYNC_KNOB_NAMES``)
 are traced inputs — ``make_async_program`` returns
 ``program(init_params, rng, knobs)`` — so ``repro.el.sweep`` vmaps one
@@ -43,9 +60,10 @@ from jax import lax
 from repro.config import OL4ELConfig
 from repro.core.bandit import jax_bandit_update
 from repro.el.events.knobs import ASYNC_KNOB_NAMES  # noqa: F401 (re-export)
+from repro.el.events.knobs import resolve_async_batch_k
 from repro.el.events.scheduler import (schedule_block, split_event_keys,
                                        split_init_keys, staleness_alpha,
-                                       staleness_merge)
+                                       staleness_merge, wave_safe_gap)
 from repro.el.events.state import (bandit_fleet_init, bandit_place,
                                    bandit_slice)
 from repro.el.ingraph import (ELCell, _edge_stack_constraints,
@@ -101,7 +119,8 @@ def make_async_cell(model, edge_data, eval_set, cfg: OL4ELConfig, *,
                     metric_fn: Optional[Callable] = None,
                     metric_name: str = "accuracy",
                     max_events: int = 256, mesh=None,
-                    telemetry=None) -> ELCell:
+                    telemetry=None,
+                    batch_k: Optional[int] = None) -> ELCell:
     """The budgeted async event loop as an :class:`repro.el.ingraph.ELCell`
     — the unfused form of ``make_async_program`` (which recomposes
     exactly these closures into one ``lax.while_loop`` over events); see
@@ -113,14 +132,31 @@ def make_async_cell(model, edge_data, eval_set, cfg: OL4ELConfig, *,
     realized charge, the edge's residual budget, the staleness-weighted
     merge ``alpha`` (and the raw staleness), event inter-arrival time
     and the event edge's per-arm bandit statistics.
+
+    ``batch_k=`` is the static K-event wave width (see the module
+    docstring); ``None`` resolves it from the config and mesh
+    (``resolve_async_batch_k``).  ``batch_k=1`` builds exactly the
+    single-event argmin-pop body; ``> 1`` builds the order-equivalent
+    wave body.
     """
     from repro.obs.rings import (as_spec, async_ring_init,
-                                 async_ring_record, finalize_telemetry)
+                                 async_ring_record,
+                                 async_ring_record_wave,
+                                 finalize_telemetry)
     spec = as_spec(telemetry)
     del n_samples
     check_ingraph_support(cfg, caller="make_async_program")
 
     n_edges, k = cfg.n_edges, cfg.max_interval
+    if batch_k is None:
+        batch_k = resolve_async_batch_k(cfg, mesh)
+    batch_k = max(1, min(int(batch_k), n_edges))
+    if spec is not None and batch_k > spec.ring_size:
+        raise ValueError(
+            f"async_batch_k={batch_k} exceeds the telemetry ring size "
+            f"{spec.ring_size}: a wave's per-event ring writes would "
+            "collide within one scatter — raise telemetry= or lower "
+            "the batch width")
     local_block, metric_fn, eval_step = _build_parts(
         model, edge_data, eval_set, cfg, lr=lr, batch=batch,
         metric_fn=metric_fn, metric_name=metric_name, mesh=mesh)
@@ -177,10 +213,15 @@ def make_async_cell(model, edge_data, eval_set, cfg: OL4ELConfig, *,
         return carry
 
     def cond(carry: Dict[str, Any], knobs: Dict[str, jax.Array]):
-        return ((carry["t"] < max_events)
+        # the static horizon sizes the history arrays (bucketed to a
+        # power of two by the callers); the traced event_cap knob is the
+        # run's exact cap, so nearby caps share one executable
+        cap = jnp.minimum(jnp.int32(max_events),
+                          knobs["event_cap"].astype(jnp.int32))
+        return ((carry["t"] < cap)
                 & jnp.any(jnp.isfinite(carry["finish"])))
 
-    def body(carry: Dict[str, Any], knobs: Dict[str, jax.Array]):
+    def body_one(carry: Dict[str, Any], knobs: Dict[str, jax.Array]):
         ucb_c, budget = knobs["ucb_c"], knobs["budget"]
         costs_ek = knobs["costs_ek"]                            # [E, K]
         alpha0 = knobs["async_alpha"]
@@ -261,6 +302,189 @@ def make_async_cell(model, edge_data, eval_set, cfg: OL4ELConfig, *,
                     bstate_e=bstate_e)
         return new_carry
 
+    def body_wave(carry: Dict[str, Any], knobs: Dict[str, jax.Array]):
+        ucb_c, budget = knobs["ucb_c"], knobs["budget"]
+        costs_ek = knobs["costs_ek"]                            # [E, K]
+        alpha0 = knobs["async_alpha"]
+        edge_params = carry["edge_params"]
+        finish = carry["finish"]
+        infl_i, infl_c = carry["infl_i"], carry["infl_c"]
+        t0, hist = carry["t"], carry["hist"]
+
+        # -- wave selection: the K earliest completions, sorted (ties
+        # lower-edge-first, matching successive argmin pops).  A lane is
+        # accepted while it finishes strictly before ANY block an
+        # earlier lane's reschedule could produce (wave_safe_gap's f32
+        # lower bound); every guard is monotone in the lane index, so
+        # `valid` is a prefix mask and lane j's event index is t0 + j.
+        neg_f, e_sorted = lax.top_k(-finish, batch_k)
+        f_sorted = -neg_f
+        gap = wave_safe_gap(knobs["min_edge_cost"], knobs["cost_noise"])
+        cap = jnp.minimum(jnp.int32(max_events),
+                          knobs["event_cap"].astype(jnp.int32))
+        lane = jnp.arange(batch_k, dtype=jnp.int32)
+        valid = (lane == 0) | (jnp.isfinite(f_sorted)
+                               & (f_sorted < f_sorted[0] + gap)
+                               & (t0 + lane < cap))
+        n_batch = jnp.sum(valid.astype(jnp.int32))
+
+        # -- the per-event RNG chain advances exactly n_batch splits:
+        # lane j's keys are the (t0+j)-th split of the run's one chain,
+        # identical to batch_k=1 processing the same events
+        r = carry["rng"]
+        rng_steps, k_sels, k_datas, k_costs = [r], [], [], []
+        for _ in range(batch_k):
+            r, ks, kd, kc = split_event_keys(r)
+            rng_steps.append(r)
+            k_sels.append(ks)
+            k_datas.append(kd)
+            k_costs.append(kc)
+        rng = jnp.stack(rng_steps)[n_batch]
+
+        # -- data plane: ONE vmapped dispatch over the wave's lanes.
+        # Lanes are distinct edges and each trains from the params its
+        # edge fetched BEFORE this wave, so the lanes are data-
+        # independent; only the K event slices of the sharded stack are
+        # gathered replicated (slice-local), never the full [E, ...]
+        # edge stack.
+        interval_l = infl_i[e_sorted]                           # [Kw]
+        cost_l = infl_c[e_sorted]
+        # K scalar gathers, stacked — NOT one vector-index gather: the
+        # SPMD partitioner lowers `a[e_sorted]` on the sharded edge
+        # stack through a one-hot contraction (all-reduce), while the
+        # scalar form keeps the single-event path's slice-local
+        # all-gather lowering (the dispatch contract pins all-reduce==0)
+        p_stack = gather_edge_stack(jax.tree.map(
+            lambda a: jnp.stack([a[e_sorted[j]]
+                                 for j in range(batch_k)]),
+            edge_params))
+        data_keys = jnp.stack([
+            jax.random.fold_in(k_datas[j], e_sorted[j])
+            for j in range(batch_k)])
+        p_new_stack = jax.vmap(local_block)(p_stack, e_sorted,
+                                            interval_l, data_keys)
+
+        # -- control plane: the merge chain is inherently sequential
+        # (lane j+1 merges into lane j's global), so replay it per lane
+        # under a validity mask — the exact op sequence of batch_k=1.
+        def lane_step(j, state):
+            (gparams, fleet, consumed, fetch_ver, version,
+             prev_metric) = state
+            e = e_sorted[j]
+            wall_j = f_sorted[j]
+            interval, cost = interval_l[j], cost_l[j]
+            p_new = jax.tree.map(lambda a: a[j], p_new_stack)
+            consumed = consumed.at[e].add(cost)
+            alpha = staleness_alpha(alpha0, version, fetch_ver[e],
+                                    n_edges)
+            stale = ((version - fetch_ver[e]).astype(jnp.float32)
+                     / jnp.float32(max(n_edges, 1)))
+            new_global = staleness_merge(gparams, p_new, alpha)
+            version = version + 1
+            metric, utility = eval_step(new_global, gparams, prev_metric)
+            bstate_e = jax_bandit_update(bandit_slice(fleet, e),
+                                         interval - 1, utility, cost)
+            fleet = bandit_place(fleet, e, bstate_e)
+            fetch_ver = fetch_ver.at[e].set(version)
+            resid = budget - consumed[e]
+            _, nxt_i, nxt_c, fin = schedule_block(
+                bstate_e, resid, costs_ek[e], ucb_c,
+                knobs["min_edge_cost"][e], knobs["cost_noise"],
+                knobs["comp"][e], knobs["comm"][e], wall_j,
+                jax.random.fold_in(k_sels[j], e),
+                jax.random.fold_in(k_costs[j], e))
+            outs = {"metric": metric, "utility": utility,
+                    "interval": interval, "cost": cost,
+                    "consumed_sum": jnp.sum(consumed),
+                    "resid": resid, "alpha": alpha, "stale": stale,
+                    "bcounts": bstate_e["counts"],
+                    "butil": bstate_e["utility_sum"],
+                    "nxt_i": nxt_i, "nxt_c": nxt_c, "fin": fin,
+                    "new_global": new_global}
+            return ((new_global, fleet, consumed, fetch_ver, version,
+                     metric), outs)
+
+        def lane_skip(state):
+            outs = {"metric": jnp.float32(0), "utility": jnp.float32(0),
+                    "interval": jnp.int32(0), "cost": jnp.float32(0),
+                    "consumed_sum": jnp.float32(0),
+                    "resid": jnp.float32(0), "alpha": jnp.float32(0),
+                    "stale": jnp.float32(0),
+                    "bcounts": jnp.zeros((k,), jnp.int32),
+                    "butil": jnp.zeros((k,), jnp.float32),
+                    "nxt_i": jnp.int32(0), "nxt_c": jnp.float32(0),
+                    "fin": jnp.float32(0), "new_global": state[0]}
+            return state, outs
+
+        state = (carry["gparams"], carry["fleet"], carry["consumed"],
+                 carry["fetch_ver"], carry["version"],
+                 carry["prev_metric"])
+        lanes = []
+        for j in range(batch_k):
+            if j == 0:          # lane 0 is the argmin event: always valid
+                state, outs = lane_step(0, state)
+            else:
+                state, outs = lax.cond(
+                    j < n_batch,
+                    lambda s, j=j: lane_step(j, s),
+                    lane_skip, state)
+            lanes.append(outs)
+        (gparams, fleet, consumed, fetch_ver, version,
+         prev_metric) = state
+
+        stk = {name: jnp.stack([o[name] for o in lanes])
+               for name in lanes[0] if name != "new_global"}
+        g_stack = jax.tree.map(lambda *xs: jnp.stack(xs),
+                               *[o["new_global"] for o in lanes])
+
+        # -- coalesced state scatters: invalid lanes route to index
+        # n_edges / the horizon and drop
+        e_scatter = jnp.where(valid, e_sorted, jnp.int32(n_edges))
+        edge_params = constrain_edge_stack(jax.tree.map(
+            lambda a, g: a.at[e_scatter].set(g, mode="drop"),
+            edge_params, g_stack))
+        finish = finish.at[e_scatter].set(stk["fin"], mode="drop")
+        infl_i = infl_i.at[e_scatter].set(stk["nxt_i"], mode="drop")
+        infl_c = infl_c.at[e_scatter].set(stk["nxt_c"], mode="drop")
+        idx = jnp.where(valid, t0 + lane, jnp.int32(max_events))
+        hist = {
+            "metric": hist["metric"].at[idx].set(stk["metric"],
+                                                 mode="drop"),
+            "utility": hist["utility"].at[idx].set(stk["utility"],
+                                                   mode="drop"),
+            "interval": hist["interval"].at[idx].set(stk["interval"],
+                                                     mode="drop"),
+            "edge": hist["edge"].at[idx].set(e_sorted.astype(jnp.int32),
+                                             mode="drop"),
+            "cost": hist["cost"].at[idx].set(stk["cost"], mode="drop"),
+            "consumed": hist["consumed"].at[idx].set(stk["consumed_sum"],
+                                                     mode="drop"),
+            "wall": hist["wall"].at[idx].set(f_sorted, mode="drop"),
+        }
+        wall_out = f_sorted[n_batch - 1]
+        new_carry = {"gparams": gparams, "edge_params": edge_params,
+                     "fleet": fleet, "consumed": consumed,
+                     "finish": finish, "infl_i": infl_i,
+                     "infl_c": infl_c, "fetch_ver": fetch_ver,
+                     "version": version, "t": t0 + n_batch, "rng": rng,
+                     "prev_metric": prev_metric, "wall": wall_out,
+                     "hist": hist}
+        if spec is not None:
+            with jax.named_scope("obs.telemetry"):
+                prev_walls = jnp.concatenate(
+                    [carry["wall"][None], f_sorted[:-1]])
+                new_carry["telem"] = async_ring_record_wave(
+                    carry["telem"], spec, t0=t0, valid=valid,
+                    edge=e_sorted, arm=interval_l - 1, cost=cost_l,
+                    budget_resid=stk["resid"], alpha=stk["alpha"],
+                    staleness=stk["stale"],
+                    interarrival=f_sorted - prev_walls,
+                    arm_counts=stk["bcounts"],
+                    arm_utility=stk["butil"])
+        return new_carry
+
+    body = body_one if batch_k == 1 else body_wave
+
     def finalize(carry: Dict[str, Any], knobs: Dict[str, jax.Array]):
         out = dict(carry["hist"])
         out["n_rounds"] = carry["t"]
@@ -287,11 +511,18 @@ def make_async_program(model, edge_data, eval_set, cfg: OL4ELConfig, *,
                        metric_fn: Optional[Callable] = None,
                        metric_name: str = "accuracy",
                        max_events: int = 256, mesh=None,
-                       telemetry=None):
+                       telemetry=None,
+                       batch_k: Optional[int] = None):
     """Build ``program(init_params, rng, knobs) -> (params, out)`` — the
     whole budgeted async run as one ``lax.while_loop`` over events, with
     the control-plane knobs (``ASYNC_KNOB_NAMES`` / ``async_knobs``) as
     traced inputs.
+
+    ``batch_k=`` is the static K-event wave width (module docstring);
+    ``None`` auto-resolves from the config and mesh
+    (``resolve_async_batch_k``), ``1`` is the single-event argmin-pop
+    program, ``> 1`` dispatches K-event waves whose processed order,
+    merge values, charged costs and arm pulls are identical (tested).
 
     ``n_samples`` is accepted for signature parity with the sync program
     and ignored: the async global update is the staleness mix, not a
@@ -318,7 +549,8 @@ def make_async_program(model, edge_data, eval_set, cfg: OL4ELConfig, *,
     cell = make_async_cell(
         model, edge_data, eval_set, cfg, lr=lr, batch=batch,
         n_samples=n_samples, metric_fn=metric_fn, metric_name=metric_name,
-        max_events=max_events, mesh=mesh, telemetry=telemetry)
+        max_events=max_events, mesh=mesh, telemetry=telemetry,
+        batch_k=batch_k)
 
     def program(init_params: Params, rng: jax.Array,
                 knobs: Dict[str, jax.Array]):

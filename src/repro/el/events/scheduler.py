@@ -80,6 +80,24 @@ def schedule_block(bstate_e, resid, costs_e, ucb_c, min_cost_e, cost_noise,
     return active, interval, cost, finish
 
 
+def wave_safe_gap(min_edge_cost, cost_noise):
+    """Lower bound (f32) on ANY rescheduled block's realized cost — the
+    K-event wave-safety margin.
+
+    ``schedule_block`` charges ``cost = fl(fl(fl(i·comp_e) + comm_e) ·
+    mult)`` with ``i >= 1`` and ``mult >= 0.1`` (``== 1.0`` exactly when
+    the noise knob is zero).  Round-to-nearest is monotone, so ``cost >=
+    fl(min(min_edge_cost) · floor)`` — this gap.  A wave may therefore
+    batch every lane ``j`` with ``f_(j) < fl(f_(0) + gap)`` (strict:
+    rescheduled finishes ``fl(f_i + cost) >= fl(f_(0) + gap)`` land
+    at-or-after the bound, and ties against in-wave lanes must fall to
+    the next wave where argmin/top-k tie-breaking orders them), and the
+    processed order equals the one-event-at-a-time program's exactly.
+    """
+    floor = jnp.where(cost_noise > 0, jnp.float32(0.1), jnp.float32(1.0))
+    return jnp.min(min_edge_cost) * floor
+
+
 def staleness_alpha(base, version, fetch_version, n_edges: int):
     """The staleness-discounted mixing rate in float32.
 

@@ -57,6 +57,13 @@ class Cohort:
         self.waves = 0
         self.admitted = 0
         self.completed = 0
+        # wave-batched data-plane dispatch counters: admits land as ONE
+        # place_many scatter per wave and finalize reads as ONE
+        # take_many gather per wave, regardless of how many tenants
+        # joined/finished (the fleet smoke asserts these stay at one
+        # dispatch per wave)
+        self.place_dispatches = 0
+        self.gather_dispatches = 0
         self._seq = 0
         self._pending: List[Tuple[int, int, str, TenantRun]] = []
         self._slots: List[Optional[_Active]] = [None] * batch.n_slots
@@ -94,11 +101,13 @@ class Cohort:
     def _admit(self) -> int:
         """Fill free slots from the queue (continuous batching: runs
         admitted mid-flight join the next wave; occupied slots are
-        untouched — ``place`` only writes the freed row).  Returns the
-        number of tenants admitted; each admission emits a
+        untouched — the scatter only writes the freed rows).  The whole
+        wave's admissions land in ONE ``place_many`` dispatch: per-slot
+        carries are initialized host-side, then scattered together.
+        Returns the number of tenants admitted; each admission emits a
         ``cohort.refill`` trace event."""
         from repro.obs import trace as obs_trace
-        refilled = 0
+        admitted: List[Tuple[int, Any]] = []     # (slot, carry)
         for s in range(self.batch.n_slots):
             if self._slots[s] is not None or not self._pending:
                 continue
@@ -111,20 +120,33 @@ class Cohort:
                 {k: jnp.asarray(v) for k, v in knobs.items()})
             if self._stacked is None:
                 self._stacked = self.batch.broadcast(carry)
+                # per-knob dtypes: the async control plane carries the
+                # int32 event_cap alongside the float32 scalars
                 self._knobs_np = {
                     k: np.zeros((self.batch.n_slots,) + np.shape(v),
-                                np.float32)
+                                np.asarray(v).dtype)
                     for k, v in knobs.items()}
-            self._stacked = self.batch.place(self._stacked, carry,
-                                             jnp.int32(s))
             for k, v in knobs.items():
                 self._knobs_np[k][s] = v
             self._slots[s] = _Active(tenant_id, run, knobs)
             self.admitted += 1
-            refilled += 1
+            admitted.append((s, carry))
             obs_trace.event("cohort.refill", slot=s, tenant=tenant_id,
                             queue_depth=len(self._pending))
-        return refilled
+        if admitted:
+            # fixed-arity scatter: pad to n_slots by repeating the last
+            # (carry, slot) pair — duplicate writes are idempotent and
+            # the pytree shape never changes, so this stays one
+            # compiled program across every refill pattern
+            pad = self.batch.n_slots - len(admitted)
+            slots = np.asarray([s for s, _ in admitted]
+                               + [admitted[-1][0]] * pad, np.int32)
+            carries = tuple(c for _, c in admitted) \
+                + (admitted[-1][1],) * pad
+            self._stacked = self.batch.place_many(
+                self._stacked, carries, jnp.asarray(slots))
+            self.place_dispatches += 1
+        return len(admitted)
 
     # -- the service loop body ----------------------------------------------
 
@@ -162,6 +184,7 @@ class Cohort:
             t_host = np.asarray(self._stacked["t"])
             hist = jax.tree.map(np.asarray, self._stacked["hist"])
             done: List[Tuple[str, ELReport]] = []
+            finished: List[int] = []
             for s, slot in enumerate(self._slots):
                 if slot is None:
                     continue
@@ -174,7 +197,21 @@ class Cohort:
                     for rec in fresh:
                         emit(RoundDelta(slot.tenant_id, rec))
                 if not running[s]:
-                    done.append(self._finalize(s, emit))
+                    finished.append(s)
+            if finished:
+                # the wave's finished rows come off the stacked carry in
+                # ONE take_many gather (fixed shape: pad the slot list
+                # by repeating the last index), then finalize per tenant
+                # from the gathered sub-stack
+                pad = self.batch.n_slots - len(finished)
+                slots = np.asarray(finished + [finished[-1]] * pad,
+                                   np.int32)
+                rows = self.batch.take_many(self._stacked,
+                                            jnp.asarray(slots))
+                self.gather_dispatches += 1
+                for i, s in enumerate(finished):
+                    carry = jax.tree.map(lambda a, i=i: a[i], rows)
+                    done.append(self._finalize(s, emit, carry))
             sp["completed"] = len(done)
             return done
 
@@ -194,9 +231,11 @@ class Cohort:
         if self._cache is not None:
             self._cache.set_profile(self.key, prof)
 
-    def _finalize(self, s: int, emit: EmitFn) -> Tuple[str, ELReport]:
+    def _finalize(self, s: int, emit: EmitFn,
+                  carry: Any = None) -> Tuple[str, ELReport]:
         slot = self._slots[s]
-        carry = self.batch.take_slot(self._stacked, jnp.int32(s))
+        if carry is None:        # direct callers outside the wave path
+            carry = self.batch.take_slot(self._stacked, jnp.int32(s))
         params, out = self.batch.finalize_slot(
             carry, {k: jnp.asarray(v) for k, v in slot.knobs.items()})
         # tree.map (not a dict comprehension): ``out`` carries a nested

@@ -234,6 +234,13 @@ class FleetServer:
             "cache_misses": self._cache.misses,
             "cache_evictions": self._cache.evictions,
             "waves": sum(c.waves for c in self._cohorts.values()),
+            # wave-batched data-plane dispatches: one place_many scatter
+            # per admitting wave, one take_many gather per finalizing
+            # wave — never per tenant
+            "place_dispatches": sum(c.place_dispatches
+                                    for c in self._cohorts.values()),
+            "gather_dispatches": sum(c.gather_dispatches
+                                     for c in self._cohorts.values()),
         }
 
     def close(self) -> None:

@@ -612,15 +612,25 @@ class ELSession:
         Same supported matrix as ``run_sync_ingraph`` (policy ``ol4el``
         with per-edge bandits).  ``max_events=None`` derives the event
         horizon from budget/cost (``default_event_horizon``), so runs
-        terminate on budget exhaustion, never silent truncation.  In
-        fixed-cost mode the result is bit-identical to the host event
-        queue on the same streams, ``run_async(rng_streams="jax")``.
+        terminate on budget exhaustion, never silent truncation.  An
+        explicit ``max_events`` is **bucketed**: the compiled history
+        arrays are sized at the next power of two
+        (``bucket_event_horizon``) while the exact cap rides in as the
+        traced ``event_cap`` knob — nearby caps share ONE executable
+        instead of recompiling per value, and the loop still stops at
+        exactly ``max_events`` events.  In fixed-cost mode the result is
+        bit-identical to the host event queue on the same streams,
+        ``run_async(rng_streams="jax")``.
 
         ``mesh=`` shards the per-edge datasets and the ``[n_edges, ...]``
         fetched-params stack over the mesh (bit-identical to the
         mesh-less program — see ``make_async_program``); ``donate=True``
         donates the initial params' buffers (caller must not reuse them;
-        the session detects reuse and raises).
+        the session detects reuse and raises).  ``cfg.async_batch_k``
+        sets the engine's K-event wave width (0 auto-tunes from the
+        mesh: sharded runs dispatch batched waves, replicated runs keep
+        the single-event program — see ``resolve_async_batch_k``); it is
+        structural, so it participates in the compile-cache key.
 
         ``telemetry=`` switches the in-graph observability rings on
         (see ``run_sync_ingraph``; async rings additionally record the
@@ -631,6 +641,7 @@ class ELSession:
         gather-before-reduce census).
         """
         from repro.el.events import (ASYNC_KNOB_NAMES, async_knobs,
+                                     bucket_event_horizon,
                                      make_async_program,
                                      padded_event_horizon)
         from repro.obs import rings as obs_rings, trace as obs_trace
@@ -644,8 +655,13 @@ class ELSession:
             # the exact budget/cost-dependent value would recompile on
             # every knob change the traced inputs exist to absorb
             horizon = padded_event_horizon(cfg)
+            event_cap = None
         else:
-            horizon = int(max_events)
+            # explicit caps bucket the same way: the STATIC history
+            # length is the pow-2 envelope, the exact cap is the traced
+            # event_cap knob — nearby caps share one executable
+            event_cap = int(max_events)
+            horizon = bucket_event_horizon(event_cap)
         key = ("async", ex, self._structural_cfg(cfg), horizon, metric_fn,
                self.metric_name, mesh, donate, spec)
         params = self._initial_params()
@@ -661,23 +677,26 @@ class ELSession:
                     ASYNC_KNOB_NAMES, mesh, donate, params)
                 self._cache_program(key, program)
         self._async_fastpath, self._async_key = program, key
+        knobs = async_knobs(cfg)
+        if event_cap is not None:
+            knobs["event_cap"] = np.int32(event_cap)
         self._profile_program(
             key, program,
             (jax.eval_shape(lambda p: p, params),
-             jax.random.key(cfg.seed + 17), async_knobs(cfg)),
+             jax.random.key(cfg.seed + 17), knobs),
             mode="async", mesh=mesh, donate=donate, profile=profile,
             contract=contract)
         with obs_trace.span("session.dispatch", mode="async") as sp:
             params, out = jax.block_until_ready(
-                program(params, jax.random.key(cfg.seed + 17),
-                        async_knobs(cfg)))
+                program(params, jax.random.key(cfg.seed + 17), knobs))
             sp["n_events"] = int(out["n_rounds"])
         records: List[RoundRecord] = []
         for rec in records_from_out(out, 0, int(out["n_rounds"])):
             self._emit(records, rec)
         final = ex.evaluate(params)[self.metric_name]
         report = report_from_out(
-            out, mode="async", policy=cfg.policy, horizon=horizon,
+            out, mode="async", policy=cfg.policy,
+            horizon=horizon if event_cap is None else event_cap,
             final_metric=final, final_params=params,
             elapsed_s=time.perf_counter() - t0, records=records)
         return self._attach_cache_stats(report, key)
@@ -698,6 +717,11 @@ class ELSession:
         ``run_async_ingraph`` with that cell's config (same RNG
         streams), and the same support matrix applies.  With ``mesh=``
         the sweep dim shards over the mesh's (``pod``, ``data``) axes.
+        An async grid may sweep ``async_batch_k`` (the K-event wave
+        width): each K is a different compiled body, so the session
+        runs one vmapped sub-sweep per K (the axis is slowest-varying —
+        sub-results concatenate back into the flattened grid order) and
+        every K's cells remain bit-identical to each other.
         ``telemetry=`` switches the per-cell in-graph rings on (see
         ``run_sync_ingraph``); each cell's rings land stacked in the
         report's ``out["telemetry"]`` leaves.  Returns a
@@ -711,33 +735,57 @@ class ELSession:
         cfg = self._ingraph_cfg("ELSession.sweep")
         tele_spec = obs_rings.as_spec(telemetry)
         t0 = time.perf_counter()
-        # the jitted vmapped program only depends on the structural config,
-        # the grid SHAPE (axis lengths fix the [n_cells] dim and, with a
-        # mesh, the input shardings) and max_rounds — not the knob values
-        axes = spec.axes(cfg)
-        spec_shape = (tuple(len(v) for v in axes.values()),
-                      spec.max_rounds)
-        key = ("sweep", ex, self._structural_cfg(cfg), spec_shape,
-               metric_fn, self.metric_name, mesh,
-               None if self._n_samples is None else tuple(self._n_samples),
-               tele_spec)
         from repro.obs import trace as obs_trace
-        program = self._programs.get(key)
-        if program is None:
-            with obs_trace.span("session.compile", mode="sweep",
-                                n_cells=spec.n_cells):
-                program = make_sweep_program(
-                    ex.model, ex.edge_data, ex.eval_set, cfg, spec,
-                    lr=ex.lr, batch=ex.batch, n_samples=self._n_samples,
-                    metric_fn=metric_fn, metric_name=self.metric_name,
-                    mesh=mesh, telemetry=tele_spec)
-                self._cache_program(key, program)
-        self._sweep_program, self._sweep_key = program, key
-        with obs_trace.span("session.dispatch", mode="sweep",
-                            n_cells=spec.n_cells):
-            params, out = run_sweep_program(
-                program, self._initial_params(),
-                spec.cell_cfgs(cfg))
+        # each async_batch_k value is a different compiled wave body —
+        # run one vmapped sub-sweep per K (a single-K / sync grid is one
+        # sub-sweep: exactly the old path)
+        subs = (spec.per_batch_k() if cfg.mode == "async"
+                else [(None, spec)])
+        params_parts, out_parts = [], []
+        for k_val, sub in subs:
+            sub_cfg = (cfg if k_val is None else dataclasses.replace(
+                cfg, async_batch_k=int(k_val)))
+            # the jitted vmapped program only depends on the structural
+            # config (incl. async_batch_k), the grid SHAPE (axis lengths
+            # fix the [n_cells] dim and, with a mesh, the input
+            # shardings) and max_rounds — not the knob values
+            axes = sub.axes(sub_cfg)
+            spec_shape = (tuple(len(v) for v in axes.values()),
+                          sub.max_rounds)
+            key = ("sweep", ex, self._structural_cfg(sub_cfg), spec_shape,
+                   metric_fn, self.metric_name, mesh,
+                   None if self._n_samples is None
+                   else tuple(self._n_samples),
+                   tele_spec)
+            program = self._programs.get(key)
+            if program is None:
+                with obs_trace.span("session.compile", mode="sweep",
+                                    n_cells=sub.n_cells):
+                    program = make_sweep_program(
+                        ex.model, ex.edge_data, ex.eval_set, sub_cfg, sub,
+                        lr=ex.lr, batch=ex.batch,
+                        n_samples=self._n_samples, metric_fn=metric_fn,
+                        metric_name=self.metric_name,
+                        mesh=mesh, telemetry=tele_spec)
+                    self._cache_program(key, program)
+            self._sweep_program, self._sweep_key = program, key
+            with obs_trace.span("session.dispatch", mode="sweep",
+                                n_cells=sub.n_cells):
+                params, out = run_sweep_program(
+                    program, self._initial_params(),
+                    sub.cell_cfgs(sub_cfg))
+            params_parts.append(params)
+            out_parts.append(out)
+        if len(out_parts) == 1:
+            params, out = params_parts[0], out_parts[0]
+        else:
+            # async_batch_k is slowest-varying, so concatenating the
+            # sub-sweeps along the cell axis reproduces spec.cells()
+            params = jax.tree.map(
+                lambda *xs: jax.numpy.concatenate(xs, axis=0),
+                *params_parts)
+            out = jax.tree.map(
+                lambda *xs: np.concatenate(xs, axis=0), *out_parts)
         report = SweepReport(
             spec=spec, axes=spec.axes(cfg), cells=spec.cells(cfg),
             out=out, policy=cfg.policy,

@@ -152,6 +152,12 @@ def make_sweep_program(model, edge_data, eval_set, cfg: OL4ELConfig,
     cfgs = spec.cell_cfgs(cfg)
     # structural fields (n_edges, utility, mode, ...) are identical
     # across cells by SweepSpec construction — any cell builds the program
+    if cfg.mode == "async" and len({c.async_batch_k for c in cfgs}) > 1:
+        raise ValueError(
+            "a multi-valued async_batch_k grid needs one compiled "
+            "program per K (each K is a different wave body); split "
+            "with spec.per_batch_k() — ELSession.sweep does this "
+            "automatically")
     make_program = (make_async_program if cfg.mode == "async"
                     else make_sync_program)
     core = make_program(
@@ -220,8 +226,18 @@ class CellBatch:
     #: (stacked, carry_one, slot) -> stacked with row ``slot`` replaced
     #: (donates ``stacked``)
     place: Callable
+    #: (stacked, carries_tuple, slots[n_slots] i32) -> stacked with every
+    #: named row replaced in ONE scatter per leaf (donates ``stacked``).
+    #: ``carries_tuple`` is always length ``n_slots`` — pad by repeating
+    #: the last real (carry, slot) pair, so the pytree arity is fixed
+    #: (one compile) and duplicate writes are idempotent.
+    place_many: Callable
     #: (stacked, slot) -> carry_one (a gather — safe before donation)
     take_slot: Callable
+    #: (stacked, slots[n] i32) -> the named rows stacked along a leading
+    #: [n] axis, ONE gather per leaf (pad ``slots`` by repetition for a
+    #: fixed shape; safe before donation)
+    take_many: Callable
     #: (stacked, knobs_stacked, active[n_slots] bool) ->
     #: (stacked', running[n_slots] bool); donates ``stacked``
     step: Callable
@@ -296,8 +312,21 @@ def make_cell_batch(model, edge_data, eval_set, cfg: OL4ELConfig, *,
         return _constrain(jax.tree.map(
             lambda s, one: s.at[slot].set(one), stacked, carry_one))
 
+    def _place_many(stacked, carries, slots):
+        # a wave's admissions land in ONE scatter per carry leaf: stack
+        # the single-slot carries into [n_slots, ...] rows and write
+        # them at their slot indices (duplicate padded indices rewrite
+        # the same values — idempotent)
+        rows = jax.tree.map(lambda *xs: jnp.stack(xs), *carries)
+        return _constrain(jax.tree.map(
+            lambda s, r: s.at[slots].set(r), stacked, rows))
+
     def _take_slot(stacked, slot):
         return jax.tree.map(lambda s: s[slot], stacked)
+
+    def _take_many(stacked, slots):
+        # a wave's finalizes read their rows in ONE gather per leaf
+        return jax.tree.map(lambda s: s[slots], stacked)
 
     def _step_one(carry, knobs, active):
         # the mask lives INSIDE the loop condition: an inactive slot
@@ -329,6 +358,8 @@ def make_cell_batch(model, edge_data, eval_set, cfg: OL4ELConfig, *,
         init_slot=jax.jit(_init_slot),
         broadcast=jax.jit(_broadcast),
         place=jax.jit(_place, donate_argnums=(0,)),
+        place_many=jax.jit(_place_many, donate_argnums=(0,)),
         take_slot=jax.jit(_take_slot),
+        take_many=jax.jit(_take_many),
         step=jax.jit(_step, donate_argnums=(0,)),
         finalize_slot=jax.jit(_finalize_slot))

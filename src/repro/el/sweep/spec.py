@@ -18,6 +18,15 @@ noise scale ``cost_noise``, the async staleness-mix base rate
 mode) change the program itself and stay fixed across a sweep — run
 several sweeps to compare those (the session's ``cfg.mode`` picks the
 sync round vs the async event-horizon program for the whole grid).
+
+``async_batch_k`` is the one *semi-structural* axis: each K value is a
+different compiled body (the K-event wave width), so the session splits
+the grid into one sub-sweep per K — the axis is SLOWEST-varying
+(first in ``AXIS_ORDER``) so each sub-sweep's cells are one contiguous
+block of the flattened grid, and the concatenated results line up with
+``cells()`` exactly.  All K values compute bit-identical results (the
+wave program is order-equivalent to K=1); sweeping it compares
+*throughput*, not learning curves.
 """
 
 from __future__ import annotations
@@ -29,9 +38,10 @@ from typing import Dict, List, Sequence, Tuple
 from repro.config import OL4ELConfig
 
 #: Sweep-axis order; the flattened cell index is row-major over these,
-#: so ``seed`` varies fastest.
-AXIS_ORDER = ("ucb_c", "budget", "heterogeneity", "cost_noise",
-              "async_alpha", "seed")
+#: so ``seed`` varies fastest and ``async_batch_k`` slowest (each K is
+#: its own compiled sub-sweep; first place keeps its cells contiguous).
+AXIS_ORDER = ("async_batch_k", "ucb_c", "budget", "heterogeneity",
+              "cost_noise", "async_alpha", "seed")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,12 +66,13 @@ class SweepSpec:
     heterogeneity: Tuple[float, ...] = ()
     cost_noise: Tuple[float, ...] = ()
     async_alpha: Tuple[float, ...] = ()
+    async_batch_k: Tuple[int, ...] = ()
     seeds: Tuple[int, ...] = (0,)
     max_rounds: int = 256
 
     def __post_init__(self):
         for name in ("ucb_c", "budget", "heterogeneity", "cost_noise",
-                     "async_alpha", "seeds"):
+                     "async_alpha", "async_batch_k", "seeds"):
             vals = getattr(self, name)
             if not isinstance(vals, tuple):
                 object.__setattr__(self, name, tuple(vals))
@@ -86,12 +97,17 @@ class SweepSpec:
             raise ValueError("SweepSpec.async_alpha values are mixing "
                              "rates and must be in (0, 1], got "
                              f"{self.async_alpha}")
+        if any(int(k) < 0 for k in self.async_batch_k):
+            raise ValueError("SweepSpec.async_batch_k values are wave "
+                             "widths and must be >= 0 (0 = auto), got "
+                             f"{self.async_batch_k}")
 
     # -- flattening ----------------------------------------------------------
 
     def axes(self, cfg: OL4ELConfig) -> Dict[str, Tuple]:
         """Axis name -> values, empty axes defaulted from ``cfg``."""
         return {
+            "async_batch_k": self.async_batch_k or (cfg.async_batch_k,),
             "ucb_c": self.ucb_c or (cfg.ucb_c,),
             "budget": self.budget or (cfg.budget,),
             "heterogeneity": self.heterogeneity or (cfg.heterogeneity,),
@@ -103,7 +119,8 @@ class SweepSpec:
     @property
     def n_cells(self) -> int:
         n = 1
-        for vals in (self.ucb_c or (None,), self.budget or (None,),
+        for vals in (self.async_batch_k or (None,),
+                     self.ucb_c or (None,), self.budget or (None,),
                      self.heterogeneity or (None,),
                      self.cost_noise or (None,),
                      self.async_alpha or (None,), self.seeds):
@@ -136,8 +153,21 @@ class SweepSpec:
             cost_model=("variable"
                         if explicit_noise and c["cost_noise"] > 0
                         else cfg.cost_model),
-            async_alpha=float(c["async_alpha"]), seed=int(c["seed"]))
+            async_alpha=float(c["async_alpha"]),
+            async_batch_k=int(c["async_batch_k"]), seed=int(c["seed"]))
             for c in self.cells(cfg)]
+
+    def per_batch_k(self) -> List[Tuple[int, "SweepSpec"]]:
+        """Split into one sub-spec per ``async_batch_k`` value (grid
+        order).  Each K compiles a different wave body, so the engine
+        runs one vmapped program per sub-spec; the axis is slowest-
+        varying, so concatenating the sub-results along the cell axis
+        reproduces the full flattened grid."""
+        ks = self.async_batch_k or (None,)
+        if len(ks) <= 1:
+            return [(ks[0], self)]
+        return [(k, dataclasses.replace(self, async_batch_k=(k,)))
+                for k in ks]
 
     def describe(self, cfg: OL4ELConfig) -> str:
         axes = self.axes(cfg)
@@ -150,6 +180,7 @@ def spec_from_sequences(ucb_c: Sequence[float] = (),
                         heterogeneity: Sequence[float] = (),
                         cost_noise: Sequence[float] = (),
                         async_alpha: Sequence[float] = (),
+                        async_batch_k: Sequence[int] = (),
                         seeds: Sequence[int] = (0,),
                         max_rounds: int = 256) -> SweepSpec:
     """CLI-friendly constructor (lists in, validated tuples out)."""
@@ -158,5 +189,6 @@ def spec_from_sequences(ucb_c: Sequence[float] = (),
                      heterogeneity=tuple(float(x) for x in heterogeneity),
                      cost_noise=tuple(float(x) for x in cost_noise),
                      async_alpha=tuple(float(x) for x in async_alpha),
+                     async_batch_k=tuple(int(k) for k in async_batch_k),
                      seeds=tuple(int(s) for s in seeds),
                      max_rounds=int(max_rounds))

@@ -99,6 +99,8 @@ def tenant_runs(manifest: Dict[str, Any], args) -> List[TenantRun]:
             n_edges=fkey[2], utility=fx["utility"],
             budget=float(t.get("budget", fx["exp"].ol4el.budget)),
             ucb_c=float(t.get("ucb_c", fx["exp"].ol4el.ucb_c)),
+            async_batch_k=int(t.get("async_batch_k",
+                                    args.async_batch_k)),
             seed=int(t.get("seed", 0)))
         runs.append(TenantRun(
             cfg=ol, executor=fx["executor"],
@@ -131,6 +133,10 @@ def main() -> None:
     ap.add_argument("--mesh", default="none", choices=["none", "debug"],
                     help="'debug': shard every cohort's slot dim over a "
                          "host-device mesh")
+    ap.add_argument("--async-batch-k", type=int, default=0,
+                    help="default async K-event wave width for tenants "
+                         "that don't set async_batch_k themselves "
+                         "(cfg.async_batch_k; 0 = auto)")
     ap.add_argument("--assert-compiles", type=int, default=None,
                     metavar="N",
                     help="exit non-zero unless exactly N cohort programs "
@@ -185,7 +191,21 @@ def main() -> None:
     print(f"\n{len(reports)}/{len(ids)} reports in {elapsed:.2f}s — "
           f"{st['cohorts']} cohorts, {st['compiles']} compiles "
           f"({st['cache_hits']} cache hits, {st['cache_misses']} misses, "
-          f"{st['cache_evictions']} evictions), {st['waves']} waves")
+          f"{st['cache_evictions']} evictions), {st['waves']} waves, "
+          f"{st['place_dispatches']} place / {st['gather_dispatches']} "
+          f"gather dispatches")
+
+    # wave batching invariant: admits scatter as ONE place_many per
+    # admitting wave and finalizes gather as ONE take_many per
+    # finalizing wave — never per tenant.  A per-tenant regression shows
+    # up as dispatch counts above the wave count.
+    if reports and not (1 <= st["place_dispatches"] <= st["waves"]
+                        and 1 <= st["gather_dispatches"] <= st["waves"]):
+        print(f"ERROR: per-wave dispatch invariant broken — "
+              f"{st['place_dispatches']} place / "
+              f"{st['gather_dispatches']} gather dispatches over "
+              f"{st['waves']} waves", file=sys.stderr)
+        raise SystemExit(1)
 
     registry = None
     if args.metrics_out:

@@ -69,6 +69,10 @@ def main() -> None:
     ap.add_argument("--async-alpha", type=float, nargs="*", default=[],
                     help="async staleness-mix base-rate grid "
                          "(a no-op axis for sync grids)")
+    ap.add_argument("--async-batch-k", type=int, nargs="*", default=[],
+                    help="async K-event wave-width grid (one compiled "
+                         "sub-sweep per K; 0 = auto — throughput axis, "
+                         "every K computes identical results)")
     ap.add_argument("--seeds", type=int, nargs="*", default=[0, 1])
     ap.add_argument("--el-mode", default="sync", choices=["sync", "async"],
                     help="'async': every cell runs the compiled "
@@ -100,8 +104,8 @@ def main() -> None:
     spec = spec_from_sequences(
         ucb_c=args.ucb_c, budget=args.budget,
         heterogeneity=args.heterogeneity, cost_noise=args.cost_noise,
-        async_alpha=args.async_alpha, seeds=args.seeds,
-        max_rounds=args.max_rounds)
+        async_alpha=args.async_alpha, async_batch_k=args.async_batch_k,
+        seeds=args.seeds, max_rounds=args.max_rounds)
     mesh = None
     if args.mesh == "debug":
         # mesh shape follows the forced device count: (count//2, 2) —

@@ -103,8 +103,9 @@ def train_classic_ol4el(exp, args) -> None:
     ol = dataclasses.replace(fx["exp"].ol4el, n_edges=args.edges,
                              heterogeneity=args.heterogeneity,
                              budget=args.budget, mode=args.el_mode,
-                             async_alpha=args.async_alpha, policy="ol4el",
-                             utility=fx["utility"])
+                             async_alpha=args.async_alpha,
+                             async_batch_k=args.async_batch_k,
+                             policy="ol4el", utility=fx["utility"])
     mesh = _build_mesh(args)
     session = (ELSession(ol, metric_name=metric, lr=fx["lr"])
                .with_executor(fx["executor"],
@@ -202,6 +203,9 @@ def main(argv=None) -> None:
     ap.add_argument("--el-mode", default="async", choices=["sync", "async"])
     ap.add_argument("--async-alpha", type=float, default=0.5,
                     help="async staleness-mix base rate (cfg.async_alpha)")
+    ap.add_argument("--async-batch-k", type=int, default=0,
+                    help="async K-event wave width (cfg.async_batch_k; "
+                         "0 = auto: 1 replicated, mesh-tuned sharded)")
     ap.add_argument("--steps", type=int, default=None,
                     help="standard/sync: training steps/rounds (default "
                          "50); async: optional event cap of steps*edges "

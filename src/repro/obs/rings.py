@@ -35,6 +35,18 @@ in-graph dtypes):
 rings host-side in ``np.float32`` from the program's *history* arrays
 using the same op sequence the device used — the equivalence oracle the
 telemetry tests compare against bit-for-bit (fixed-cost mode).
+
+**Storage is packed by dtype group** so a record is a handful of
+scatters, not one per scalar: the float32 signals live in one
+``[ring, n_floats]`` buffer (column order ``_SYNC_FLOATS`` /
+``_ASYNC_FLOATS``) and the async int32 pair in one ``[ring, 2]``
+(``_ASYNC_INTS``), alongside the ``[ring, K]`` bandit snapshots.
+``finalize_telemetry`` unpacks the columns back to the public field
+names, so ``out["telemetry"]`` — and everything reading it — is
+unchanged.  ``async_ring_record_wave`` lands a K-event wave's records in
+their per-event slots with ONE drop-mode vector scatter per group
+(wave lanes are consecutive events and K <= ring_size, so in-wave slots
+never collide).
 """
 
 from __future__ import annotations
@@ -47,6 +59,13 @@ import numpy as np
 #: default ring length: covers a whole default sync run (max_rounds=512
 #: rarely exceeds a few hundred charged rounds) at ~KB-scale state.
 DEFAULT_RING = 128
+
+#: packed-column orders (the storage layout; ``finalize_telemetry``
+#: unpacks them back to these public names)
+_SYNC_FLOATS = ("round_cost", "budget_resid")
+_ASYNC_INTS = ("edge", "arm")
+_ASYNC_FLOATS = ("cost", "budget_resid", "alpha", "staleness",
+                 "interarrival")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -95,13 +114,13 @@ def as_spec(telemetry: Union[None, bool, int, TelemetrySpec]
 
 def sync_ring_init(spec: TelemetrySpec, n_arms: int) -> Dict[str, Any]:
     """The sync carry's ``"telem"`` subtree: empty ``[ring]`` /
-    ``[ring, K]`` buffers (``arm`` is -1 where nothing was recorded)."""
+    ``[ring, n_floats]`` / ``[ring, K]`` buffers (``arm`` is -1 where
+    nothing was recorded; float columns in ``_SYNC_FLOATS`` order)."""
     import jax.numpy as jnp
     r = spec.ring_size
     return {
         "arm": jnp.full((r,), -1, jnp.int32),
-        "round_cost": jnp.zeros((r,), jnp.float32),
-        "budget_resid": jnp.zeros((r,), jnp.float32),
+        "floats": jnp.zeros((r, len(_SYNC_FLOATS)), jnp.float32),
         "arm_counts": jnp.zeros((r, n_arms), jnp.int32),
         "arm_utility": jnp.zeros((r, n_arms), jnp.float32),
     }
@@ -111,13 +130,14 @@ def sync_ring_record(ring: Dict[str, Any], spec: TelemetrySpec, *,
                      t, arm, round_cost, budget_resid,
                      bstate: Dict[str, Any]) -> Dict[str, Any]:
     """Write round ``t``'s signals at slot ``t % ring_size`` (values the
-    body already computed — recording adds scatters, never math)."""
+    body already computed — recording adds scatters, never math; the
+    float group lands as ONE row write)."""
     import jax.numpy as jnp
     i = jnp.mod(t, spec.ring_size)
     return {
         "arm": ring["arm"].at[i].set(arm.astype(jnp.int32)),
-        "round_cost": ring["round_cost"].at[i].set(round_cost),
-        "budget_resid": ring["budget_resid"].at[i].set(budget_resid),
+        "floats": ring["floats"].at[i].set(
+            jnp.stack([round_cost, budget_resid])),
         "arm_counts": ring["arm_counts"].at[i].set(bstate["counts"]),
         "arm_utility": ring["arm_utility"].at[i].set(
             bstate["utility_sum"]),
@@ -125,18 +145,15 @@ def sync_ring_record(ring: Dict[str, Any], spec: TelemetrySpec, *,
 
 
 def async_ring_init(spec: TelemetrySpec, n_arms: int) -> Dict[str, Any]:
-    """The async carry's ``"telem"`` subtree (``edge``/``arm`` are -1
-    where nothing was recorded)."""
+    """The async carry's ``"telem"`` subtree: the packed ``[ring, 2]``
+    int group (``edge``/``arm``, -1 where nothing was recorded), the
+    ``[ring, n_floats]`` float group (``_ASYNC_FLOATS`` column order)
+    and the ``[ring, K]`` bandit snapshots."""
     import jax.numpy as jnp
     r = spec.ring_size
     return {
-        "edge": jnp.full((r,), -1, jnp.int32),
-        "arm": jnp.full((r,), -1, jnp.int32),
-        "cost": jnp.zeros((r,), jnp.float32),
-        "budget_resid": jnp.zeros((r,), jnp.float32),
-        "alpha": jnp.zeros((r,), jnp.float32),
-        "staleness": jnp.zeros((r,), jnp.float32),
-        "interarrival": jnp.zeros((r,), jnp.float32),
+        "ints": jnp.full((r, len(_ASYNC_INTS)), -1, jnp.int32),
+        "floats": jnp.zeros((r, len(_ASYNC_FLOATS)), jnp.float32),
         "arm_counts": jnp.zeros((r, n_arms), jnp.int32),
         "arm_utility": jnp.zeros((r, n_arms), jnp.float32),
     }
@@ -146,30 +163,75 @@ def async_ring_record(ring: Dict[str, Any], spec: TelemetrySpec, *,
                       t, edge, arm, cost, budget_resid, alpha, staleness,
                       interarrival, bstate_e: Dict[str, Any]
                       ) -> Dict[str, Any]:
-    """Write event ``t``'s signals at slot ``t % ring_size``."""
+    """Write event ``t``'s signals at slot ``t % ring_size`` — four
+    scatters total (one per storage group), not one per scalar."""
     import jax.numpy as jnp
     i = jnp.mod(t, spec.ring_size)
     return {
-        "edge": ring["edge"].at[i].set(edge.astype(jnp.int32)),
-        "arm": ring["arm"].at[i].set(arm.astype(jnp.int32)),
-        "cost": ring["cost"].at[i].set(cost),
-        "budget_resid": ring["budget_resid"].at[i].set(budget_resid),
-        "alpha": ring["alpha"].at[i].set(alpha),
-        "staleness": ring["staleness"].at[i].set(staleness),
-        "interarrival": ring["interarrival"].at[i].set(interarrival),
+        "ints": ring["ints"].at[i].set(jnp.stack(
+            [edge.astype(jnp.int32), arm.astype(jnp.int32)])),
+        "floats": ring["floats"].at[i].set(jnp.stack(
+            [cost, budget_resid, alpha, staleness, interarrival])),
         "arm_counts": ring["arm_counts"].at[i].set(bstate_e["counts"]),
         "arm_utility": ring["arm_utility"].at[i].set(
             bstate_e["utility_sum"]),
     }
 
 
+def async_ring_record_wave(ring: Dict[str, Any], spec: TelemetrySpec, *,
+                           t0, valid, edge, arm, cost, budget_resid,
+                           alpha, staleness, interarrival,
+                           arm_counts, arm_utility) -> Dict[str, Any]:
+    """Land a K-event wave's records in their per-event ring slots with
+    one drop-mode vector scatter per storage group.
+
+    Lane ``j`` is event ``t0 + j`` (waves accept a prefix of lanes), so
+    its slot is ``(t0 + j) % ring_size``; invalid lanes route out of
+    bounds and drop.  In-wave slots are distinct whenever the wave width
+    is <= ``ring_size`` (enforced at cell build), so scatter order
+    within the wave cannot matter — the resulting ring equals K
+    sequential :func:`async_ring_record` calls exactly.
+    """
+    import jax.numpy as jnp
+    lane = jnp.arange(edge.shape[0], dtype=jnp.int32)
+    idx = jnp.where(valid, jnp.mod(t0 + lane, spec.ring_size),
+                    jnp.int32(spec.ring_size))
+    ints = jnp.stack([edge.astype(jnp.int32),
+                      arm.astype(jnp.int32)], axis=1)       # [Kw, 2]
+    floats = jnp.stack([cost, budget_resid, alpha, staleness,
+                        interarrival], axis=1)              # [Kw, 5]
+    return {
+        "ints": ring["ints"].at[idx].set(ints, mode="drop"),
+        "floats": ring["floats"].at[idx].set(floats, mode="drop"),
+        "arm_counts": ring["arm_counts"].at[idx].set(arm_counts,
+                                                     mode="drop"),
+        "arm_utility": ring["arm_utility"].at[idx].set(arm_utility,
+                                                       mode="drop"),
+    }
+
+
 def finalize_telemetry(telem: Dict[str, Any], t,
                        spec: TelemetrySpec) -> Dict[str, Any]:
-    """The ``out["telemetry"]`` subtree a gated finalize emits: the raw
-    rings plus the write head (= rounds recorded) and the static ring
-    size, so hosts can unroll wraparound without out-of-band state."""
+    """The ``out["telemetry"]`` subtree a gated finalize emits: the ring
+    buffers unpacked to their public field names, plus the write head
+    (= rounds recorded) and the static ring size, so hosts can unroll
+    wraparound without out-of-band state.  Unpacking here keeps the
+    packed storage an implementation detail — readers see the same
+    per-signal ``[ring]`` arrays as always."""
     import jax.numpy as jnp
-    return {**telem, "head": t, "ring_size": jnp.int32(spec.ring_size)}
+    out: Dict[str, Any] = {}
+    if "ints" in telem:                      # async packed layout
+        for j, name in enumerate(_ASYNC_INTS):
+            out[name] = telem["ints"][:, j]
+        float_names = _ASYNC_FLOATS
+    else:                                    # sync layout
+        out["arm"] = telem["arm"]
+        float_names = _SYNC_FLOATS
+    for j, name in enumerate(float_names):
+        out[name] = telem["floats"][:, j]
+    out["arm_counts"] = telem["arm_counts"]
+    out["arm_utility"] = telem["arm_utility"]
+    return {**out, "head": t, "ring_size": jnp.int32(spec.ring_size)}
 
 
 # ---------------------------------------------------------------------------

@@ -237,7 +237,9 @@ def to_shardings(mesh: Mesh, specs: Any) -> Any:
 #: control plane — bandit stats, budgets, finish times — replicates).
 EL_EDGE_KNOBS = ("comp", "comm", "min_edge_cost")
 #: Scalar control-plane knobs (``[n_cells]`` in a sweep, 0-d in a run).
-EL_SCALAR_KNOBS = ("ucb_c", "budget", "cost_noise", "async_alpha")
+#: ``event_cap`` is the async engine's traced int32 event budget.
+EL_SCALAR_KNOBS = ("ucb_c", "budget", "cost_noise", "async_alpha",
+                   "event_cap")
 
 
 def el_edge_dim_axes(axis_names: Sequence[str],

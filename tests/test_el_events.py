@@ -162,6 +162,78 @@ def test_async_variable_noise_zero_is_bitwise_fixed():
     _assert_bit_identical(fixed, var0)
 
 
+# ---------------------------------------------------------------------------
+# K-event waves: batched dispatch is an order-equivalent reformulation —
+# every K > 1 program must reproduce the single-event (K=1) trajectory
+# bit for bit (merge values, charged costs, arm pulls, event order)
+# ---------------------------------------------------------------------------
+
+
+def _assert_same_params(a, b):
+    for pa, pb in zip(jax.tree.leaves(a.final_params),
+                      jax.tree.leaves(b.final_params)):
+        assert np.array_equal(np.asarray(pa), np.asarray(pb))
+
+
+@pytest.mark.parametrize("batch_k", [2, 3])   # 3 == n_edges (full wave)
+@pytest.mark.parametrize("cost_kw", [
+    {},                                               # fixed cost
+    {"cost_model": "variable", "cost_noise": 0.3},    # noisy charges
+], ids=["fixed", "variable"])
+def test_async_k_waves_bit_identical_to_single_event(batch_k, cost_kw):
+    ol, ex, init = _svm_fixture(**cost_kw)
+    base = _session(dataclasses.replace(ol, async_batch_k=1),
+                    ex, init).run_async_ingraph()
+    wave = _session(dataclasses.replace(ol, async_batch_k=batch_k),
+                    ex, init).run_async_ingraph()
+    assert base.terminated_reason == "budget_exhausted"
+    _assert_bit_identical(base, wave)
+    _assert_same_params(base, wave)
+
+
+def test_async_k1_is_the_auto_default_replicated():
+    """async_batch_k=0 (auto) resolves to 1 off-mesh: the default
+    program IS the K=1 special case, byte for byte."""
+    ol, ex, init = _svm_fixture()
+    auto = _session(ol, ex, init).run_async_ingraph()     # batch_k=0
+    k1 = _session(dataclasses.replace(ol, async_batch_k=1),
+                  ex, init).run_async_ingraph()
+    _assert_bit_identical(auto, k1)
+    _assert_same_params(auto, k1)
+
+
+def test_async_k_waves_same_tick_tie_break_matches_argmin_order():
+    """Homogeneous fleet (heterogeneity=0): edges repeatedly finish at
+    the SAME wall-clock tick.  The wave's within-gap ordering must
+    reproduce argmin's lowest-index-first pops exactly — a strict-<
+    gap predicate or an unstable top-k would reorder these events."""
+    ol, ex, init = _svm_fixture(n_edges=4, seed=1, budget=400.0)
+    ol = dataclasses.replace(ol, heterogeneity=0.0)
+    base = _session(dataclasses.replace(ol, async_batch_k=1),
+                    ex, init).run_async_ingraph()
+    # the fixture really exercises ties: some consecutive events share
+    # a wall-clock stamp
+    walls = [r.wall_time for r in base.records]
+    assert any(a == b for a, b in zip(walls, walls[1:]))
+    for k in (2, 4):
+        wave = _session(dataclasses.replace(ol, async_batch_k=k),
+                        ex, init).run_async_ingraph()
+        _assert_bit_identical(base, wave)
+        _assert_same_params(base, wave)
+
+
+def test_resolve_async_batch_k_explicit_and_auto():
+    from repro.el.events import resolve_async_batch_k
+    cfg = OL4ELConfig(mode="async", n_edges=3, heterogeneity=4.0)
+    # auto: replicated (no mesh) stays single-event
+    assert resolve_async_batch_k(cfg, mesh=None) == 1
+    # explicit K clamps to the fleet size
+    assert resolve_async_batch_k(
+        dataclasses.replace(cfg, async_batch_k=2)) == 2
+    assert resolve_async_batch_k(
+        dataclasses.replace(cfg, async_batch_k=64)) == 3
+
+
 def test_async_kmeans_param_delta_host_scoring():
     """No jittable F1 metric: the program runs with NaN metric history
     and the report scores final params host-side; still bit-identical
@@ -340,9 +412,49 @@ def test_sweep_spec_new_axes_validation():
         SweepSpec(async_alpha=(0.0,))
     with pytest.raises(ValueError, match="async_alpha"):
         SweepSpec(async_alpha=(1.5,))
+    with pytest.raises(ValueError, match="async_batch_k"):
+        SweepSpec(async_batch_k=(-1,))
     spec = SweepSpec(async_alpha=[0.25, 0.75], cost_noise=[0.1])
     assert spec.async_alpha == (0.25, 0.75) and hash(spec)
     assert spec.n_cells == 2
+
+
+def test_sweep_spec_per_batch_k_splits_the_structural_axis():
+    spec = SweepSpec(async_batch_k=(1, 2), seeds=(0, 3), max_rounds=48)
+    subs = spec.per_batch_k()
+    assert [k for k, _ in subs] == [1, 2]
+    assert all(s.async_batch_k == (k,) for k, s in subs)
+    assert sum(s.n_cells for _, s in subs) == spec.n_cells == 4
+    # single-valued (or absent) axis: no split at all
+    assert SweepSpec(seeds=(0,)).per_batch_k()[0][1] is not None
+    assert len(SweepSpec(async_batch_k=(2,)).per_batch_k()) == 1
+
+
+def test_async_sweep_batch_k_axis_is_a_pure_throughput_axis():
+    """async_batch_k is semi-structural: the sweep splits into one
+    compiled sub-program per K, and — K being order-equivalent — the
+    K=1 and K=2 blocks of the grid must be bit-identical to each other
+    and to the independent single runs."""
+    ol, ex, init = _svm_fixture()
+    spec = SweepSpec(async_batch_k=(1, 2), seeds=(0, 3), max_rounds=48)
+    sess = _session(ol, ex, init)
+    rep = sess.sweep(spec)
+    assert rep.n_cells == 4
+    out = rep.out
+    # axis order puts async_batch_k slowest: cells 0,1 are K=1 seeds
+    # (0,3); cells 2,3 the same seeds at K=2
+    for f in ("n_rounds", "metric", "edge", "consumed", "wall_time"):
+        assert np.array_equal(out[f][:2], out[f][2:],
+                              equal_nan=(f == "metric")), f
+    for i, ccfg in enumerate(spec.cell_cfgs(ol)[:2]):
+        ind = _session(ccfg, ex, init).run_async_ingraph(max_events=48)
+        n = int(out["n_rounds"][i])
+        assert n == ind.n_aggregations > 0
+        assert np.array_equal(
+            out["metric"][i][:n].astype(np.float64),
+            np.array([r.metric for r in ind.records]))
+        assert np.array_equal(out["edge"][i][:n],
+                              np.array([r.edge for r in ind.records]))
 
 
 def test_async_sweep_partition_specs_costs_ek_placement():

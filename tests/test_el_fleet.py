@@ -174,7 +174,14 @@ def test_sync_fleet_bit_identical_with_refill(svm):
             _cfg(svm, "sync", 1500.0, 0.5, 1),
             _cfg(svm, "sync", 600.0, 2.0, 2)]
     srv, ids, reports, deltas, _ = _serve(svm, cfgs, 2, 5)
-    assert srv.stats()["compiles"] == 1          # one cohort, one program
+    st = srv.stats()
+    assert st["compiles"] == 1                   # one cohort, one program
+    # wave-batched data plane: admits land as ONE place_many scatter per
+    # admitting wave, finalizes as ONE take_many gather per finalizing
+    # wave — 3 tenants with refill must NOT cost 3 dispatches a side
+    assert 1 <= st["place_dispatches"] <= st["waves"]
+    assert 1 <= st["gather_dispatches"] <= st["waves"]
+    assert st["place_dispatches"] < len(cfgs)    # tenants batched together
     for tid, cfg in zip(ids, cfgs):
         _assert_reports_identical(_ref(svm, cfg), reports[tid])
         assert _records_equal(deltas[tid], reports[tid].records)
@@ -186,7 +193,10 @@ def test_async_fleet_bit_identical_with_refill(kmeans):
             _cfg(kmeans, "async", 900.0, 0.7, 4),
             _cfg(kmeans, "async", 700.0, 1.5, 5)]
     srv, ids, reports, deltas, _ = _serve(kmeans, cfgs, 2, 5)
-    assert srv.stats()["compiles"] == 1          # one padded horizon
+    st = srv.stats()
+    assert st["compiles"] == 1                   # one padded horizon
+    assert 1 <= st["place_dispatches"] <= st["waves"]
+    assert 1 <= st["gather_dispatches"] <= st["waves"]
     for tid, cfg in zip(ids, cfgs):
         _assert_reports_identical(_ref(kmeans, cfg), reports[tid])
         assert _records_equal(deltas[tid], reports[tid].records)

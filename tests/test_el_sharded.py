@@ -58,7 +58,7 @@ def test_el_run_partition_specs_data_plane_vs_control_plane():
     assert set(EL_EDGE_KNOBS) < set(KNOB_NAMES)
     assert set(EL_EDGE_KNOBS) < set(ASYNC_KNOB_NAMES)
     assert set(EL_SCALAR_KNOBS) & set(ASYNC_KNOB_NAMES) == \
-        {"ucb_c", "budget", "cost_noise", "async_alpha"}
+        {"ucb_c", "budget", "cost_noise", "async_alpha", "event_cap"}
     # non-tiling fleet: edge dim replicated
     edge_spec, _ = el_run_partition_specs(
         ("data", "model"), {"data": 2, "model": 2}, 3, KNOB_NAMES)
@@ -192,6 +192,7 @@ _SHARDED_SCRIPT = textwrap.dedent("""
     from repro.models import build_model
 
     mode = sys.argv[1]
+    batch_k = int(sys.argv[2]) if len(sys.argv) > 2 else 0
     train, test = make_wafer_dataset(n=800, seed=0)
     exp = get_config("svm-wafer")
     model = build_model(exp.model)
@@ -203,15 +204,19 @@ _SHARDED_SCRIPT = textwrap.dedent("""
     init = model.init(jax.random.key(0))
     ns = [len(e["y"]) for e in edges]
 
-    def run(mesh):
-        s = (ELSession(ol, metric_name="accuracy", lr=0.05)
+    def run(mesh, cfg=ol):
+        s = (ELSession(cfg, metric_name="accuracy", lr=0.05)
              .with_executor(ex, init_params=init, n_samples=ns))
         if mode == "sync":
             return s.run_sync_ingraph(max_rounds=32, mesh=mesh)
         return s.run_async_ingraph(max_events=64, mesh=mesh)
 
+    # the reference is always the replicated K=1 program; an explicit
+    # batch_k pins the sharded run's wave width (0 = auto-tuned)
+    ol_mesh = (ol if not batch_k
+               else dataclasses.replace(ol, async_batch_k=batch_k))
     r0 = run(None)
-    r1 = run(make_debug_mesh(2, 2))
+    r1 = run(make_debug_mesh(2, 2), ol_mesh)
     assert r0.n_aggregations == r1.n_aggregations > 0
     for field in ("metric", "utility", "interval", "total_consumed",
                   "wall_time"):
@@ -226,12 +231,12 @@ _SHARDED_SCRIPT = textwrap.dedent("""
 """)
 
 
-def _run_sharded_subprocess(mode: str):
+def _run_sharded_subprocess(mode: str, batch_k: int = 0):
     env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"),
                XLA_FLAGS=(os.environ.get("XLA_FLAGS", "")
                           + " --xla_force_host_platform_device_count=4"))
     return subprocess.run(
-        [sys.executable, "-c", _SHARDED_SCRIPT, mode],
+        [sys.executable, "-c", _SHARDED_SCRIPT, mode, str(batch_k)],
         capture_output=True, text=True, env=env, timeout=900)
 
 
@@ -244,7 +249,19 @@ def test_sync_sharded_run_bit_identical_to_unsharded_subprocess():
 
 @pytest.mark.slow
 def test_async_sharded_run_bit_identical_to_unsharded_subprocess():
+    # batch_k=0 auto-tunes on the 2x2 mesh (min(4, n_edges) = 4), so
+    # this also pins sharded K=4 waves == replicated K=1 pops
     r = _run_sharded_subprocess("async")
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "BIT-IDENTICAL async" in r.stdout
+
+
+@pytest.mark.slow
+def test_async_sharded_k2_waves_bit_identical_to_unsharded_k1():
+    """Explicit async_batch_k=2 on the 2x2 debug mesh: partial waves
+    (K strictly between 1 and n_edges) against the replicated
+    single-event reference."""
+    r = _run_sharded_subprocess("async", batch_k=2)
     assert r.returncode == 0, r.stdout + r.stderr
     assert "BIT-IDENTICAL async" in r.stdout
 

@@ -313,6 +313,42 @@ def test_async_telemetry_off_bit_identical_and_replay(svm):
     assert np.all(dev["interarrival"] >= 0.0)
 
 
+def test_async_k_wave_telemetry_replay_bit_identical(svm):
+    """K > 1 waves write K ring rows per while-loop step (the coalesced
+    per-group scatters): the device rings must STILL equal the host
+    K=1-order replay bit for bit, wraparound included."""
+    import jax
+    from repro.el.events import async_knobs, make_async_program
+    cfg = dataclasses.replace(_cfg(svm, "async", budget=500.0),
+                              async_batch_k=3)
+    ex = svm["executor"]
+    core = make_async_program(
+        svm["model"], ex.edge_data, ex.eval_set, cfg, lr=ex.lr,
+        batch=ex.batch, max_events=64, telemetry=8)
+    knobs = async_knobs(cfg)
+    _, out = jax.jit(core)(svm["init_params"],
+                           jax.random.key(cfg.seed + 17), knobs)
+    out = jax.tree.map(np.asarray, out)
+    head = int(out["telemetry"]["head"])
+    assert head == int(out["n_rounds"]) and head > 8   # wraps the ring
+    dev = obs_rings.unroll_ring(out["telemetry"])
+    ref = obs_rings.async_reference_telemetry(
+        out, knobs, n_edges=cfg.n_edges, n_arms=cfg.max_interval)
+    assert set(dev) == set(ref)
+    for k in ref:
+        np.testing.assert_array_equal(dev[k], ref[k], err_msg=k)
+    # the session path agrees too: K=3 telemetry report == K=1 report
+    on1 = _session(svm, dataclasses.replace(cfg, async_batch_k=1)) \
+        .run_async_ingraph(max_events=64, telemetry=8)
+    on3 = _session(svm, cfg).run_async_ingraph(max_events=64, telemetry=8)
+    _assert_reports_equal(on1, on3)
+    r1 = obs_rings.unroll_ring(on1.telemetry["rings"])
+    r3 = obs_rings.unroll_ring(on3.telemetry["rings"])
+    assert set(r1) == set(r3)
+    for k in r1:
+        np.testing.assert_array_equal(r1[k], r3[k], err_msg=k)
+
+
 def test_fleet_telemetry_off_bit_identical(svm):
     runs = [TenantRun(cfg=_cfg(svm, "sync", budget=b, seed=s),
                       executor=svm["executor"], tenant_id=f"t{s}",
