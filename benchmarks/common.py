@@ -41,7 +41,8 @@ def make_el_session(workload: str, policy: str, mode: str,
                     cost_model: str = "fixed", max_interval: int = 10,
                     alpha: float = 100.0, async_alpha: float = 0.5,
                     lr: float | None = None,
-                    batch: int | None = None) -> ELSession:
+                    batch: int | None = None,
+                    scenario=None) -> ELSession:
     """Build a configured ``ELSession`` mirroring the paper's §V setup
     (dataset, config, executor, init params) — shared by the single-run
     and sweep harnesses.
@@ -67,7 +68,7 @@ def make_el_session(workload: str, policy: str, mode: str,
         exp.ol4el, mode=mode, policy=policy, n_edges=n_edges, budget=budget,
         heterogeneity=heterogeneity, utility=utility, seed=seed,
         cost_noise=cost_noise, cost_model=cost_model,
-        max_interval=max_interval)
+        max_interval=max_interval, scenario=scenario)
     edges = partition_edges(train, n_edges, alpha=alpha, seed=seed)
     ex = ClassicExecutor(model, edges, test, batch=batch, lr=lr)
     return ELSession(ol, metric_name=metric, lr=lr,
@@ -108,15 +109,17 @@ def run_el_sweep(workload: str, spec, heterogeneity: float = 6.0,
                  n_edges: int = 3, budget: float = 5000.0, seed: int = 0,
                  n_data: int = 20000, alpha: float = 100.0,
                  lr: float | None = None, batch: int | None = None,
-                 mesh=None):
+                 mesh=None, scenario=None):
     """A whole (ucb_c × budget × heterogeneity × seeds) ablation grid as
     ONE compiled vmapped program (``repro.el.sweep``).  The base session
     is the same §V setup ``run_el`` uses with (ol4el, sync); returns the
-    ``SweepReport``."""
+    ``SweepReport``.  ``scenario=`` (a ``repro.el.scenarios.ScenarioSpec``)
+    compiles the fleet-dynamics path, enabling the ``policy`` /
+    ``churn_rate`` sweep axes."""
     session = make_el_session(
         workload, "ol4el", "sync", heterogeneity, n_edges=n_edges,
         budget=budget, seed=seed, n_data=n_data, alpha=alpha, lr=lr,
-        batch=batch)
+        batch=batch, scenario=scenario)
     return session.sweep(spec, mesh=mesh)
 
 

@@ -65,19 +65,22 @@ SMOKE_PAIRS = (
     ("el_sync_ingraph_telemetry", "el_sync_ingraph"),
     ("el_async_ingraph_telemetry", "el_async_ingraph"),
     ("el_async_ingraph_batched", "el_async_ingraph"),
+    ("el_sync_ingraph_churn", "el_sync_ingraph"),
 )
 
-#: the repro.obs acceptance bound: the in-graph telemetry rings may
-#: cost at most this much per aggregation over the bare program
-#: (a within-run percentage, so host-speed independent)
+#: the instrumentation acceptance bound: an in-graph add-on tier (the
+#: telemetry rings, the scenario engine's churn path) may cost at most
+#: this much per aggregation over the bare program (a within-run
+#: percentage, so host-speed independent)
 TELEMETRY_OVERHEAD_PCT = 10.0
 
 
 def telemetry_findings(rows: Mapping[str, Mapping[str, Any]],
                        *, bench: str = "el") -> List[Finding]:
-    """The telemetry-overhead tolerance row: every ``*_telemetry`` tier
-    that recorded its within-run ``overhead_vs_ingraph_pct`` must sit
-    under :data:`TELEMETRY_OVERHEAD_PCT`."""
+    """The per-round overhead tolerance rows: every tier that recorded a
+    within-run ``overhead_vs_ingraph_pct`` (the ``*_telemetry`` rings,
+    the ``*_churn`` scenario path) must sit under
+    :data:`TELEMETRY_OVERHEAD_PCT`."""
     findings: List[Finding] = []
     for name in sorted(rows):
         pct = rows[name].get("overhead_vs_ingraph_pct")
@@ -86,7 +89,7 @@ def telemetry_findings(rows: Mapping[str, Mapping[str, Any]],
         if pct > TELEMETRY_OVERHEAD_PCT:
             findings.append(Finding(
                 "regression", bench, name, "telemetry_overhead",
-                f"telemetry rings cost {pct:+.2f}%/agg over the bare "
+                f"in-graph add-on costs {pct:+.2f}%/agg over the bare "
                 f"program (bound: +{TELEMETRY_OVERHEAD_PCT:.0f}%)"))
         else:
             findings.append(Finding(

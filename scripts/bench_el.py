@@ -20,6 +20,12 @@ of every execution tier:
                           completions pop, dispatch and merge per
                           while-loop step — order-equivalent to K=1,
                           fewer loop iterations;
+  * ``ingraph_churn``   — (sync only) the scenario-path program
+                          (``repro.el.scenarios``) under a
+                          ``--churn-rate`` dropout schedule: mask-aware
+                          aggregation + the policy switch; against the
+                          bare ``ingraph`` row this bounds the scenario
+                          engine's overhead (acceptance: <10%);
   * ``sharded``         — the program pjit-sharded over a debug mesh
                           built from forced host devices (edge dim over
                           ``data``, model tensors over ``model``), the
@@ -74,9 +80,11 @@ import jax
 import numpy as np
 
 from repro.el import ELSession
-from repro.el.events import (ASYNC_KNOB_NAMES, async_knobs,
+from repro.el.events import (async_knob_names, async_knobs,
                              make_async_program, resolve_async_batch_k)
-from repro.el.ingraph import KNOB_NAMES, make_sync_program, sync_knobs
+from repro.el.ingraph import (make_sync_program, sync_knob_names,
+                              sync_knobs)
+from repro.el.scenarios import ChurnSpec, ScenarioSpec
 from repro.launch.classic import classic_fixture
 from repro.launch.mesh import make_debug_mesh_for
 from repro.obs.prof import profile_jit
@@ -118,9 +126,9 @@ def _profile_row(jfn, example_args, donate):
 
 
 def bench_compiled(model, ex, ol, ns, mode, mesh, donate, args,
-                   telemetry=None, batch_k=None):
+                   telemetry=None, batch_k=None, scenario=None):
     """Time one compiled-program tier and read its memory analysis."""
-    cfg = dataclasses.replace(ol, mode=mode)
+    cfg = dataclasses.replace(ol, mode=mode, scenario=scenario)
     if batch_k is not None:
         cfg = dataclasses.replace(cfg, async_batch_k=int(batch_k))
     if mode == "sync":
@@ -128,12 +136,12 @@ def bench_compiled(model, ex, ol, ns, mode, mesh, donate, args,
             model, ex.edge_data, ex.eval_set, cfg, lr=ex.lr, batch=ex.batch,
             n_samples=np.asarray(ns, np.float64),
             max_rounds=args.max_rounds, mesh=mesh, telemetry=telemetry)
-        knobs, knob_names = sync_knobs(cfg), KNOB_NAMES
+        knobs, knob_names = sync_knobs(cfg), sync_knob_names(cfg)
     else:
         core = make_async_program(
             model, ex.edge_data, ex.eval_set, cfg, lr=ex.lr, batch=ex.batch,
             max_events=args.max_events, mesh=mesh, telemetry=telemetry)
-        knobs, knob_names = async_knobs(cfg), ASYNC_KNOB_NAMES
+        knobs, knob_names = async_knobs(cfg), async_knob_names(cfg)
     params0 = model.init(jax.random.key(0))
     rng = jax.random.key(cfg.seed + 17)
     kw = {}
@@ -205,6 +213,9 @@ def main(argv=None) -> None:
     ap.add_argument("--telemetry-ring", type=int, default=64,
                     help="ring length of the el_*_ingraph_telemetry "
                          "tiers (repro.obs in-graph rings)")
+    ap.add_argument("--churn-rate", type=float, default=0.25,
+                    help="dropout rate of the el_sync_ingraph_churn "
+                         "tier's scenario (repro.el.scenarios)")
     ap.add_argument("--skip-host", action="store_true",
                     help="omit the slow host-loop baselines")
     ap.add_argument("--out", default="BENCH_el.json")
@@ -219,41 +230,57 @@ def main(argv=None) -> None:
     mesh = make_debug_mesh_for(n_dev)
     model, ex, ol, ns = _fixture(args)
 
+    churn_scn = ScenarioSpec(churn=ChurnSpec(rate=args.churn_rate))
+
     rows = {}
-    # (name, mesh, donate, telemetry, batch_k) — batch_k is async-only:
-    # the batched tier pins an explicit K-event wave width on the
-    # replicated program; sharded tiers auto-tune K from the mesh
-    tiers = [("ingraph", None, False, None, None),
-             ("ingraph_donate", None, True, None, None),
-             ("ingraph_telemetry", None, False, args.telemetry_ring, None),
-             ("ingraph_batched", None, False, None, args.async_batch_k),
-             ("sharded", mesh, False, None, None),
-             ("sharded_donate", mesh, True, None, None)]
+    # (name, mesh, donate, telemetry, batch_k, scenario) — batch_k is
+    # async-only: the batched tier pins an explicit K-event wave width
+    # on the replicated program; sharded tiers auto-tune K from the
+    # mesh; the churn tier is sync-only (the scenario-path program with
+    # a dropout schedule, gated <10% per-round over the bare one)
+    tiers = [("ingraph", None, False, None, None, None),
+             ("ingraph_donate", None, True, None, None, None),
+             ("ingraph_telemetry", None, False, args.telemetry_ring, None,
+              None),
+             ("ingraph_batched", None, False, None, args.async_batch_k,
+              None),
+             ("ingraph_churn", None, False, None, None, churn_scn),
+             ("sharded", mesh, False, None, None, None),
+             ("sharded_donate", mesh, True, None, None, None)]
     for mode in ("sync", "async"):
         if not args.skip_host:
             rows[f"el_{mode}_host"] = bench_host(model, ex, ol, ns, mode)
             print(f"el_{mode}_host: "
                   f"{rows[f'el_{mode}_host']['us_per_aggregation']:.0f} "
                   "us/agg", flush=True)
-        for name, m, donate, telem, batch_k in tiers:
+        for name, m, donate, telem, batch_k, scn in tiers:
             if batch_k is not None and mode != "async":
                 continue
+            if scn is not None and mode != "sync":
+                continue
             row = bench_compiled(model, ex, ol, ns, mode, m, donate, args,
-                                 telemetry=telem, batch_k=batch_k)
+                                 telemetry=telem, batch_k=batch_k,
+                                 scenario=scn)
             rows[f"el_{mode}_{name}"] = row
             peak = row.get("peak_live_bytes")
             print(f"el_{mode}_{name}: {row['us_per_aggregation']:.0f} "
                   f"us/agg, peak "
                   f"{peak if peak is None else f'{peak / 1e6:.2f}MB'}",
                   flush=True)
-        # the instrumented program's per-round cost vs the bare one —
-        # the repro.obs acceptance bound is <10%
+        # instrumented/scenario per-round cost vs the bare program —
+        # the acceptance bound for both is <10% (bench_check gates any
+        # row carrying overhead_vs_ingraph_pct)
         base = rows[f"el_{mode}_ingraph"]["us_per_aggregation"]
-        trow = rows[f"el_{mode}_ingraph_telemetry"]
-        trow["overhead_vs_ingraph_pct"] = (
-            (trow["us_per_aggregation"] - base) / max(base, 1e-9) * 100)
-        print(f"el_{mode}_ingraph_telemetry overhead: "
-              f"{trow['overhead_vs_ingraph_pct']:+.1f}%", flush=True)
+        over = [f"el_{mode}_ingraph_telemetry"]
+        if mode == "sync":
+            over.append("el_sync_ingraph_churn")
+        for tier_name in over:
+            trow = rows[tier_name]
+            trow["overhead_vs_ingraph_pct"] = (
+                (trow["us_per_aggregation"] - base) / max(base, 1e-9)
+                * 100)
+            print(f"{tier_name} overhead: "
+                  f"{trow['overhead_vs_ingraph_pct']:+.1f}%", flush=True)
 
     report = {
         "meta": {
@@ -268,6 +295,8 @@ def main(argv=None) -> None:
                 "sharded_auto": resolve_async_batch_k(
                     dataclasses.replace(ol, mode="async"), mesh),
             },
+            "churn": {"rate": float(args.churn_rate),
+                      "period": churn_scn.period},
             "backend": jax.default_backend(), "jax": jax.__version__,
             "note": ("CPU-host correctness-path timings; wall_us is "
                      "min-of-repeats (wall_us_stats carries the spread); "

@@ -82,6 +82,16 @@ def main(argv=None) -> None:
             op = s["labels"].get("op", "?")
             print(f"  collective {op}: x{s['value']:g}")
 
+    scn_names = [n for n in metrics if n.startswith("el_scenario_")]
+    if scn_names:
+        print("\nfleet dynamics (repro.el.scenarios):")
+        for name in ("el_scenario_active_edges",
+                     "el_scenario_dropouts_total",
+                     "el_scenario_rejoins_total"):
+            if name in metrics:
+                v = metrics[name][0]["value"]
+                print(f"  {name.removeprefix('el_scenario_')}: {v:g}")
+
     spans_path = args.path + ".spans.jsonl"
     span_names = set()
     if os.path.exists(spans_path):

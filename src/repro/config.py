@@ -244,6 +244,10 @@ class OL4ELConfig:
     eps: float = 0.1                     # for eps_greedy ablation
     n_edges: int = 4
     seed: int = 0
+    # fleet-dynamics scenario (repro.el.scenarios.ScenarioSpec) — churn /
+    # straggler / drift schedules injected into the compiled programs.
+    # None (default) builds today's programs bit-for-bit.
+    scenario: Optional[Any] = None
 
 
 @dataclass(frozen=True)

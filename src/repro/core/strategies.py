@@ -26,7 +26,12 @@ from typing import Optional
 import numpy as np
 
 POLICIES = ("ol4el", "ucb_bv", "greedy", "freq_only", "eps_greedy",
-            "uniform", "fixed_i", "ac_sync")
+            "uniform", "fixed_i", "ac_sync",
+            # task-allocation competitors (repro.el.scenarios.baselines):
+            # greedy max-interval assignment and delay/energy-balanced
+            # pacing — host rules in repro.el.policies, traced twins in
+            # the scenario engine's in-graph policy switch
+            "task_alloc", "delay_energy")
 
 
 @dataclasses.dataclass

@@ -19,7 +19,11 @@ The public surface of the OL4EL reproduction:
   * :mod:`repro.el.fleet` — multi-tenant EL-as-a-service:
     :class:`FleetServer` buckets :class:`TenantRun` submissions into
     cohorts (one compiled slot-batch program per structural config)
-    and streams per-tenant reports as slot waves complete.
+    and streams per-tenant reports as slot waves complete;
+  * :mod:`repro.el.scenarios` — in-graph fleet dynamics:
+    :class:`ScenarioSpec` churn/straggler/drift schedules injected into
+    the compiled programs as traced knobs, plus the baseline-policy
+    switch the OL4EL-vs-competitors curves run through.
 """
 
 from repro.el import policies
@@ -28,6 +32,7 @@ from repro.el.executor import (EdgeExecutor, InGraphExecutor,
 from repro.el.fleet import (FleetServer, ReportReady, RoundDelta,
                             TenantRun)
 from repro.el.report import ELReport, RoundRecord
+from repro.el.scenarios import ChurnSpec, CostSpec, ScenarioSpec
 from repro.el.session import ELSession
 from repro.el.sweep import SweepReport, SweepSpec
 
@@ -36,4 +41,5 @@ __all__ = [
     "InGraphExecutor", "validate_executor", "policies",
     "SweepSpec", "SweepReport",
     "FleetServer", "TenantRun", "RoundDelta", "ReportReady",
+    "ScenarioSpec", "ChurnSpec", "CostSpec",
 ]

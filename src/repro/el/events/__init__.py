@@ -21,8 +21,8 @@ Front doors: ``ELSession.run_async_ingraph()`` and async
 ``ELSession.sweep(spec)`` grids.
 """
 
-from repro.el.events.knobs import (ASYNC_KNOB_NAMES, async_knobs,
-                                   bucket_event_horizon,
+from repro.el.events.knobs import (ASYNC_KNOB_NAMES, async_knob_names,
+                                   async_knobs, bucket_event_horizon,
                                    default_event_horizon,
                                    padded_event_horizon,
                                    resolve_async_batch_k)
@@ -36,7 +36,8 @@ from repro.el.events.state import (bandit_fleet_init, bandit_place,
                                    bandit_slice)
 
 __all__ = [
-    "ASYNC_KNOB_NAMES", "async_knobs", "bucket_event_horizon",
+    "ASYNC_KNOB_NAMES", "async_knob_names", "async_knobs",
+    "bucket_event_horizon",
     "default_event_horizon", "padded_event_horizon",
     "resolve_async_batch_k", "make_async_cell",
     "make_async_program", "make_async_kernels", "run_async_reference",

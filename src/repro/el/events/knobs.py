@@ -52,7 +52,21 @@ def async_knobs(cfg: OL4ELConfig) -> Dict[str, np.ndarray]:
     # min(static horizon, event_cap) so a bucketed history never runs
     # past the caller's cap
     knobs["event_cap"] = np.int32(default_event_horizon(cfg))
+    if cfg.scenario is not None:
+        from repro.el.scenarios.schedule import scenario_knobs
+        knobs.update(scenario_knobs(cfg))
     return knobs
+
+
+def async_knob_names(cfg: OL4ELConfig):
+    """The traced-input names of this config's compiled async program:
+    ``ASYNC_KNOB_NAMES``, plus the scenario schedule knobs when
+    ``cfg.scenario`` is set (exactly the keys ``async_knobs(cfg)``
+    returns)."""
+    if cfg.scenario is not None:
+        from repro.el.scenarios.schedule import scenario_knob_names
+        return ASYNC_KNOB_NAMES + scenario_knob_names("async")
+    return ASYNC_KNOB_NAMES
 
 
 def default_event_horizon(cfg: OL4ELConfig) -> int:
@@ -111,6 +125,11 @@ def resolve_async_batch_k(cfg: OL4ELConfig, mesh=None) -> int:
     """
     if cfg.async_batch_k > 0:
         return max(1, min(int(cfg.async_batch_k), cfg.n_edges))
+    # the scenario path (churn probes / per-event masks) is defined on
+    # the single-event program only, so auto-K stays at 1; an explicit
+    # K>1 pin with a scenario is rejected by make_async_cell
+    if cfg.scenario is not None:
+        return 1
     n_dev = 1
     if mesh is not None:
         n_dev = int(np.asarray(mesh.devices).size)

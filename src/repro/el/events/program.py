@@ -76,17 +76,18 @@ Params = Any
 
 def _build_parts(model, edge_data, eval_set, cfg: OL4ELConfig, *,
                  lr: float, batch: int, metric_fn: Optional[Callable],
-                 metric_name: str, mesh=None):
+                 metric_name: str, mesh=None, drift: bool = False):
     """The data-plane pieces both async paths share: the masked local
     block (identical minibatch streams to the sync program's) and the
     jittable eval metric.  With ``mesh=`` the per-edge datasets live
     sharded over the mesh's edge axes (the host reference kernels never
-    pass one)."""
+    pass one).  ``drift=`` builds the scenario path's drift-aware block
+    (see ``make_local_block``)."""
     xs, ys, n_per_edge = _pad_edge_data(edge_data)
     if mesh is not None:
         xs, ys = _shard_edge_data(mesh, cfg.n_edges, xs, ys)
     local_block = make_local_block(model, xs, ys, n_per_edge, batch, lr,
-                                   cfg.max_interval)
+                                   cfg.max_interval, drift=drift)
     if metric_fn is None:
         metric_fn = default_metric_fn(model, eval_set, metric_name)
     if cfg.utility == "eval_gain" and metric_fn is None:
@@ -146,11 +147,22 @@ def make_async_cell(model, edge_data, eval_set, cfg: OL4ELConfig, *,
     spec = as_spec(telemetry)
     del n_samples
     check_ingraph_support(cfg, caller="make_async_program")
+    # fleet-dynamics scenario: None keeps every closure below EXACTLY
+    # today's traced code; a ScenarioSpec swaps in the churn-aware
+    # single-event body (dropout probes, uncharged dead edges).
+    scn = cfg.scenario
+    period = scn.period if scn is not None else 0
 
     n_edges, k = cfg.n_edges, cfg.max_interval
     if batch_k is None:
         batch_k = resolve_async_batch_k(cfg, mesh)
     batch_k = max(1, min(int(batch_k), n_edges))
+    if scn is not None and batch_k > 1:
+        raise ValueError(
+            f"async_batch_k={batch_k} with a ScenarioSpec: the scenario "
+            "path (per-event activity masks, dropout probes) is defined "
+            "on the single-event program only — pin async_batch_k=1 or "
+            "leave it 0 (auto resolves to 1 under a scenario)")
     if spec is not None and batch_k > spec.ring_size:
         raise ValueError(
             f"async_batch_k={batch_k} exceeds the telemetry ring size "
@@ -159,7 +171,8 @@ def make_async_cell(model, edge_data, eval_set, cfg: OL4ELConfig, *,
             "the batch width")
     local_block, metric_fn, eval_step = _build_parts(
         model, edge_data, eval_set, cfg, lr=lr, batch=batch,
-        metric_fn=metric_fn, metric_name=metric_name, mesh=mesh)
+        metric_fn=metric_fn, metric_name=metric_name, mesh=mesh,
+        drift=scn is not None)
     constrain_edge_stack, gather_edge_stack = _edge_stack_constraints(
         mesh, n_edges)
 
@@ -200,6 +213,8 @@ def make_async_cell(model, edge_data, eval_set, cfg: OL4ELConfig, *,
             "consumed": jnp.zeros((max_events,), jnp.float32),
             "wall": jnp.zeros((max_events,), jnp.float32),
         }
+        if scn is not None:
+            hist["active_edges"] = jnp.zeros((max_events,), jnp.int32)
         carry = {"gparams": init_params, "edge_params": edge_params,
                  "fleet": fleet,
                  "consumed": jnp.zeros((n_edges,), jnp.float32),
@@ -209,7 +224,8 @@ def make_async_cell(model, edge_data, eval_set, cfg: OL4ELConfig, *,
                  "prev_metric": prev_metric, "wall": jnp.float32(0.0),
                  "hist": hist}
         if spec is not None:
-            carry["telem"] = async_ring_init(spec, k)
+            carry["telem"] = async_ring_init(spec, k,
+                                             scenario=scn is not None)
         return carry
 
     def cond(carry: Dict[str, Any], knobs: Dict[str, jax.Array]):
@@ -483,7 +499,119 @@ def make_async_cell(model, edge_data, eval_set, cfg: OL4ELConfig, *,
                     arm_utility=stk["butil"])
         return new_carry
 
-    body = body_one if batch_k == 1 else body_wave
+    def body_one_scn(carry: Dict[str, Any], knobs: Dict[str, jax.Array]):
+        # the scenario variant of body_one: the popped edge's activity
+        # bit decides between a real completion and a dropout PROBE —
+        # a probe discards the block (no merge, no charge, no bandit
+        # pull, no version bump) and retries the same in-flight block
+        # after a reconnect delay, so churned edges burn wall clock but
+        # never budget, and the merge chain skips them entirely.
+        ucb_c, budget = knobs["ucb_c"], knobs["budget"]
+        costs_ek = knobs["costs_ek"]                            # [E, K]
+        alpha0 = knobs["async_alpha"]
+        scn_active, scn_mult = knobs["scn_active"], knobs["scn_mult"]
+        gparams, edge_params = carry["gparams"], carry["edge_params"]
+        fleet, consumed = carry["fleet"], carry["consumed"]
+        finish = carry["finish"]
+        infl_i, infl_c = carry["infl_i"], carry["infl_c"]
+        fetch_ver, version = carry["fetch_ver"], carry["version"]
+        t, prev_metric = carry["t"], carry["prev_metric"]
+        hist = carry["hist"]
+
+        rng, k_sel, k_data, k_cost = split_event_keys(carry["rng"])
+        e = jnp.argmin(finish)
+        wall = finish[e]
+        slot_i = jnp.mod(t, period)
+        act_row = scn_active[slot_i] > 0                        # [E]
+        is_act = act_row[e]
+        interval, cost = infl_i[e], infl_c[e]
+        p_e = gather_edge_stack(jax.tree.map(lambda a: a[e],
+                                             edge_params))
+        # a dropped edge runs zero masked work (interval 0) and the
+        # drift shift rotates the sampling window
+        shift = knobs["scn_drift"] * t.astype(jnp.float32)
+        p_new = local_block(p_e, e, jnp.where(is_act, interval, 0),
+                            jax.random.fold_in(k_data, e), shift)
+        # charge-at-completion, live edges only: probes are free
+        consumed = consumed.at[e].add(jnp.where(is_act, cost, 0.0))
+        alpha = staleness_alpha(alpha0, version, fetch_ver[e], n_edges)
+        if spec is not None:
+            stale = ((version - fetch_ver[e]).astype(jnp.float32)
+                     / jnp.float32(max(n_edges, 1)))
+        merged = staleness_merge(gparams, p_new, alpha)
+        new_global = jax.tree.map(
+            lambda m, g: jnp.where(is_act, m, g), merged, gparams)
+        version = version + jnp.where(is_act, 1, 0)
+        metric, utility = eval_step(new_global, gparams, prev_metric)
+        # arm -1 makes the bandit update a no-op (its valid guard), so
+        # a probe pulls nothing
+        bstate_e = jax_bandit_update(
+            bandit_slice(fleet, e),
+            jnp.where(is_act, interval - 1, -1), utility, cost)
+        fleet = bandit_place(fleet, e, bstate_e)
+        # only a live edge refetches the global model
+        edge_params = constrain_edge_stack(jax.tree.map(
+            lambda a, g: a.at[e].set(jnp.where(is_act, g, a[e])),
+            edge_params, new_global))
+        fetch_ver = fetch_ver.at[e].set(
+            jnp.where(is_act, version, fetch_ver[e]))
+        resid = budget - consumed[e]
+        # straggler spikes scale the NEXT block's cost surface at
+        # scheduling time (cost = m * (i*comp + comm) by linearity)
+        m = scn_mult[slot_i, e]
+        _, nxt_i, nxt_c, fin = schedule_block(
+            bstate_e, resid, costs_ek[e] * m, ucb_c,
+            knobs["min_edge_cost"][e] * m, knobs["cost_noise"],
+            knobs["comp"][e] * m, knobs["comm"][e] * m, wall,
+            jax.random.fold_in(k_sel, e),
+            jax.random.fold_in(k_cost, e))
+        # a probe keeps its in-flight block and retries after a
+        # reconnect delay of the edge's minimum block cost
+        fin = jnp.where(is_act, fin,
+                        wall + knobs["min_edge_cost"][e])
+        nxt_i = jnp.where(is_act, nxt_i, interval)
+        nxt_c = jnp.where(is_act, nxt_c, cost)
+        finish = finish.at[e].set(fin)
+        infl_i = infl_i.at[e].set(nxt_i)
+        infl_c = infl_c.at[e].set(nxt_c)
+        n_act_fleet = jnp.sum(act_row.astype(jnp.int32))
+        hist = {
+            "metric": hist["metric"].at[t].set(metric),
+            "utility": hist["utility"].at[t].set(
+                jnp.where(is_act, utility, 0.0)),
+            "interval": hist["interval"].at[t].set(
+                jnp.where(is_act, interval, 0)),
+            "edge": hist["edge"].at[t].set(e.astype(jnp.int32)),
+            "cost": hist["cost"].at[t].set(
+                jnp.where(is_act, cost, 0.0)),
+            "consumed": hist["consumed"].at[t].set(jnp.sum(consumed)),
+            "wall": hist["wall"].at[t].set(wall),
+            "active_edges": hist["active_edges"].at[t].set(n_act_fleet),
+        }
+        new_carry = {"gparams": new_global, "edge_params": edge_params,
+                     "fleet": fleet, "consumed": consumed,
+                     "finish": finish, "infl_i": infl_i,
+                     "infl_c": infl_c, "fetch_ver": fetch_ver,
+                     "version": version, "t": t + 1, "rng": rng,
+                     "prev_metric": metric, "wall": wall, "hist": hist}
+        if spec is not None:
+            with jax.named_scope("obs.telemetry"):
+                new_carry["telem"] = async_ring_record(
+                    carry["telem"], spec, t=t, edge=e,
+                    arm=interval - 1,
+                    cost=jnp.where(is_act, cost, 0.0),
+                    budget_resid=resid, alpha=alpha, staleness=stale,
+                    interarrival=wall - carry["wall"],
+                    bstate_e=bstate_e,
+                    scn=(n_act_fleet,
+                         1 - is_act.astype(jnp.int32),
+                         jnp.int32(0)))
+        return new_carry
+
+    if scn is not None:
+        body = body_one_scn
+    else:
+        body = body_one if batch_k == 1 else body_wave
 
     def finalize(carry: Dict[str, Any], knobs: Dict[str, jax.Array]):
         out = dict(carry["hist"])

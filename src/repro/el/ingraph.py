@@ -30,15 +30,24 @@ with the async event-horizon program in ``repro.el.events``:
   ==============  =======================================================
   mode             ``sync`` (this module) and ``async`` (the
                    ``repro.el.events`` event-horizon program)
-  policy           ``ol4el`` only (the compiled 3-step KUBE bandit; one
+  policy           ``ol4el`` (the compiled 3-step KUBE bandit; one
                    shared bandit in sync, one bandit per edge in async —
                    the policy registry records this as
-                   ``Policy.ingraph_modes``)
+                   ``Policy.ingraph_modes``); with a ``ScenarioSpec``
+                   the sync program routes selection through a traced
+                   policy switch that adds the task-allocation
+                   baselines (``repro.el.scenarios.baselines``)
   cost_model       ``fixed`` and ``variable`` (the noise scale is the
                    traced ``cost_noise`` knob: i.i.d. multipliers drawn
                    via ``jax.random``, clipped at the host path's 0.1
                    floor; ``cost_noise=0`` multiplies by exactly 1.0, so
-                   the fixed program is the noise-0 program bit-for-bit)
+                   the fixed program is the noise-0 program bit-for-bit);
+                   heavy-tailed / trace-replayed models are
+                   ``ScenarioSpec`` cost kinds, layered on top
+  scenario         ``None`` — today's programs bit-for-bit — or a
+                   ``repro.el.scenarios.ScenarioSpec`` (churn activity
+                   masks, straggler cost schedules, data drift as traced
+                   knobs; async requires K=1 event waves)
   utility          ``eval_gain`` (needs a jittable metric) and
                    ``param_delta``
   executor         ``InGraphExecutor`` shape — raw per-edge arrays + a
@@ -84,8 +93,35 @@ INGRAPH_EXECUTOR_ATTRS = ("model", "edge_data", "eval_set", "batch", "lr")
 
 def _combo(cfg: OL4ELConfig, executor: Any) -> str:
     ex_name = type(executor).__name__ if executor is not None else "<unset>"
+    scn = "None" if cfg.scenario is None else type(cfg.scenario).__name__
     return (f"(policy={cfg.policy!r}, cost_model={cfg.cost_model!r}, "
-            f"executor={ex_name})")
+            f"scenario={scn}, executor={ex_name})")
+
+
+def support_matrix() -> str:
+    """The scenario/cost-model support matrix, rendered for error
+    messages — so an unsupported combination is rejected at the front
+    door with the full menu, instead of failing late inside tracing."""
+    from repro.el.scenarios.baselines import INGRAPH_POLICY_ORDER
+    return (
+        "supported in-graph matrix:\n"
+        "  mode        'sync' (repro.el.ingraph) | 'async' "
+        "(repro.el.events)\n"
+        "  policy      scenario=None: 'ol4el' only; with a ScenarioSpec "
+        f"the sync policy switch adds {INGRAPH_POLICY_ORDER[1:]} (other "
+        "registry policies run host-side only; async is always the "
+        "per-edge 'ol4el' bandit)\n"
+        f"  cost_model  cfg.cost_model in {_INGRAPH_COST_MODELS}; "
+        "heavy-tailed / replayed models ('pareto' | 'lognormal' | "
+        "'trace:<path>') are ScenarioSpec COST KINDS — set "
+        "cfg.scenario=ScenarioSpec(cost=CostSpec(kind=...)) (the "
+        "--cost-model launch flag builds this for you)\n"
+        "  scenario    None (today's programs bit-for-bit) | ScenarioSpec "
+        "(churn/straggler/drift schedules; async requires K=1 event "
+        "waves)\n"
+        f"  utility     {_INGRAPH_UTILITIES}\n"
+        "  executor    InGraphExecutor shape (raw per-edge arrays + a "
+        "jittable model.local_step, e.g. ClassicExecutor)")
 
 
 def check_ingraph_support(cfg: OL4ELConfig, executor: Any = None, *,
@@ -94,33 +130,66 @@ def check_ingraph_support(cfg: OL4ELConfig, executor: Any = None, *,
     """Validate a config/executor combination against the supported matrix.
 
     Raises ``ValueError`` naming the unsupported (policy, cost_model,
-    executor) combination — see the module docstring for the matrix —
-    or ``TypeError`` when the executor is not in-graph capable.  The
-    per-policy mode support lives in the policy registry
+    scenario, executor) combination — every message carries the full
+    :func:`support_matrix` so the caller sees the menu, not just the
+    rejection — or ``TypeError`` when the executor is not in-graph
+    capable.  The per-policy mode support lives in the policy registry
     (``Policy.ingraph_modes``): ``ol4el`` compiles in both modes — one
-    shared bandit in sync, per-edge bandits in async.
+    shared bandit in sync, per-edge bandits in async — and the
+    task-allocation baselines compile through the sync scenario policy
+    switch (``repro.el.scenarios.baselines``).
     """
     from repro.el import policies as el_policies
+    from repro.el.scenarios.spec import ScenarioSpec
     if cfg.mode not in ("sync", "async"):
         raise ValueError(
             f"{caller} does not support mode={cfg.mode!r}; in-graph modes "
-            "are 'sync' (repro.el.ingraph) and 'async' (repro.el.events)")
+            "are 'sync' (repro.el.ingraph) and 'async' (repro.el.events)\n"
+            + support_matrix())
+    scn = cfg.scenario
+    if scn is not None and not isinstance(scn, ScenarioSpec):
+        raise TypeError(
+            f"{caller}: cfg.scenario must be a "
+            "repro.el.scenarios.ScenarioSpec (or None), got "
+            f"{type(scn).__name__}\n" + support_matrix())
     if cfg.mode not in el_policies.ingraph_modes(cfg.policy):
         raise ValueError(
             f"{caller} does not support {_combo(cfg, executor)} in "
-            f"mode={cfg.mode!r}: the compiled bandits implement the "
-            "'ol4el' selection rule only (shared bandit in sync, one "
-            "bandit per edge in async); run other policies through the "
-            "host paths ELSession.run_sync()/run_async()")
+            f"mode={cfg.mode!r}: the compiled programs implement the "
+            "'ol4el' selection rule (shared bandit in sync, one bandit "
+            "per edge in async) plus the sync scenario policy switch; "
+            "run other policies through the host paths "
+            "ELSession.run_sync()/run_async()\n" + support_matrix())
+    if cfg.policy != "ol4el":
+        if scn is None:
+            raise ValueError(
+                f"{caller} does not support {_combo(cfg, executor)}: "
+                f"policy {cfg.policy!r} compiles only through the "
+                "scenario policy switch — set cfg.scenario "
+                "(ScenarioSpec() is the identity scenario)\n"
+                + support_matrix())
+        if cfg.mode != "sync":
+            raise ValueError(
+                f"{caller} does not support {_combo(cfg, executor)} in "
+                f"mode={cfg.mode!r}: the policy switch is sync-only (the "
+                "async program keeps the paper's per-edge 'ol4el' "
+                "bandit)\n" + support_matrix())
     if cfg.cost_model not in _INGRAPH_COST_MODELS:
+        hint = ""
+        if cfg.cost_model in ("pareto", "lognormal") or str(
+                cfg.cost_model).startswith("trace"):
+            hint = (f" — {cfg.cost_model!r} is a ScenarioSpec cost KIND, "
+                    "not a cfg.cost_model: set cfg.scenario="
+                    "ScenarioSpec(cost=CostSpec(kind=...))")
         raise ValueError(
             f"{caller} does not support {_combo(cfg, executor)}: "
-            f"cost_model must be one of {_INGRAPH_COST_MODELS}")
+            f"cost_model must be one of {_INGRAPH_COST_MODELS}{hint}\n"
+            + support_matrix())
     if cfg.utility not in _INGRAPH_UTILITIES:
         raise ValueError(
             f"{caller} does not support utility={cfg.utility!r} with "
             f"{_combo(cfg, executor)}: in-graph utilities are "
-            f"{_INGRAPH_UTILITIES}")
+            f"{_INGRAPH_UTILITIES}\n" + support_matrix())
     if executor is not None:
         missing = [a for a in INGRAPH_EXECUTOR_ATTRS
                    if not hasattr(executor, a)]
@@ -170,7 +239,21 @@ def sync_knobs(cfg: OL4ELConfig) -> Dict[str, np.ndarray]:
     worst = int(np.argmax(knobs["comp"]))
     knobs["costs_k"] = (intervals_f * knobs["comp"][worst]
                         + knobs["comm"][worst])                     # [K]
+    if cfg.scenario is not None:
+        from repro.el.scenarios.schedule import scenario_knobs
+        knobs.update(scenario_knobs(cfg))
     return knobs
+
+
+def sync_knob_names(cfg: OL4ELConfig) -> Tuple[str, ...]:
+    """The traced-input names of this config's compiled sync program:
+    ``KNOB_NAMES``, plus the scenario schedule knobs and the policy
+    selector when ``cfg.scenario`` is set (exactly the keys
+    ``sync_knobs(cfg)`` returns)."""
+    if cfg.scenario is not None:
+        from repro.el.scenarios.schedule import scenario_knob_names
+        return KNOB_NAMES + scenario_knob_names("sync")
+    return KNOB_NAMES
 
 
 def _pad_edge_data(edge_data: List[Dict[str, np.ndarray]]
@@ -214,19 +297,32 @@ def _tree_l2(a: Params, b: Params) -> jax.Array:
 
 def make_local_block(model, xs: jax.Array, ys: jax.Array,
                      n_per_edge: jax.Array, batch: int, lr: float,
-                     k: int) -> Callable:
+                     k: int, *, drift: bool = False) -> Callable:
     """``local_block(params, edge, interval, key)`` — ``interval`` masked
     local iterations on one edge's shard (a fixed-length ``lax.scan`` of
     ``k`` steps, steps past ``interval`` masked out).  Shared by the sync
     round body, the async event body (``repro.el.events``) and its host
     reference loop, so all three sample identical minibatch streams from
-    identical keys."""
+    identical keys.
+
+    ``drift=True`` (the scenario path) adds a trailing ``shift`` argument
+    — the traced drift phase ``scn_drift * t`` — and rotates every
+    sampled index by ``floor(shift * n_e) mod n_e``, so the effective
+    local distribution walks over the edge's shard round by round
+    (non-stationary data drift).  ``shift=0`` rotates by zero, and with
+    ``drift=False`` the rotation is statically absent — the classic
+    block, unchanged.
+    """
 
     def local_block(params: Params, edge: jax.Array, interval: jax.Array,
-                    key: jax.Array) -> Params:
+                    key: jax.Array, shift: jax.Array = None) -> Params:
         def body(p, step):
             u = jax.random.uniform(jax.random.fold_in(key, step), (batch,))
             idx = (u * n_per_edge[edge].astype(jnp.float32)).astype(jnp.int32)
+            if drift:
+                off = (shift * n_per_edge[edge].astype(jnp.float32)
+                       ).astype(jnp.int32)
+                idx = jnp.mod(idx + off, n_per_edge[edge])
             b = {"x": xs[edge][idx], "y": ys[edge][idx]}
             p2, _ = model.local_step(p, b, lr)
             take = step < interval
@@ -335,6 +431,11 @@ def make_sync_cell(model, edge_data, eval_set, cfg: OL4ELConfig, *,
                                  sync_ring_init, sync_ring_record)
     spec = as_spec(telemetry)
     check_ingraph_support(cfg, caller="make_sync_program")
+    # fleet-dynamics scenario: None keeps every closure below EXACTLY
+    # today's traced code (the scenario branch is statically absent);
+    # a ScenarioSpec swaps in the mask-aware cond/body variants.
+    scn = cfg.scenario
+    period = scn.period if scn is not None else 0
 
     n_edges, k = cfg.n_edges, cfg.max_interval
 
@@ -354,7 +455,8 @@ def make_sync_cell(model, edge_data, eval_set, cfg: OL4ELConfig, *,
             "utility='eval_gain' needs a jittable metric; pass metric_fn= "
             "or use utility='param_delta'")
 
-    local_block = make_local_block(model, xs, ys, n_per_edge, batch, lr, k)
+    local_block = make_local_block(model, xs, ys, n_per_edge, batch, lr, k,
+                                   drift=scn is not None)
 
     def weighted_mean(trees: Params) -> Params:
         return jax.tree.map(
@@ -377,12 +479,15 @@ def make_sync_cell(model, edge_data, eval_set, cfg: OL4ELConfig, *,
             "consumed": jnp.zeros((max_rounds,), jnp.float32),
             "wall": jnp.zeros((max_rounds,), jnp.float32),
         }
+        if scn is not None:
+            hist["active_edges"] = jnp.zeros((max_rounds,), jnp.int32)
         carry = {"params": init_params, "bstate": bstate,
                  "consumed": consumed, "t": jnp.int32(0), "rng": rng,
                  "prev_metric": prev_metric, "wall": jnp.float32(0.0),
                  "hist": hist}
         if spec is not None:
-            carry["telem"] = sync_ring_init(spec, k)
+            carry["telem"] = sync_ring_init(spec, k,
+                                            scenario=scn is not None)
         return carry
 
     def cond(carry: Dict[str, Any], knobs: Dict[str, jax.Array]):
@@ -475,6 +580,110 @@ def make_sync_cell(model, edge_data, eval_set, cfg: OL4ELConfig, *,
                     bstate=bstate)
         return new_carry
 
+    def cond_scn(carry: Dict[str, Any], knobs: Dict[str, jax.Array]):
+        # feasibility paces on the tightest ACTIVE edge this round —
+        # dropped edges neither spend nor constrain the fleet
+        resid = knobs["budget"] - carry["consumed"]                  # [E]
+        act = knobs["scn_active"][jnp.mod(carry["t"], period)] > 0
+        affordable = (jnp.min(jnp.where(act, resid, jnp.inf))
+                      >= jnp.min(knobs["costs_k"]) - 1e-12)
+        exhausted = jnp.any(act & (resid < knobs["min_edge_cost"]))
+        return (carry["t"] < max_rounds) & affordable & ~exhausted
+
+    def body_scn(carry: Dict[str, Any], knobs: Dict[str, jax.Array]):
+        from repro.el.scenarios.baselines import select_arm_switch
+        ucb_c = knobs["ucb_c"]
+        budget = knobs["budget"]
+        comp, comm = knobs["comp"], knobs["comm"]
+        costs_k = knobs["costs_k"]
+        cost_noise = knobs["cost_noise"]
+        scn_active, scn_mult = knobs["scn_active"], knobs["scn_mult"]
+        params, bstate = carry["params"], carry["bstate"]
+        consumed, t = carry["consumed"], carry["t"]
+        prev_metric, wall = carry["prev_metric"], carry["wall"]
+        hist = carry["hist"]
+
+        slot_i = jnp.mod(t, period)
+        act = scn_active[slot_i] > 0                                 # [E]
+
+        rng, k_sel, k_data = jax.random.split(carry["rng"], 3)
+        resid = jnp.min(jnp.where(act, budget - consumed, jnp.inf))
+        # traced policy switch: OL4EL bandit vs the task-allocation
+        # baselines, selected by the policy_id knob (sweepable axis)
+        arm = select_arm_switch(knobs["policy_id"], bstate, resid,
+                                costs_k, ucb_c, k_sel)
+        interval = arm + 1
+
+        edge_ids = jnp.arange(n_edges)
+        keys = jax.vmap(lambda e: jax.random.fold_in(k_data, e))(edge_ids)
+        bcast = jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (n_edges,) + x.shape), params)
+        bcast = constrain_edge_stack(bcast)
+        # a dropped edge runs ZERO masked work: interval 0 masks every
+        # scan step; the drift shift rotates its sampling window
+        edge_iv = jnp.where(act, interval, 0)
+        shift = knobs["scn_drift"] * t.astype(jnp.float32)
+        edge_params = jax.vmap(local_block, in_axes=(0, 0, 0, 0, None))(
+            bcast, edge_ids, edge_iv, keys, shift)
+        edge_params = gather_edge_stack(edge_params)
+        # mask-aware aggregation: dead edges carry zero weight and the
+        # live weights renormalize (the merge chain skips them)
+        w_act = w_agg * act.astype(jnp.float32)
+        w_act = w_act / jnp.maximum(jnp.sum(w_act), 1e-12)
+        new_params = jax.tree.map(
+            lambda leaf: jnp.einsum(
+                "e...,e->...", leaf.astype(jnp.float32), w_act
+            ).astype(leaf.dtype), edge_params)
+
+        round_costs = interval.astype(jnp.float32) * comp + comm  # [E]
+        k_cost = jax.random.fold_in(k_data, n_edges)
+        eps = jax.random.normal(k_cost, (n_edges,))
+        mult = jnp.maximum(0.1, 1.0 + cost_noise * eps)
+        # scenario straggler spikes compose with the i.i.d. noise model
+        round_costs = round_costs * mult * scn_mult[slot_i]
+        # the slot paces on the slowest ACTIVE edge, and only active
+        # edges are charged — a dropped edge's budget is untouched
+        slot = jnp.max(jnp.where(act, round_costs, 0.0))
+        consumed = consumed + jnp.where(act, slot, 0.0)
+
+        if metric_fn is not None:
+            metric = metric_fn(new_params)
+        else:
+            metric = jnp.float32(jnp.nan)
+        if cfg.utility == "eval_gain":
+            utility = metric - prev_metric
+        else:                              # param_delta (§III.A)
+            utility = 1.0 / (1.0 + _tree_l2(params, new_params))
+
+        bstate = jax_bandit_update(bstate, arm, utility, slot)
+        wall = wall + slot
+        n_active = jnp.sum(act.astype(jnp.int32))
+        hist = {
+            "metric": hist["metric"].at[t].set(metric),
+            "utility": hist["utility"].at[t].set(utility),
+            "interval": hist["interval"].at[t].set(interval),
+            "consumed": hist["consumed"].at[t].set(jnp.sum(consumed)),
+            "wall": hist["wall"].at[t].set(wall),
+            "active_edges": hist["active_edges"].at[t].set(n_active),
+        }
+        new_carry = {"params": new_params, "bstate": bstate,
+                     "consumed": consumed, "t": t + 1, "rng": rng,
+                     "prev_metric": metric, "wall": wall, "hist": hist}
+        if spec is not None:
+            # dropout/rejoin deltas vs the previous round's mask (round
+            # 0 measures against the nominal full fleet)
+            prev = jnp.where(t > 0,
+                             scn_active[jnp.mod(t - 1, period)],
+                             jnp.ones((n_edges,), jnp.float32)) > 0
+            dropouts = jnp.sum((prev & ~act).astype(jnp.int32))
+            rejoins = jnp.sum((~prev & act).astype(jnp.int32))
+            with jax.named_scope("obs.telemetry"):
+                new_carry["telem"] = sync_ring_record(
+                    carry["telem"], spec, t=t, arm=arm, round_cost=slot,
+                    budget_resid=jnp.min(budget - consumed),
+                    bstate=bstate, scn=(n_active, dropouts, rejoins))
+        return new_carry
+
     def finalize(carry: Dict[str, Any], knobs: Dict[str, jax.Array]):
         out = dict(carry["hist"])
         out["n_rounds"] = carry["t"]
@@ -486,6 +695,8 @@ def make_sync_cell(model, edge_data, eval_set, cfg: OL4ELConfig, *,
                                                   carry["t"], spec)
         return carry["params"], out
 
+    if scn is not None:
+        cond, body = cond_scn, body_scn
     return ELCell(init=init, cond=cond, body=body, finalize=finalize,
                   horizon=max_rounds)
 

@@ -222,6 +222,53 @@ class FixedIPolicy(Policy):
 
 
 @register
+class TaskAllocPolicy(Policy):
+    """Adaptive task-allocation baseline modeled on arXiv 1811.03748
+    ("Adaptive task allocation for mobile edge learning"): allocate the
+    largest locally-feasible workload every round — the max number of
+    local updates per global sync the residual budget still covers —
+    adapting to the budget rather than learning arm utilities.
+
+    Compiles through the sync scenario policy switch
+    (``repro.el.scenarios.baselines``), so it needs a ``ScenarioSpec``
+    on the in-graph path; the host loops run it anywhere.
+    """
+
+    name = "task_alloc"
+    init_phase = False
+    ingraph_modes = ("sync",)          # via the scenario policy switch
+
+    def _select(self, state, residual_budget, costs, feasible, rng):
+        arms = np.arange(len(costs))
+        return int(np.max(np.where(feasible, arms, -1)))
+
+
+@register
+class DelayEnergyPolicy(Policy):
+    """Budget-pacing baseline modeled on arXiv 2012.00143 (delay/energy-
+    constrained task allocation for asynchronous edge learning): pick the
+    arm whose cost best matches a geometric pace
+    ``sqrt(residual * min_cost)`` — between spending the whole residual
+    now and the cheapest sustainable rate — so consumption is smoothed
+    over the run instead of front-loaded.
+
+    Compiles through the sync scenario policy switch
+    (``repro.el.scenarios.baselines``), so it needs a ``ScenarioSpec``
+    on the in-graph path; the host loops run it anywhere.
+    """
+
+    name = "delay_energy"
+    init_phase = False
+    ingraph_modes = ("sync",)          # via the scenario policy switch
+
+    def _select(self, state, residual_budget, costs, feasible, rng):
+        min_c = max(float(np.min(costs)), 1e-9)
+        pace = np.sqrt(max(residual_budget, min_c) * min_c)
+        score = np.where(feasible, np.abs(costs - pace), np.inf)
+        return int(np.argmin(score))
+
+
+@register
 class ACSyncPolicy(Policy):
     """AC-sync baseline [12]: adaptive tau from online (beta, delta, rho)
     estimates.  Stateful — the runtime must call

@@ -1,0 +1,38 @@
+"""repro.el.scenarios — in-graph fleet dynamics for the compiled EL stack.
+
+Churn (join/leave/dropout/reconnect activity masks), heavy-tailed and
+trace-replayed per-edge cost models (straggler spikes), non-stationary
+data drift, and real task-allocation baseline policies — all injected
+*inside* the compiled sync/async programs as traced schedule knobs, so
+every scenario axis is sweepable and "OL4EL vs baselines under churn" is
+one vmapped program.  ``scenario=None`` keeps every program bit-identical
+to the scenario-less build.
+
+Layout:
+
+- ``spec``      — frozen+hashable ``ScenarioSpec``/``ChurnSpec``/``CostSpec``
+- ``schedule``  — host-side knob materialization (``scenario_knobs``)
+- ``baselines`` — the in-graph policy switch + PAPERS.md baselines
+- ``reference`` — host-side replay oracles for churn schedules
+- ``cli``       — shared ``--churn/--cost-model/--drift`` argparse glue
+"""
+
+from repro.el.scenarios.spec import (ChurnSpec, CostSpec, ScenarioSpec,
+                                     as_scenario)
+from repro.el.scenarios.schedule import (SCENARIO_KNOB_NAMES,
+                                         activity_schedule, cost_schedule,
+                                         scenario_knob_names,
+                                         scenario_knobs)
+from repro.el.scenarios.baselines import (INGRAPH_POLICY_ORDER,
+                                          ingraph_policy_id,
+                                          select_arm_switch)
+from repro.el.scenarios.reference import (replay_sync_scenario,
+                                          verify_sync_replay)
+
+__all__ = [
+    "ChurnSpec", "CostSpec", "ScenarioSpec", "as_scenario",
+    "SCENARIO_KNOB_NAMES", "activity_schedule", "cost_schedule",
+    "scenario_knob_names", "scenario_knobs",
+    "INGRAPH_POLICY_ORDER", "ingraph_policy_id", "select_arm_switch",
+    "replay_sync_scenario", "verify_sync_replay",
+]

@@ -376,7 +376,8 @@ class ELSession:
 
     def _profile_program(self, key: tuple, program: Any,
                          example_args: tuple, *, mode: str, mesh,
-                         donate: bool, profile: bool, contract) -> Any:
+                         donate: bool, profile: bool, contract,
+                         scenario: bool = False) -> Any:
         """The dispatch-time half of the performance observatory
         (``repro.obs.prof``): lazily extract a ``ProgramProfile`` for
         the cached program (once per cache entry — the AOT compile
@@ -409,6 +410,7 @@ class ELSession:
             if c is True:
                 c = obs_prof.default_contract(
                     mesh=mesh, donated=donate, mode=mode,
+                    scenario=scenario,
                     param_bytes=obs_prof.param_tree_bytes(
                         example_args[0]))
             c.enforce(prof)
@@ -421,11 +423,19 @@ class ELSession:
         the compiled programs as traced inputs (``sync_knobs`` /
         ``async_knobs`` / the rng key), so cache keys built from this
         reuse one program across any knob point.  ``mode`` stays — it
-        selects the sync round vs the async event-horizon program."""
+        selects the sync round vs the async event-horizon program.  A
+        scenario keeps only ``ScenarioSpec.structural()`` (presence +
+        period — the schedule arrays' traced shape); churn rates, cost
+        tails and the competing policy are knob values."""
         return dataclasses.replace(cfg, ucb_c=0.0, budget=0.0,
                                    heterogeneity=1.0, seed=0,
                                    cost_noise=0.0, cost_model="fixed",
-                                   async_alpha=0.5)
+                                   async_alpha=0.5,
+                                   policy=(cfg.policy
+                                           if cfg.scenario is None
+                                           else "ol4el"),
+                                   scenario=(None if cfg.scenario is None
+                                             else cfg.scenario.structural()))
 
     def _ingraph_cfg(self, caller: str,
                      mode: Optional[str] = None) -> OL4ELConfig:
@@ -553,7 +563,7 @@ class ELSession:
         process-wide; both default off (profiling costs one extra AOT
         compile per program).
         """
-        from repro.el.ingraph import (KNOB_NAMES, make_sync_program,
+        from repro.el.ingraph import (make_sync_program, sync_knob_names,
                                       sync_knobs)
         from repro.obs import rings as obs_rings, trace as obs_trace
         ex = self._require_executor()
@@ -574,7 +584,7 @@ class ELSession:
                     lr=ex.lr, batch=ex.batch, n_samples=self._n_samples,
                     metric_fn=metric_fn, metric_name=self.metric_name,
                     max_rounds=max_rounds, mesh=mesh, telemetry=spec),
-                    KNOB_NAMES, mesh, donate, params)
+                    sync_knob_names(cfg), mesh, donate, params)
                 self._cache_program(key, program)
         self._fastpath, self._fastpath_key = program, key
         self._profile_program(
@@ -582,7 +592,7 @@ class ELSession:
             (jax.eval_shape(lambda p: p, params),
              jax.random.key(cfg.seed + 17), sync_knobs(cfg)),
             mode="sync", mesh=mesh, donate=donate, profile=profile,
-            contract=contract)
+            contract=contract, scenario=cfg.scenario is not None)
         with obs_trace.span("session.dispatch", mode="sync") as sp:
             params, out = jax.block_until_ready(
                 program(params, jax.random.key(cfg.seed + 17),
@@ -640,7 +650,7 @@ class ELSession:
         ``run_sync_ingraph`` (the async default contract uses the same
         gather-before-reduce census).
         """
-        from repro.el.events import (ASYNC_KNOB_NAMES, async_knobs,
+        from repro.el.events import (async_knob_names, async_knobs,
                                      bucket_event_horizon,
                                      make_async_program,
                                      padded_event_horizon)
@@ -674,7 +684,7 @@ class ELSession:
                     lr=ex.lr, batch=ex.batch, metric_fn=metric_fn,
                     metric_name=self.metric_name, max_events=horizon,
                     mesh=mesh, telemetry=spec),
-                    ASYNC_KNOB_NAMES, mesh, donate, params)
+                    async_knob_names(cfg), mesh, donate, params)
                 self._cache_program(key, program)
         self._async_fastpath, self._async_key = program, key
         knobs = async_knobs(cfg)
@@ -685,7 +695,7 @@ class ELSession:
             (jax.eval_shape(lambda p: p, params),
              jax.random.key(cfg.seed + 17), knobs),
             mode="async", mesh=mesh, donate=donate, profile=profile,
-            contract=contract)
+            contract=contract, scenario=cfg.scenario is not None)
         with obs_trace.span("session.dispatch", mode="async") as sp:
             params, out = jax.block_until_ready(
                 program(params, jax.random.key(cfg.seed + 17), knobs))

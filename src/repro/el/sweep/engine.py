@@ -38,14 +38,21 @@ from repro.el.sweep.spec import SweepSpec
 # (repro.sharding.el_run_partition_specs) — one source of truth for which
 # control-plane inputs carry a trailing per-edge dim
 from repro.sharding import (EL_EDGE_KNOBS as _EDGE_KNOBS,
-                            EL_SCALAR_KNOBS as _SCALAR_KNOBS)
+                            EL_SCALAR_KNOBS as _SCALAR_KNOBS,
+                            EL_SCHEDULE_KNOBS as _SCHEDULE_KNOBS)
 
 Params = Any
 
 
-def knob_names(mode: str) -> Tuple[str, ...]:
-    """The traced knob set of the mode's compiled program."""
-    return ASYNC_KNOB_NAMES if mode == "async" else KNOB_NAMES
+def knob_names(mode: str, scenario: bool = False) -> Tuple[str, ...]:
+    """The traced knob set of the mode's compiled program; ``scenario``
+    appends the scenario-engine schedule knobs (``scn_active`` /
+    ``scn_mult`` / ``scn_drift``, plus ``policy_id`` on sync)."""
+    names = ASYNC_KNOB_NAMES if mode == "async" else KNOB_NAMES
+    if scenario:
+        from repro.el.scenarios.schedule import scenario_knob_names
+        names = names + scenario_knob_names(mode)
+    return names
 
 
 def stack_knobs(cell_cfgs: Sequence[OL4ELConfig]) -> Dict[str, np.ndarray]:
@@ -54,7 +61,8 @@ def stack_knobs(cell_cfgs: Sequence[OL4ELConfig]) -> Dict[str, np.ndarray]:
     knobs_fn = async_knobs if cell_cfgs[0].mode == "async" else sync_knobs
     per_cell = [knobs_fn(c) for c in cell_cfgs]
     return {k: np.stack([knobs[k] for knobs in per_cell])
-            for k in knob_names(cell_cfgs[0].mode)}
+            for k in knob_names(cell_cfgs[0].mode,
+                                cell_cfgs[0].scenario is not None)}
 
 
 def cell_keys(cell_cfgs: Sequence[OL4ELConfig]) -> jax.Array:
@@ -80,7 +88,8 @@ def _axis_sizes(mesh) -> Dict[str, int]:
 def sweep_partition_specs(axis_names: Sequence[str],
                           axis_sizes: Dict[str, int],
                           n_cells: int, n_edges: int,
-                          mode: str = "sync"
+                          mode: str = "sync",
+                          scenario: bool = False
                           ) -> Tuple[P, Dict[str, P]]:
     """PartitionSpecs for (keys, knobs): sweep dim over the edge axes,
     per-edge knob dim over ``model`` when divisible.  Pure (no devices) so
@@ -110,18 +119,24 @@ def sweep_partition_specs(axis_names: Sequence[str],
             return P(sweep_axes)
         if name == "costs_ek":                        # [C, E, K] (async)
             return P(sweep_axes, edge_ax, None)
+        if name in _SCHEDULE_KNOBS:                   # [C, S, E]
+            # the period dim is gathered one row per round — keep it
+            # whole; the trailing edge dim is small and rides along
+            return P(sweep_axes, None, None)
         return P(sweep_axes, None)                    # costs_k [C, K]
 
-    knob_specs = {name: spec_for(name) for name in knob_names(mode)}
+    knob_specs = {name: spec_for(name)
+                  for name in knob_names(mode, scenario)}
     return key_spec, knob_specs
 
 
 def sweep_input_shardings(mesh, n_cells: int, n_edges: int,
-                          mode: str = "sync"):
+                          mode: str = "sync", scenario: bool = False):
     """NamedShardings for the vmapped program's (init_params, keys,
     knobs) arguments: params replicated, sweep dim over the edge axes."""
     key_spec, knob_specs = sweep_partition_specs(
-        mesh.axis_names, _axis_sizes(mesh), n_cells, n_edges, mode)
+        mesh.axis_names, _axis_sizes(mesh), n_cells, n_edges, mode,
+        scenario)
     return (NamedSharding(mesh, P()),
             NamedSharding(mesh, key_spec),
             {k: NamedSharding(mesh, s) for k, s in knob_specs.items()})
@@ -152,6 +167,13 @@ def make_sweep_program(model, edge_data, eval_set, cfg: OL4ELConfig,
     cfgs = spec.cell_cfgs(cfg)
     # structural fields (n_edges, utility, mode, ...) are identical
     # across cells by SweepSpec construction — any cell builds the program
+    if len({c.policy for c in cfgs}) > 1:
+        # a policy axis is value-only (the lax.switch traces every
+        # branch), but each named policy must itself be a supported
+        # in-graph combo — surface a per-cell error, not a trace failure
+        from repro.el.ingraph import check_ingraph_support
+        for c in cfgs:
+            check_ingraph_support(c)
     if cfg.mode == "async" and len({c.async_batch_k for c in cfgs}) > 1:
         raise ValueError(
             "a multi-valued async_batch_k grid needs one compiled "
@@ -170,7 +192,8 @@ def make_sweep_program(model, edge_data, eval_set, cfg: OL4ELConfig,
     if mesh is None:
         return jax.jit(vmapped)
     return jax.jit(vmapped, in_shardings=sweep_input_shardings(
-        mesh, spec.n_cells, cfg.n_edges, cfg.mode))
+        mesh, spec.n_cells, cfg.n_edges, cfg.mode,
+        cfg.scenario is not None))
 
 
 def run_sweep_program(program, init_params: Params,

@@ -40,8 +40,13 @@ from repro.config import OL4ELConfig
 #: Sweep-axis order; the flattened cell index is row-major over these,
 #: so ``seed`` varies fastest and ``async_batch_k`` slowest (each K is
 #: its own compiled sub-sweep; first place keeps its cells contiguous).
-AXIS_ORDER = ("async_batch_k", "ucb_c", "budget", "heterogeneity",
-              "cost_noise", "async_alpha", "seed")
+#: ``policy`` and ``churn_rate`` are scenario-engine axes: the policy
+#: competes through the traced ``policy_id`` switch and the churn rate
+#: only re-draws the replayed ``scn_active`` schedule, so BOTH are
+#: plain knob-value axes — every cell still shares one program.
+AXIS_ORDER = ("async_batch_k", "policy", "ucb_c", "budget",
+              "heterogeneity", "cost_noise", "async_alpha",
+              "churn_rate", "seed")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,12 +72,20 @@ class SweepSpec:
     cost_noise: Tuple[float, ...] = ()
     async_alpha: Tuple[float, ...] = ()
     async_batch_k: Tuple[int, ...] = ()
+    #: competitor-policy axis (``repro.el.scenarios.INGRAPH_POLICY_ORDER``
+    #: names) — traced through the ``policy_id`` switch, so a multi-policy
+    #: grid is still ONE program; needs ``cfg.scenario`` set (sync mode)
+    policy: Tuple[str, ...] = ()
+    #: churn-rate axis — re-draws each cell's replayed ``scn_active``
+    #: schedule; needs a churn-bearing ``cfg.scenario``
+    churn_rate: Tuple[float, ...] = ()
     seeds: Tuple[int, ...] = (0,)
     max_rounds: int = 256
 
     def __post_init__(self):
         for name in ("ucb_c", "budget", "heterogeneity", "cost_noise",
-                     "async_alpha", "async_batch_k", "seeds"):
+                     "async_alpha", "async_batch_k", "policy",
+                     "churn_rate", "seeds"):
             vals = getattr(self, name)
             if not isinstance(vals, tuple):
                 object.__setattr__(self, name, tuple(vals))
@@ -101,18 +114,36 @@ class SweepSpec:
             raise ValueError("SweepSpec.async_batch_k values are wave "
                              "widths and must be >= 0 (0 = auto), got "
                              f"{self.async_batch_k}")
+        if self.policy:
+            from repro.el.scenarios.baselines import INGRAPH_POLICY_ORDER
+            bad = tuple(p for p in self.policy
+                        if p not in INGRAPH_POLICY_ORDER)
+            if bad:
+                raise ValueError(
+                    f"SweepSpec.policy values must be in-graph switch "
+                    f"policies {INGRAPH_POLICY_ORDER}, got {bad}")
+        if any(not 0.0 <= r < 1.0 for r in self.churn_rate):
+            raise ValueError("SweepSpec.churn_rate values are dropout "
+                             "probabilities and must be in [0, 1), got "
+                             f"{self.churn_rate}")
 
     # -- flattening ----------------------------------------------------------
 
     def axes(self, cfg: OL4ELConfig) -> Dict[str, Tuple]:
         """Axis name -> values, empty axes defaulted from ``cfg``."""
+        scn = cfg.scenario
+        base_rate = (scn.churn.rate
+                     if scn is not None and scn.churn is not None
+                     else 0.0)
         return {
             "async_batch_k": self.async_batch_k or (cfg.async_batch_k,),
+            "policy": self.policy or (cfg.policy,),
             "ucb_c": self.ucb_c or (cfg.ucb_c,),
             "budget": self.budget or (cfg.budget,),
             "heterogeneity": self.heterogeneity or (cfg.heterogeneity,),
             "cost_noise": self.cost_noise or (cfg.cost_noise,),
             "async_alpha": self.async_alpha or (cfg.async_alpha,),
+            "churn_rate": self.churn_rate or (base_rate,),
             "seed": self.seeds,
         }
 
@@ -120,10 +151,12 @@ class SweepSpec:
     def n_cells(self) -> int:
         n = 1
         for vals in (self.async_batch_k or (None,),
+                     self.policy or (None,),
                      self.ucb_c or (None,), self.budget or (None,),
                      self.heterogeneity or (None,),
                      self.cost_noise or (None,),
-                     self.async_alpha or (None,), self.seeds):
+                     self.async_alpha or (None,),
+                     self.churn_rate or (None,), self.seeds):
             n *= len(vals)
         return n
 
@@ -143,8 +176,33 @@ class SweepSpec:
         cells to ``cost_model="variable"`` (the knob derivations gate
         noise on it); an inherited one-point axis keeps the session's
         cost model, so a fixed-cost session with a dormant
-        ``cfg.cost_noise`` sweeps exactly like its single runs."""
+        ``cfg.cost_noise`` sweeps exactly like its single runs.
+
+        The scenario axes are likewise value-only: an explicit
+        ``policy`` axis swaps each cell's ``cfg.policy`` (entering the
+        program as the traced ``policy_id``), and an explicit
+        ``churn_rate`` axis rewrites ``cfg.scenario.churn.rate`` — the
+        scenario's PERIOD (the only structural residue) is untouched, so
+        every cell still shares one compiled program.  Both explicit
+        axes require a ``cfg.scenario``."""
         explicit_noise = bool(self.cost_noise)
+        if (self.policy or self.churn_rate) and cfg.scenario is None:
+            raise ValueError(
+                "SweepSpec policy/churn_rate axes sweep the scenario "
+                "engine's traced knobs and need cfg.scenario set (an "
+                "identity ScenarioSpec() is enough for the policy axis)")
+        if self.churn_rate and cfg.scenario.churn is None:
+            raise ValueError(
+                "SweepSpec.churn_rate re-draws the dropout schedule and "
+                "needs cfg.scenario.churn set (e.g. ChurnSpec())")
+
+        def _cell_scenario(c):
+            if not self.churn_rate:
+                return cfg.scenario
+            return dataclasses.replace(
+                cfg.scenario, churn=dataclasses.replace(
+                    cfg.scenario.churn, rate=float(c["churn_rate"])))
+
         return [dataclasses.replace(
             cfg, ucb_c=float(c["ucb_c"]),
             budget=float(c["budget"]),
@@ -154,6 +212,8 @@ class SweepSpec:
                         if explicit_noise and c["cost_noise"] > 0
                         else cfg.cost_model),
             async_alpha=float(c["async_alpha"]),
+            policy=str(c["policy"]),
+            scenario=_cell_scenario(c),
             async_batch_k=int(c["async_batch_k"]), seed=int(c["seed"]))
             for c in self.cells(cfg)]
 
@@ -181,6 +241,8 @@ def spec_from_sequences(ucb_c: Sequence[float] = (),
                         cost_noise: Sequence[float] = (),
                         async_alpha: Sequence[float] = (),
                         async_batch_k: Sequence[int] = (),
+                        policy: Sequence[str] = (),
+                        churn_rate: Sequence[float] = (),
                         seeds: Sequence[int] = (0,),
                         max_rounds: int = 256) -> SweepSpec:
     """CLI-friendly constructor (lists in, validated tuples out)."""
@@ -190,5 +252,7 @@ def spec_from_sequences(ucb_c: Sequence[float] = (),
                      cost_noise=tuple(float(x) for x in cost_noise),
                      async_alpha=tuple(float(x) for x in async_alpha),
                      async_batch_k=tuple(int(k) for k in async_batch_k),
+                     policy=tuple(str(p) for p in policy),
+                     churn_rate=tuple(float(r) for r in churn_rate),
                      seeds=tuple(int(s) for s in seeds),
                      max_rounds=int(max_rounds))

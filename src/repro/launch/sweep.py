@@ -38,7 +38,8 @@ from repro.obs.cli import (add_metrics_args, begin_observability,
                            finish_observability, telemetry_arg)
 
 
-def build_session(args) -> ELSession:
+def build_session(args, scenario=None,
+                  base_cost_model=None) -> ELSession:
     fx = classic_fixture(args.arch, samples=args.samples,
                          n_edges=args.edges, alpha=args.alpha,
                          data_seed=args.data_seed,
@@ -46,7 +47,9 @@ def build_session(args) -> ELSession:
     ol = dataclasses.replace(
         fx["exp"].ol4el, mode=args.el_mode, policy="ol4el",
         n_edges=args.edges, utility=fx["utility"],
-        cost_model=args.cost_model, max_interval=args.max_interval)
+        cost_model=(base_cost_model if base_cost_model is not None
+                    else args.cost_model),
+        scenario=scenario, max_interval=args.max_interval)
     return (ELSession(ol, metric_name=fx["metric"], lr=fx["lr"])
             .with_executor(fx["executor"],
                            init_params=fx["init_params"],
@@ -73,6 +76,14 @@ def main() -> None:
                     help="async K-event wave-width grid (one compiled "
                          "sub-sweep per K; 0 = auto — throughput axis, "
                          "every K computes identical results)")
+    ap.add_argument("--policy", nargs="*", default=[],
+                    help="competitor-policy grid (ol4el task_alloc "
+                         "delay_energy) — traced through the scenario "
+                         "engine's policy switch, one program for all "
+                         "(sync; implies an identity scenario)")
+    ap.add_argument("--churn-rate", type=float, nargs="*", default=[],
+                    help="churn-rate grid: re-draws each cell's dropout "
+                         "schedule (needs a base --churn RATE)")
     ap.add_argument("--seeds", type=int, nargs="*", default=[0, 1])
     ap.add_argument("--el-mode", default="sync", choices=["sync", "async"],
                     help="'async': every cell runs the compiled "
@@ -83,8 +94,6 @@ def main() -> None:
     ap.add_argument("--samples", type=int, default=4000)
     ap.add_argument("--alpha", type=float, default=100.0,
                     help="Dirichlet concentration of the edge data split")
-    ap.add_argument("--cost-model", default="fixed",
-                    choices=["fixed", "variable"])
     ap.add_argument("--max-interval", type=int, default=10)
     ap.add_argument("--kmeans-impl", default="jnp",
                     choices=["jnp", "pallas"],
@@ -96,36 +105,54 @@ def main() -> None:
     ap.add_argument("--mesh", default="none", choices=["none", "debug"],
                     help="'debug': shard the sweep over a 2x2 host-device "
                          "mesh (the production placement, CPU-emulated)")
+    from repro.el.scenarios.cli import add_scenario_args
+    add_scenario_args(ap)
     add_metrics_args(ap)
     telemetry_arg(ap)
     args = ap.parse_args()
+
+    from repro.el.scenarios.cli import scenario_from_args
+    scenario, base_cost_model = scenario_from_args(args)
+    if args.policy and scenario is None:
+        # the policy switch lives on the scenario program path; an
+        # identity scenario (all edges up, multipliers 1) is enough
+        from repro.el.scenarios import ScenarioSpec
+        scenario = ScenarioSpec()
+    if args.churn_rate and (scenario is None or scenario.churn is None):
+        ap.error("--churn-rate re-draws the dropout schedule per cell "
+                 "and needs a base --churn RATE")
     begin_observability(args)
 
     spec = spec_from_sequences(
         ucb_c=args.ucb_c, budget=args.budget,
         heterogeneity=args.heterogeneity, cost_noise=args.cost_noise,
         async_alpha=args.async_alpha, async_batch_k=args.async_batch_k,
+        policy=args.policy, churn_rate=args.churn_rate,
         seeds=args.seeds, max_rounds=args.max_rounds)
     mesh = None
     if args.mesh == "debug":
         # mesh shape follows the forced device count: (count//2, 2) —
         # REPRO_SWEEP_DEVICES=8 gives a (4, 2) mesh, 4 (default) a (2, 2)
         mesh = make_debug_mesh_for(jax.device_count())
-    session = build_session(args)
+    session = build_session(args, scenario, base_cost_model)
     print(f"sweep {args.arch}: {spec.describe(session.cfg)}"
           + (f" on mesh {tuple(mesh.shape.items())}" if mesh else ""),
           flush=True)
 
     report = session.sweep(spec, mesh=mesh, telemetry=args.telemetry)
 
+    scn_cols = bool(args.policy or args.churn_rate)
     print(f"\n{'ucb_c':>6s} {'budget':>8s} {'H':>5s} {'noise':>6s} "
           f"{'alpha':>6s} {'seed':>5s} "
-          f"{'rounds':>6s} {'metric':>8s} {'consumed':>9s}")
+          + (f"{'policy':>12s} {'churn':>6s} " if scn_cols else "")
+          + f"{'rounds':>6s} {'metric':>8s} {'consumed':>9s}")
     for row in report.to_rows():
         print(f"{row['ucb_c']:6.2f} {row['budget']:8.0f} "
               f"{row['heterogeneity']:5.1f} {row['cost_noise']:6.2f} "
               f"{row['async_alpha']:6.2f} {row['seed']:5.0f} "
-              f"{row['n_rounds']:6d} {row['final_metric']:8.4f} "
+              + (f"{row['policy']:>12s} {row['churn_rate']:6.2f} "
+                 if scn_cols else "")
+              + f"{row['n_rounds']:6d} {row['final_metric']:8.4f} "
               f"{row['total_consumed']:9.0f}")
 
     trunc = report.truncated()

@@ -92,20 +92,25 @@ def _build_mesh(args):
 
 def train_classic_ol4el(exp, args) -> None:
     """Classic archs through the compiled single-run EL programs —
-    optionally mesh-sharded (``--mesh``) and buffer-donating
-    (``--donate``)."""
+    optionally mesh-sharded (``--mesh``), buffer-donating
+    (``--donate``) and scenario-injected (``--churn``/``--cost-model``/
+    ``--drift``, see ``repro.el.scenarios``)."""
+    from repro.el.scenarios.cli import scenario_from_args
     from repro.launch.classic import classic_fixture
 
     fx = classic_fixture(args.arch, samples=args.samples,
                          n_edges=args.edges, alpha=args.alpha,
                          kmeans_impl=args.kmeans_impl)
     metric = fx["metric"]
+    scenario, base_cost_model = scenario_from_args(args)
     ol = dataclasses.replace(fx["exp"].ol4el, n_edges=args.edges,
                              heterogeneity=args.heterogeneity,
                              budget=args.budget, mode=args.el_mode,
                              async_alpha=args.async_alpha,
                              async_batch_k=args.async_batch_k,
-                             policy="ol4el", utility=fx["utility"])
+                             policy="ol4el", utility=fx["utility"],
+                             cost_model=base_cost_model,
+                             scenario=scenario)
     mesh = _build_mesh(args)
     session = (ELSession(ol, metric_name=metric, lr=fx["lr"])
                .with_executor(fx["executor"],
@@ -238,15 +243,20 @@ def main(argv=None) -> None:
                     help="K-means E-step engine for the local blocks "
                          "(pallas: the repro.kernels.kmeans_assign "
                          "kernel; interpret mode off-TPU)")
+    from repro.el.scenarios.cli import add_scenario_args
+    add_scenario_args(ap)
     add_metrics_args(ap, trace_dir=True)
     telemetry_arg(ap)
     args = ap.parse_args(argv)
 
     exp = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     classic_el = args.mode == "ol4el" and exp.model.family == "classic"
+    scenario_flags = (args.churn is not None or args.drift is not None
+                      or args.cost_model not in ("fixed", "variable"))
     if not classic_el and (args.mesh != "none" or args.donate
-                          or args.telemetry is not None):
-        ap.error("--mesh/--donate/--telemetry drive the compiled "
+                          or args.telemetry is not None or scenario_flags):
+        ap.error("--mesh/--donate/--telemetry/--churn/--drift and the "
+                 "scenario --cost-model kinds drive the compiled "
                  "single-run programs, which need a classic arch under "
                  "--mode ol4el (LM archs and --mode standard run the "
                  "host loops)")

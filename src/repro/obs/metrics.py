@@ -380,6 +380,24 @@ def registry_from_report(report, *, registry: Optional[MetricsRegistry]
                 "el_event_interarrival",
                 "simulated time between async merge events",
                 buckets=_cost_buckets(inter)).observe_many(inter, base)
+        if "active_edges" in rings:
+            # scenario-engine columns (repro.el.scenarios): fleet-churn
+            # census per recorded round/event
+            act = np.asarray(rings["active_edges"], np.float64)
+            if act.size:
+                reg.gauge("el_scenario_active_edges",
+                          "active edges in the last recorded "
+                          "round/event").set(float(act[-1]), base)
+            reg.counter("el_scenario_dropouts_total",
+                        "edge dropout transitions over the recorded "
+                        "window").inc(
+                int(np.sum(np.asarray(rings["dropouts"], np.int64))),
+                base)
+            reg.counter("el_scenario_rejoins_total",
+                        "edge rejoin transitions over the recorded "
+                        "window").inc(
+                int(np.sum(np.asarray(rings["rejoins"], np.int64))),
+                base)
     return reg
 
 

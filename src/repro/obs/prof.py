@@ -352,9 +352,19 @@ def param_tree_bytes(tree: Any) -> int:
 DEFAULT_GATHER_RANGE: Tuple[int, int] = (1, 16)
 
 
+#: all-reduce allowance for sharded SCENARIO programs: the churn mask
+#: arithmetic (active-edge counts, mask-renormalized weight sums,
+#: slowest-ACTIVE-edge slot) reduces over the sharded edge axis, which
+#: GSPMD lowers as partial-sum all-reduces.  These are scalar
+#: control-plane reductions, not data-plane partial sums — the
+#: gather-before-reduce discipline still governs the parameter path.
+SCENARIO_REDUCE_RANGE: Tuple[int, int] = (0, 32)
+
+
 def default_contract(*, mesh=None, donated: bool = False,
                      param_bytes: Optional[int] = None,
-                     mode: str = "sync") -> CollectiveContract:
+                     mode: str = "sync",
+                     scenario: bool = False) -> CollectiveContract:
     """The contract every compiled EL program is expected to satisfy.
 
     * no mesh (or a 1-device mesh): NO collectives of any kind;
@@ -362,6 +372,9 @@ def default_contract(*, mesh=None, donated: bool = False,
       least one all-gather, zero all-reduce / reduce-scatter /
       all-to-all (bit-identity with the unsharded program forbids
       partial-sum reordering);
+    * ``scenario`` (a ``ScenarioSpec``-path program) on a multi-device
+      mesh: additionally up to ``SCENARIO_REDUCE_RANGE[1]`` all-reduces
+      — the scalar churn-mask reductions over the sharded edge axis;
     * ``donated`` with ``param_bytes``: the whole param tree aliased
       (``alias_bytes == param_bytes``); non-donated: ``== 0``.
     """
@@ -371,7 +384,8 @@ def default_contract(*, mesh=None, donated: bool = False,
         n_dev = int(np.asarray(mesh.devices).size)
     if n_dev > 1:
         counts: Dict[str, CountConstraint] = {
-            "all-gather": DEFAULT_GATHER_RANGE, "all-reduce": 0,
+            "all-gather": DEFAULT_GATHER_RANGE,
+            "all-reduce": (SCENARIO_REDUCE_RANGE if scenario else 0),
             "reduce-scatter": 0, "all-to-all": 0}
     else:
         counts = {op: 0 for op in COLLECTIVES}
@@ -381,6 +395,8 @@ def default_contract(*, mesh=None, donated: bool = False,
     elif not donated:
         alias = 0
     tag = "sharded" if n_dev > 1 else "replicated"
+    if scenario:
+        tag += "-scenario"
     return CollectiveContract(
         name=f"{mode}-{tag}" + ("-donated" if donated else ""),
         counts=counts, alias_bytes=alias)

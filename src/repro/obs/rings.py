@@ -66,6 +66,10 @@ _SYNC_FLOATS = ("round_cost", "budget_resid")
 _ASYNC_INTS = ("edge", "arm")
 _ASYNC_FLOATS = ("cost", "budget_resid", "alpha", "staleness",
                  "interarrival")
+#: scenario-path extras (both modes): fleet activity per round/event —
+#: present only when the cell was built with BOTH a telemetry spec and a
+#: ScenarioSpec (``sync_ring_init(..., scenario=True)``)
+_SCN_INTS = ("active_edges", "dropouts", "rejoins")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -112,29 +116,37 @@ def as_spec(telemetry: Union[None, bool, int, TelemetrySpec]
 # ---------------------------------------------------------------------------
 
 
-def sync_ring_init(spec: TelemetrySpec, n_arms: int) -> Dict[str, Any]:
+def sync_ring_init(spec: TelemetrySpec, n_arms: int, *,
+                   scenario: bool = False) -> Dict[str, Any]:
     """The sync carry's ``"telem"`` subtree: empty ``[ring]`` /
     ``[ring, n_floats]`` / ``[ring, K]`` buffers (``arm`` is -1 where
-    nothing was recorded; float columns in ``_SYNC_FLOATS`` order)."""
+    nothing was recorded; float columns in ``_SYNC_FLOATS`` order).
+    ``scenario=True`` (the scenario-path cells) adds a packed
+    ``[ring, 3]`` int group in ``_SCN_INTS`` column order; ``False``
+    builds exactly the classic subtree."""
     import jax.numpy as jnp
     r = spec.ring_size
-    return {
+    ring = {
         "arm": jnp.full((r,), -1, jnp.int32),
         "floats": jnp.zeros((r, len(_SYNC_FLOATS)), jnp.float32),
         "arm_counts": jnp.zeros((r, n_arms), jnp.int32),
         "arm_utility": jnp.zeros((r, n_arms), jnp.float32),
     }
+    if scenario:
+        ring["scn"] = jnp.zeros((r, len(_SCN_INTS)), jnp.int32)
+    return ring
 
 
 def sync_ring_record(ring: Dict[str, Any], spec: TelemetrySpec, *,
                      t, arm, round_cost, budget_resid,
-                     bstate: Dict[str, Any]) -> Dict[str, Any]:
+                     bstate: Dict[str, Any], scn=None) -> Dict[str, Any]:
     """Write round ``t``'s signals at slot ``t % ring_size`` (values the
     body already computed — recording adds scatters, never math; the
-    float group lands as ONE row write)."""
+    float group lands as ONE row write).  ``scn=`` is the scenario
+    path's ``(active_edges, dropouts, rejoins)`` int triple."""
     import jax.numpy as jnp
     i = jnp.mod(t, spec.ring_size)
-    return {
+    out = {
         "arm": ring["arm"].at[i].set(arm.astype(jnp.int32)),
         "floats": ring["floats"].at[i].set(
             jnp.stack([round_cost, budget_resid])),
@@ -142,32 +154,43 @@ def sync_ring_record(ring: Dict[str, Any], spec: TelemetrySpec, *,
         "arm_utility": ring["arm_utility"].at[i].set(
             bstate["utility_sum"]),
     }
+    if scn is not None:
+        out["scn"] = ring["scn"].at[i].set(
+            jnp.stack([jnp.asarray(v).astype(jnp.int32) for v in scn]))
+    return out
 
 
-def async_ring_init(spec: TelemetrySpec, n_arms: int) -> Dict[str, Any]:
+def async_ring_init(spec: TelemetrySpec, n_arms: int, *,
+                    scenario: bool = False) -> Dict[str, Any]:
     """The async carry's ``"telem"`` subtree: the packed ``[ring, 2]``
     int group (``edge``/``arm``, -1 where nothing was recorded), the
     ``[ring, n_floats]`` float group (``_ASYNC_FLOATS`` column order)
-    and the ``[ring, K]`` bandit snapshots."""
+    and the ``[ring, K]`` bandit snapshots.  ``scenario=True`` adds the
+    ``[ring, 3]`` ``_SCN_INTS`` group (see :func:`sync_ring_init`)."""
     import jax.numpy as jnp
     r = spec.ring_size
-    return {
+    ring = {
         "ints": jnp.full((r, len(_ASYNC_INTS)), -1, jnp.int32),
         "floats": jnp.zeros((r, len(_ASYNC_FLOATS)), jnp.float32),
         "arm_counts": jnp.zeros((r, n_arms), jnp.int32),
         "arm_utility": jnp.zeros((r, n_arms), jnp.float32),
     }
+    if scenario:
+        ring["scn"] = jnp.zeros((r, len(_SCN_INTS)), jnp.int32)
+    return ring
 
 
 def async_ring_record(ring: Dict[str, Any], spec: TelemetrySpec, *,
                       t, edge, arm, cost, budget_resid, alpha, staleness,
-                      interarrival, bstate_e: Dict[str, Any]
+                      interarrival, bstate_e: Dict[str, Any], scn=None
                       ) -> Dict[str, Any]:
     """Write event ``t``'s signals at slot ``t % ring_size`` — four
-    scatters total (one per storage group), not one per scalar."""
+    scatters total (one per storage group), not one per scalar.
+    ``scn=`` is the scenario path's ``(active_edges, dropouts,
+    rejoins)`` int triple."""
     import jax.numpy as jnp
     i = jnp.mod(t, spec.ring_size)
-    return {
+    out = {
         "ints": ring["ints"].at[i].set(jnp.stack(
             [edge.astype(jnp.int32), arm.astype(jnp.int32)])),
         "floats": ring["floats"].at[i].set(jnp.stack(
@@ -176,6 +199,10 @@ def async_ring_record(ring: Dict[str, Any], spec: TelemetrySpec, *,
         "arm_utility": ring["arm_utility"].at[i].set(
             bstate_e["utility_sum"]),
     }
+    if scn is not None:
+        out["scn"] = ring["scn"].at[i].set(
+            jnp.stack([jnp.asarray(v).astype(jnp.int32) for v in scn]))
+    return out
 
 
 def async_ring_record_wave(ring: Dict[str, Any], spec: TelemetrySpec, *,
@@ -231,6 +258,9 @@ def finalize_telemetry(telem: Dict[str, Any], t,
         out[name] = telem["floats"][:, j]
     out["arm_counts"] = telem["arm_counts"]
     out["arm_utility"] = telem["arm_utility"]
+    if "scn" in telem:                       # scenario-path extras
+        for j, name in enumerate(_SCN_INTS):
+            out[name] = telem["scn"][:, j]
     return {**out, "head": t, "ring_size": jnp.int32(spec.ring_size)}
 
 

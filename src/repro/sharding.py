@@ -237,9 +237,15 @@ def to_shardings(mesh: Mesh, specs: Any) -> Any:
 #: control plane — bandit stats, budgets, finish times — replicates).
 EL_EDGE_KNOBS = ("comp", "comm", "min_edge_cost")
 #: Scalar control-plane knobs (``[n_cells]`` in a sweep, 0-d in a run).
-#: ``event_cap`` is the async engine's traced int32 event budget.
+#: ``event_cap`` is the async engine's traced int32 event budget;
+#: ``scn_drift`` / ``policy_id`` are the scenario engine's drift rate
+#: and policy-switch selector (``repro.el.scenarios``).
 EL_SCALAR_KNOBS = ("ucb_c", "budget", "cost_noise", "async_alpha",
-                   "event_cap")
+                   "event_cap", "scn_drift", "policy_id")
+#: Scenario schedule knobs ``[period, E]`` (``[n_cells, period, E]`` in
+#: a sweep) — control plane like every other knob: replicated in a
+#: single run, cell-sharded only along the sweep axis.
+EL_SCHEDULE_KNOBS = ("scn_active", "scn_mult")
 
 
 def el_edge_dim_axes(axis_names: Sequence[str],
